@@ -1,0 +1,89 @@
+"""Shared benchmark harness: datasets, method registry, timing, CSV output."""
+from __future__ import annotations
+
+import csv
+import os
+import time
+from pathlib import Path
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.rfann import RNSGIndex
+from repro.data.ann import (ground_truth, make_attrs, make_vectors,
+                            mixed_workload, recall_at_k, selectivity_ranges)
+from repro.index.baselines import (BruteForceIndex, MRNGIndex,
+                                   SegmentTreeIndex)
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "bench"
+
+
+def dataset(n: int, d: int, seed: int = 0):
+    vecs = make_vectors(n, d, seed=seed)
+    attrs = make_attrs(n, seed=seed)
+    return vecs, attrs
+
+
+def gt_for(vecs, attrs, queries, ranges, k):
+    order = np.argsort(attrs, kind="stable")
+    gt_r, _ = ground_truth(vecs[order], attrs[order], queries, ranges, k)
+    return np.where(gt_r >= 0, order[np.maximum(gt_r, 0)], -1)
+
+
+def workloads(attrs, nq: int, seed: int = 1) -> Dict[str, np.ndarray]:
+    """The paper's protocol: mixed 2^0..2^-9 plus fixed 1% / 10% / 25%."""
+    mixed, _ = mixed_workload(attrs, nq, seed=seed)
+    return {
+        "mixed": mixed,
+        "sel_1pct": selectivity_ranges(attrs, nq, 0.01, seed=seed + 1),
+        "sel_10pct": selectivity_ranges(attrs, nq, 0.10, seed=seed + 2),
+        "sel_25pct": selectivity_ranges(attrs, nq, 0.25, seed=seed + 3),
+    }
+
+
+def build_methods(vecs, attrs, quick: bool = True) -> Dict[str, object]:
+    # paper-proportionate parameters (the paper uses m=150..300,
+    # ef_attribute ≈ 5..30× m at n=1M; scaled to CPU-sized n)
+    m = 24 if quick else 48
+    out = {}
+    t0 = time.perf_counter()
+    out["rnsg"] = RNSGIndex.build(vecs, attrs, m=m, ef_spatial=m,
+                                  ef_attribute=2 * m)
+    out["mrng-infilter"] = MRNGIndex(vecs, attrs, m=m, ef_spatial=2 * m,
+                                     mode="infilter")
+    out["mrng-postfilter"] = MRNGIndex(vecs, attrs, m=m, ef_spatial=2 * m,
+                                       mode="postfilter")
+    out["segtree"] = SegmentTreeIndex(vecs, attrs, m=m, ef_spatial=2 * m)
+    out["brute"] = BruteForceIndex(vecs, attrs)
+    return out
+
+
+def build_seconds(ix) -> float:
+    if hasattr(ix, "g"):
+        return ix.g.build_seconds
+    return getattr(ix, "build_seconds", 0.0)
+
+
+def timed_search(ix, qv, ranges, k, ef, repeats: int = 2):
+    ix.search(qv, ranges, k=k, ef=ef)            # warm the jit
+    best = np.inf
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = ix.search(qv, ranges, k=k, ef=ef)
+        best = min(best, time.perf_counter() - t0)
+    return out, len(qv) / best
+
+
+def emit(name: str, rows: List[Dict], quiet: bool = False):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    path = RESULTS / f"{name}.csv"
+    if rows:
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+            w.writeheader()
+            w.writerows(rows)
+    if not quiet:
+        for r in rows:
+            print(",".join(str(v) for v in r.values()))
+    return path

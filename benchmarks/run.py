@@ -1,0 +1,220 @@
+"""Benchmark driver — one function per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only qps_recall,...]
+
+Prints ``name,us_per_call,derived`` CSV summary lines (full per-point tables
+land in results/bench/*.csv).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import (build_methods, build_seconds, dataset, emit,
+                               gt_for, timed_search, workloads)
+from repro.core.rfann import RNSGIndex
+from repro.data.ann import recall_at_k
+
+
+def bench_qps_recall(n, d, nq, quick):
+    """Paper Fig. 6: QPS vs recall per method × workload (ef sweep)."""
+    vecs, attrs = dataset(n, d)
+    methods = build_methods(vecs, attrs, quick)
+    wls = workloads(attrs, nq)
+    k = 10
+    rows = []
+    for wname, ranges in wls.items():
+        qv = dataset(nq, d, seed=91)[0]
+        gt = gt_for(vecs, attrs, qv, ranges, k)
+        for mname, ix in methods.items():
+            for ef in ((16, 32, 64, 128) if mname != "brute" else (0,)):
+                (ids, _, *_), qps = timed_search(ix, qv, ranges, k, max(ef, k))
+                rows.append(dict(method=mname, workload=wname, ef=ef,
+                                 recall=round(recall_at_k(ids, gt), 4),
+                                 qps=round(qps, 1)))
+    emit("qps_recall", rows, quiet=True)
+    return rows
+
+
+def bench_construction_time(n, d, quick):
+    """Paper Fig. 7: index construction time."""
+    vecs, attrs = dataset(n, d)
+    methods = build_methods(vecs, attrs, quick)
+    rows = [dict(method=m, build_seconds=round(build_seconds(ix), 2))
+            for m, ix in methods.items()]
+    emit("construction_time", rows, quiet=True)
+    return rows
+
+
+def bench_index_size(n, d, quick):
+    """Paper Fig. 8: index memory (graph structure bytes; vectors excluded
+    uniformly — every method stores the same payload)."""
+    vecs, attrs = dataset(n, d)
+    methods = build_methods(vecs, attrs, quick)
+    rows = [dict(method=m, index_mb=round(ix.index_bytes / 2**20, 3))
+            for m, ix in methods.items()]
+    emit("index_size", rows, quiet=True)
+    return rows
+
+
+def bench_param_sensitivity(n, d, nq, quick):
+    """Paper Fig. 9/10: RNSG sensitivity to ef_attribute / ef_spatial / m."""
+    vecs, attrs = dataset(n, d)
+    qv = dataset(nq, d, seed=91)[0]
+    from repro.data.ann import mixed_workload
+    ranges, _ = mixed_workload(attrs, nq, seed=1)
+    k = 10
+    gt = gt_for(vecs, attrs, qv, ranges, k)
+    base = dict(m=16, ef_spatial=16, ef_attribute=24)
+    sweeps = {"ef_attribute": (8, 24, 48), "ef_spatial": (8, 16, 32),
+              "m": (8, 16, 32)}
+    rows = []
+    for pname, vals in sweeps.items():
+        for v in vals:
+            kw = dict(base, **{pname: v})
+            ix = RNSGIndex.build(vecs, attrs, **kw)
+            (ids, _, st), qps = timed_search(ix, qv, ranges, k, 64)
+            rows.append(dict(param=pname, value=v,
+                             build_seconds=round(ix.g.build_seconds, 2),
+                             recall=round(recall_at_k(ids, gt), 4),
+                             qps=round(qps, 1),
+                             edges=ix.n_edges))
+    emit("param_sensitivity", rows, quiet=True)
+    return rows
+
+
+def bench_vary_k(n, d, nq, quick):
+    """Paper Fig. 11: recall/QPS across k."""
+    vecs, attrs = dataset(n, d)
+    ix = RNSGIndex.build(vecs, attrs, m=16, ef_spatial=16, ef_attribute=24)
+    qv = dataset(nq, d, seed=91)[0]
+    from repro.data.ann import mixed_workload
+    ranges, _ = mixed_workload(attrs, nq, seed=1)
+    rows = []
+    for k in (1, 10, 20, 50):
+        gt = gt_for(vecs, attrs, qv, ranges, k)
+        (ids, _, _), qps = timed_search(ix, qv, ranges, k, max(64, 2 * k))
+        rows.append(dict(k=k, recall=round(recall_at_k(ids, gt), 4),
+                         qps=round(qps, 1)))
+    emit("vary_k", rows, quiet=True)
+    return rows
+
+
+def bench_scalability(d, nq, quick):
+    """Paper Fig. 12: build time / size / QPS-at-recall vs dataset size."""
+    rows = []
+    sizes = (2048, 4096, 8192) if quick else (4096, 8192, 16384, 32768)
+    for n in sizes:
+        vecs, attrs = dataset(n, d)
+        ix = RNSGIndex.build(vecs, attrs, m=16, ef_spatial=16, ef_attribute=24)
+        qv = dataset(nq, d, seed=91)[0]
+        from repro.data.ann import mixed_workload
+        ranges, _ = mixed_workload(attrs, nq, seed=1)
+        gt = gt_for(vecs, attrs, qv, ranges, 10)
+        (ids, _, st), qps = timed_search(ix, qv, ranges, 10, 64)
+        rows.append(dict(n=n, build_seconds=round(ix.g.build_seconds, 2),
+                         index_mb=round(ix.index_bytes / 2**20, 3),
+                         recall=round(recall_at_k(ids, gt), 4),
+                         qps=round(qps, 1),
+                         mean_hops=round(float(st["hops"].mean()), 1)))
+    emit("scalability", rows, quiet=True)
+    return rows
+
+
+def bench_kernels(quick):
+    """Kernel microbench (interpret mode on CPU: correctness + derived
+    roofline terms; wall numbers are *not* TPU times)."""
+    import jax.numpy as jnp
+    from repro.kernels.ops import gather_dist, l2dist
+    from repro.kernels.ref import gather_dist_ref, l2dist_ref
+    rng = np.random.default_rng(0)
+    rows = []
+    for (q, nn, dd) in ((128, 1024, 128), (256, 4096, 128)):
+        a = jnp.asarray(rng.standard_normal((q, dd)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((nn, dd)), jnp.float32)
+        for name, fn in (("l2dist_pallas", l2dist), ("l2dist_ref", l2dist_ref)):
+            np.asarray(fn(a, b))
+            t0 = time.perf_counter()
+            np.asarray(fn(a, b))
+            dt = time.perf_counter() - t0
+            flops = 2 * q * nn * dd
+            rows.append(dict(kernel=name, shape=f"{q}x{nn}x{dd}",
+                             us_per_call=round(dt * 1e6, 1),
+                             gflops_at_wall=round(flops / dt / 1e9, 2),
+                             tpu_roofline_us=round(flops / 197e12 * 1e6, 2)))
+    x = jnp.asarray(rng.standard_normal((4096, 128)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, 4096, 64), jnp.int32)
+    qv = jnp.asarray(rng.standard_normal(128), jnp.float32)
+    for name, fn in (("gather_dist_pallas", gather_dist),
+                     ("gather_dist_ref", gather_dist_ref)):
+        np.asarray(fn(x, ids, qv))
+        t0 = time.perf_counter()
+        np.asarray(fn(x, ids, qv))
+        dt = time.perf_counter() - t0
+        byts = 64 * 128 * 4
+        rows.append(dict(kernel=name, shape="64of4096x128",
+                         us_per_call=round(dt * 1e6, 1),
+                         gflops_at_wall=round(64 * 3 * 128 / dt / 1e9, 3),
+                         tpu_roofline_us=round(byts / 819e9 * 1e6, 3)))
+    emit("kernels", rows, quiet=True)
+    return rows
+
+
+ALL = ["qps_recall", "construction_time", "index_size", "param_sensitivity",
+       "vary_k", "scalability", "kernels"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    ap.add_argument("--n", type=int, default=0)
+    args = ap.parse_args()
+    quick = not args.full
+    n = args.n or (4096 if quick else 16384)
+    d = 32 if quick else 64
+    nq = 200 if quick else 1000
+    only = set(args.only.split(",")) if args.only else set(ALL)
+
+    print("name,us_per_call,derived")
+    t_all = time.perf_counter()
+    if "qps_recall" in only:
+        rows = bench_qps_recall(n, d, nq, quick)
+        best = max((r for r in rows if r["method"] == "rnsg"
+                    and r["workload"] == "mixed"), key=lambda r: r["recall"])
+        print(f"qps_recall,{1e6/best['qps']:.1f},"
+              f"rnsg_mixed_recall={best['recall']}@qps={best['qps']}")
+    if "construction_time" in only:
+        rows = bench_construction_time(n, d, quick)
+        rn = next(r for r in rows if r["method"] == "rnsg")
+        sg = next(r for r in rows if r["method"] == "segtree")
+        print(f"construction_time,{rn['build_seconds']*1e6:.0f},"
+              f"rnsg={rn['build_seconds']}s_segtree={sg['build_seconds']}s")
+    if "index_size" in only:
+        rows = bench_index_size(n, d, quick)
+        rn = next(r for r in rows if r["method"] == "rnsg")
+        sg = next(r for r in rows if r["method"] == "segtree")
+        print(f"index_size,0,rnsg={rn['index_mb']}MB_segtree={sg['index_mb']}MB"
+              f"_ratio={sg['index_mb']/max(rn['index_mb'],1e-9):.1f}x")
+    if "param_sensitivity" in only:
+        rows = bench_param_sensitivity(n, d, nq, quick)
+        print(f"param_sensitivity,0,points={len(rows)}")
+    if "vary_k" in only:
+        rows = bench_vary_k(n, d, nq, quick)
+        print(f"vary_k,0,recall@50={rows[-1]['recall']}")
+    if "scalability" in only:
+        rows = bench_scalability(d, nq, quick)
+        print(f"scalability,0,qps_{rows[0]['n']}={rows[0]['qps']}"
+              f"_qps_{rows[-1]['n']}={rows[-1]['qps']}")
+    if "kernels" in only:
+        rows = bench_kernels(quick)
+        for r in rows:
+            print(f"kernel_{r['kernel']},{r['us_per_call']},"
+                  f"shape={r['shape']}_tpu_roofline_us={r['tpu_roofline_us']}")
+    print(f"# total benchmark wall: {time.perf_counter()-t_all:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""End-to-end training driver: ~20M-param llama-family model, a few hundred
+steps on the synthetic Markov stream, with checkpoint/restart and straggler
+monitoring.  (Use --preset 100m on a beefier host; this container has 1 core.)
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 300] [--preset 20m]
+"""
+import argparse
+import dataclasses
+import sys
+
+from repro.configs.registry import get_smoke_config
+import repro.launch.train as T
+
+PRESETS = {
+    "tiny": dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                 vocab_size=512),
+    "20m": dict(n_layers=6, d_model=384, n_heads=6, n_kv_heads=2, d_ff=1024,
+                vocab_size=4096),
+    "100m": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+                 d_ff=2048, vocab_size=8192),
+}
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--preset", default="tiny", choices=sorted(PRESETS))
+ap.add_argument("--batch", type=int, default=4)
+ap.add_argument("--seq", type=int, default=128)
+args = ap.parse_args()
+
+base = get_smoke_config("llama3-8b")
+cfg = dataclasses.replace(base, **PRESETS[args.preset], head_dim=0)
+
+# monkey-patch the trainer's config resolution with our preset
+orig = T.get_smoke_config
+T.get_smoke_config = lambda arch: cfg
+try:
+    T.main(["--arch", "llama3-8b", "--steps", str(args.steps),
+            "--batch", str(args.batch), "--seq", str(args.seq),
+            "--ckpt-dir", "/tmp/repro_train_lm", "--ckpt-every", "100",
+            "--log-every", "20"])
+finally:
+    T.get_smoke_config = orig

@@ -1,0 +1,92 @@
+"""Range-filtered beam search over the RNSG, in pure ``jax.lax`` control flow.
+
+The search never materializes the induced subgraph: the range filter is an
+id-interval mask applied to neighbor expansions (ids are attribute ranks), and
+Theorem 4.7 (heredity) guarantees this equals searching the induced RNSG.
+
+Fixed shapes throughout: candidate pool = sorted (ef,) arrays, visited set =
+(n,) bitmask, one `while_loop` per query, `vmap` over the query batch.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.inf
+
+
+@partial(jax.jit, static_argnames=("k", "ef", "max_steps", "use_kernel"))
+def beam_search_batch(vecs: jax.Array, nbrs: jax.Array, qv: jax.Array,
+                      lo: jax.Array, hi: jax.Array, entry: jax.Array,
+                      *, k: int = 10, ef: int = 64, max_steps: int = 0,
+                      use_kernel: bool = False):
+    """vecs:(n,d) f32; nbrs:(n,m) i32; qv:(Q,d); lo/hi/entry:(Q,) rank ids.
+    Returns (ids:(Q,k) i32 rank ids (-1 pad), dists:(Q,k), stats dict)."""
+    n, m = nbrs.shape
+    steps_cap = max_steps or 8 * ef + 64
+
+    if use_kernel:
+        from repro.kernels.ops import gather_dist as _gd
+    else:
+        _gd = None
+
+    def neighbor_dists(q, ids, valid):
+        if _gd is not None:
+            d = _gd(vecs, ids, q)
+        else:
+            nv = vecs[jnp.maximum(ids, 0)]
+            diff = nv - q[None, :]
+            d = jnp.sum(diff * diff, axis=-1)
+        return jnp.where(valid, d, INF)
+
+    def one_query(q, L, R, e0):
+        empty = L > R
+        e0 = jnp.atleast_1d(e0)[:ef]                          # (E,) multi-entry
+        ev = (e0 >= 0) & ~empty
+        e0c = jnp.clip(e0, 0, n - 1)
+        ne = e0.shape[0]
+        d0 = jnp.sum(jnp.square(vecs[e0c] - q[None, :]), axis=-1)
+        d0 = jnp.where(ev, d0, INF)
+        cand_ids = jnp.full((ef,), -1, jnp.int32).at[:ne].set(e0c.astype(jnp.int32))
+        cand_d = jnp.full((ef,), INF).at[:ne].set(d0)
+        expanded = jnp.zeros((ef,), bool).at[:ne].set(~ev)
+        visited = jnp.zeros((n + 1,), bool).at[jnp.where(ev, e0c, n)].set(True)
+
+        def cond(st):
+            cand_d, expanded, _, _, steps, _ = st
+            unexp = jnp.where(~expanded, cand_d, INF)
+            best = jnp.min(unexp)
+            worst = jnp.max(jnp.where(jnp.isfinite(cand_d), cand_d, -INF))
+            worst = jnp.where(jnp.any(~jnp.isfinite(cand_d)), INF, worst)
+            return (best <= worst) & (steps < steps_cap)
+
+        def body(st):
+            cand_d, expanded, cand_ids, visited, steps, ndist = st
+            unexp = jnp.where(~expanded, cand_d, INF)
+            bi = jnp.argmin(unexp)
+            expanded = expanded.at[bi].set(True)
+            node = jnp.maximum(cand_ids[bi], 0)
+            nb = nbrs[node]                                   # (m,)
+            valid = (nb >= 0) & (nb >= L) & (nb <= R)
+            valid = valid & ~visited[jnp.maximum(nb, 0)]
+            visited = visited.at[jnp.where(valid, nb, n)].set(True)
+            d_nb = neighbor_dists(q, nb, valid)
+            ids_all = jnp.concatenate([cand_ids, nb.astype(jnp.int32)])
+            d_all = jnp.concatenate([cand_d, d_nb])
+            exp_all = jnp.concatenate([expanded, ~valid])     # invalid: never expand
+            order = jnp.argsort(d_all)[:ef]
+            return (d_all[order], exp_all[order], ids_all[order], visited,
+                    steps + 1, ndist + jnp.sum(valid))
+
+        st = (cand_d, expanded, cand_ids, visited,
+              jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+        cand_d, _, cand_ids, _, steps, ndist = jax.lax.while_loop(cond, body, st)
+        out_ids = jnp.where(jnp.isfinite(cand_d[:k]), cand_ids[:k], -1)
+        out_d = cand_d[:k]
+        return out_ids, out_d, steps, ndist
+
+    ids, dists, steps, ndist = jax.vmap(one_query)(qv, lo, hi, entry)
+    return ids, dists, {"hops": steps, "ndist": ndist}

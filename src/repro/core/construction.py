@@ -1,0 +1,128 @@
+"""Algorithm 2 — RNSG construction.
+
+Pipeline: (1) approximate-or-exact KNN graph (spatial proximity); (2) ±ef_attribute
+rank window (attribute proximity, Alg. 2 line 7 — index-based on the
+attribute-sorted order); (3) per-side gap-sorted candidate arrays; (4) the
+vectorized Algorithm-1 pruning engine.  Ids are attribute ranks throughout.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.entry import build_rmq, centroid_dists
+from repro.core.pruning import prune_all_jax
+from repro.index.knn import exact_knn, nndescent
+
+
+@dataclass
+class RNSGGraph:
+    vecs: np.ndarray          # (n,d) f32, attribute-sorted
+    attrs: np.ndarray         # (n,)  f32, ascending
+    nbrs: np.ndarray          # (n,m) int32, -1 padded (attribute-rank ids)
+    order: np.ndarray         # (n,)  original ids of each rank
+    centroid: np.ndarray      # (d,)
+    dist_c: np.ndarray        # (n,)  δ(v, centroid) (entry structure)
+    rmq: np.ndarray           # (LOG,n) int32 range-argmin table
+    build_seconds: float = 0.0
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def n(self) -> int:
+        return self.vecs.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.nbrs.shape[1]
+
+    @property
+    def n_edges(self) -> int:
+        return int((self.nbrs >= 0).sum())
+
+    @property
+    def index_bytes(self) -> int:
+        """Graph-structure bytes (adjacency + entry structures), excluding the
+        raw vector payload which every method must store."""
+        return self.nbrs.nbytes + self.rmq.nbytes + self.dist_c.nbytes
+
+    def save(self, path: str) -> None:
+        np.savez_compressed(path, **{f.name: getattr(self, f.name)
+                                     for f in dataclasses.fields(self)
+                                     if f.name != "meta"})
+
+    @classmethod
+    def load(cls, path: str) -> "RNSGGraph":
+        z = np.load(path)
+        return cls(**{k: z[k] for k in z.files}, meta={})
+
+
+def _gap_sorted_side(n: int, knn_ids: np.ndarray, ef_attribute: int,
+                     side: str) -> np.ndarray:
+    """Per-node candidate ids of one side, ascending rank-gap, -1 padded.
+    Side candidates = attribute window ∪ same-side KNN neighbors."""
+    k = knn_ids.shape[1]
+    ch = ef_attribute + k
+    ids = np.arange(n)[:, None]
+    win_off = np.arange(1, ef_attribute + 1)[None, :]
+    win = ids - win_off if side == "l" else ids + win_off          # (n, ef)
+    win_ok = (win >= 0) & (win < n)
+    kn = knn_ids.copy()
+    kn_ok = (kn >= 0) & ((kn < ids) if side == "l" else (kn > ids))
+    cand = np.concatenate([np.where(win_ok, win, -1),
+                           np.where(kn_ok, kn, -1)], axis=1)        # (n, ch)
+    gap = np.where(cand >= 0, np.abs(cand - ids), np.iinfo(np.int64).max // 2)
+    order = np.argsort(gap, axis=1, kind="stable")
+    cand = np.take_along_axis(cand, order, axis=1)
+    gap = np.take_along_axis(gap, order, axis=1)
+    dup = np.zeros_like(cand, bool)
+    dup[:, 1:] = (cand[:, 1:] == cand[:, :-1]) & (cand[:, 1:] >= 0)
+    cand = np.where(dup, -1, cand)
+    gap = np.where(dup, np.iinfo(np.int64).max // 2, gap)
+    order = np.argsort(gap, axis=1, kind="stable")
+    return np.take_along_axis(cand, order, axis=1).astype(np.int32)
+
+
+def build_rnsg(vectors: np.ndarray, attrs: np.ndarray, *, m: int = 32,
+               ef_spatial: int = 32, ef_attribute: int = 48,
+               knn_method: str = "exact", knn_iters: int = 6,
+               seed: int = 0, knn_ids: Optional[np.ndarray] = None,
+               reverse_edges: bool = False,
+               reverse_cap: Optional[int] = None) -> RNSGGraph:
+    """Algorithm 2.  ``reverse_edges=True`` adds NSG-style reverse edges
+    (beyond-paper knob).  Heredity note: with an UNSATURATED cap the
+    augmentation commutes with range induction (a reverse edge's endpoints
+    share the original edge's range), so heredity is exact; once the degree
+    cap saturates, boundary slots may differ between a global and an induced
+    build — the default cap 1.25·m therefore makes heredity approximate
+    (tested both ways in tests/test_search.py)."""
+    t0 = time.perf_counter()
+    vectors = np.asarray(vectors, np.float32)
+    attrs = np.asarray(attrs, np.float32)
+    n = len(attrs)
+    order = np.argsort(attrs, kind="stable")
+    vs, as_ = vectors[order], attrs[order]
+
+    if knn_ids is None:
+        if knn_method == "exact":
+            _, knn_ids = exact_knn(vs, ef_spatial)
+        else:
+            _, knn_ids = nndescent(vs, ef_spatial, iters=knn_iters, seed=seed)
+    cand_l = _gap_sorted_side(n, knn_ids, ef_attribute, "l")
+    cand_r = _gap_sorted_side(n, knn_ids, ef_attribute, "r")
+    nbrs = prune_all_jax(vs, cand_l, cand_r, m)
+    if reverse_edges:
+        from repro.index.baselines import add_reverse_edges
+        nbrs = add_reverse_edges(nbrs, reverse_cap or int(m * 1.25))
+
+    c, dist_c = centroid_dists(vs)
+    rmq = build_rmq(dist_c)
+    dt = time.perf_counter() - t0
+    return RNSGGraph(vecs=vs, attrs=as_, nbrs=nbrs, order=order.astype(np.int32),
+                     centroid=c.astype(np.float32), dist_c=dist_c, rmq=rmq,
+                     build_seconds=dt,
+                     meta=dict(m=m, ef_spatial=ef_spatial,
+                               ef_attribute=ef_attribute, knn=knn_method))

@@ -1,0 +1,84 @@
+"""Algorithm 3 — entry-node generation.
+
+The faithful monotone-stack construction (``entry_stacks``) keeps, for every
+right endpoint r, the suffix-minima of δ(v, centroid) over ranks ≤ r — the
+paper proves the expected stack size is O(log n) (Lemma 4.8).
+
+Query-time equivalence: the entry for [L, R] is the stack element of q_R with
+the smallest attribute ≥ L, which *is* argmin_{id∈[L,R]} δ(v_id, c).  We
+therefore answer queries with an O(1) range-argmin sparse table over the same
+distance array; ``tests/test_entry.py`` property-checks stack-vs-RMQ equality.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def centroid_dists(vecs: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    c = vecs.mean(axis=0)
+    d = np.sum((vecs - c) ** 2, axis=1)
+    return c, d.astype(np.float32)
+
+
+def entry_stacks(dist_c: np.ndarray) -> List[List[int]]:
+    """Faithful Algorithm 3: returns the stack q after processing each v_i."""
+    stacks: List[List[int]] = []
+    q: List[int] = []
+    for i, d in enumerate(dist_c):
+        while q and dist_c[q[-1]] > d:
+            q.pop()
+        q.append(i)
+        stacks.append(list(q))
+    return stacks
+
+
+def entry_from_stack(stacks: List[List[int]], dist_c: np.ndarray,
+                     lo: int, hi: int) -> int:
+    """Paper query rule: take q at the in-range node with largest rank ≤ hi,
+    pick its element with the smallest attribute value ≥ lo."""
+    q = stacks[hi]
+    for node in q:                      # ascending attribute order
+        if node >= lo:
+            return node
+    raise ValueError("empty range")
+
+
+# ----------------------------------------------------------------------
+def build_rmq(dist_c: np.ndarray) -> np.ndarray:
+    """Sparse table of range-argmin ids: (LOG, n) int32."""
+    n = len(dist_c)
+    logn = max(1, int(np.floor(np.log2(max(n, 1)))) + 1)
+    table = np.zeros((logn, n), np.int32)
+    table[0] = np.arange(n)
+    j = 1
+    while (1 << j) <= n:
+        span = 1 << (j - 1)
+        a = table[j - 1, : n - 2 * span + 1]
+        b = table[j - 1, span: n - span + 1]
+        table[j, : n - 2 * span + 1] = np.where(dist_c[a] <= dist_c[b], a, b)
+        # tail: clamp to previous level
+        table[j, n - 2 * span + 1:] = table[j - 1, n - 2 * span + 1:]
+        j += 1
+    return table
+
+
+def rmq_query_np(table: np.ndarray, dist_c: np.ndarray, lo: int, hi: int) -> int:
+    ln = hi - lo + 1
+    j = int(np.floor(np.log2(ln)))
+    a = table[j, lo]
+    b = table[j, hi - (1 << j) + 1]
+    return int(a if dist_c[a] <= dist_c[b] else b)
+
+
+def rmq_query_jax(table: jax.Array, dist_c: jax.Array,
+                  lo: jax.Array, hi: jax.Array) -> jax.Array:
+    """Vectorizable O(1) range-argmin (entry node for [lo, hi])."""
+    ln = (hi - lo + 1).astype(jnp.float32)
+    j = jnp.floor(jnp.log2(jnp.maximum(ln, 1.0))).astype(jnp.int32)
+    a = table[j, lo]
+    b = table[j, hi - (1 << j) + 1]
+    return jnp.where(dist_c[a] <= dist_c[b], a, b)

@@ -1,0 +1,83 @@
+"""High-level RFANN API: build / save / load / batched search on one RNSG index."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.beam import beam_search_batch
+from repro.core.construction import RNSGGraph, build_rnsg
+from repro.core.entry import rmq_query_jax
+
+
+class RNSGIndex:
+    """The paper's system: one hereditary graph index answering every range."""
+
+    def __init__(self, graph: RNSGGraph):
+        self.g = graph
+        self._vecs = jnp.asarray(graph.vecs)
+        self._nbrs = jnp.asarray(graph.nbrs)
+        self._rmq = jnp.asarray(graph.rmq)
+        self._dist_c = jnp.asarray(graph.dist_c)
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def build(cls, vectors: np.ndarray, attrs: np.ndarray, **kw) -> "RNSGIndex":
+        return cls(build_rnsg(vectors, attrs, **kw))
+
+    def save(self, path: str) -> None:
+        self.g.save(path)
+
+    @classmethod
+    def load(cls, path: str) -> "RNSGIndex":
+        return cls(RNSGGraph.load(path))
+
+    # ------------------------------------------------------------------
+    def rank_range(self, attr_ranges: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """[a_l, a_r] (inclusive) -> rank interval [L, R] (inclusive)."""
+        lo = np.searchsorted(self.g.attrs, attr_ranges[:, 0], side="left")
+        hi = np.searchsorted(self.g.attrs, attr_ranges[:, 1], side="right") - 1
+        return lo.astype(np.int32), hi.astype(np.int32)
+
+    def search(self, queries: np.ndarray, attr_ranges: np.ndarray, *,
+               k: int = 10, ef: int = 64,
+               use_kernel: bool = False) -> Tuple[np.ndarray, np.ndarray, Dict]:
+        """queries:(Q,d); attr_ranges:(Q,2) attribute values (inclusive).
+        Returns (original ids (Q,k), sq dists, stats)."""
+        lo, hi = self.rank_range(np.asarray(attr_ranges, np.float32))
+        return self.search_ranks(queries, lo, hi, k=k, ef=ef,
+                                 use_kernel=use_kernel)
+
+    def search_ranks(self, queries, lo, hi, *, k=10, ef=64, use_kernel=False):
+        qv = jnp.asarray(queries, jnp.float32)
+        lo_j = jnp.asarray(lo)
+        hi_j = jnp.asarray(hi)
+        entry = rmq_query_jax(self._rmq, self._dist_c,
+                              jnp.minimum(lo_j, self.g.n - 1),
+                              jnp.clip(hi_j, 0, self.g.n - 1))
+        ids, dists, stats = beam_search_batch(
+            self._vecs, self._nbrs, qv, lo_j, hi_j, entry,
+            k=k, ef=max(ef, k), use_kernel=use_kernel)
+        ids = np.asarray(ids)
+        orig = np.where(ids >= 0, self.g.order[np.maximum(ids, 0)], -1)
+        return orig, np.asarray(dists), jax.tree.map(np.asarray, stats)
+
+    # ------------------------------------------------------------------
+    @property
+    def index_bytes(self) -> int:
+        return self.g.index_bytes
+
+    @property
+    def n_edges(self) -> int:
+        return self.g.n_edges
+
+    def stats(self) -> Dict:
+        deg = (self.g.nbrs >= 0).sum(1)
+        return dict(n=self.g.n, m=self.g.m, edges=self.g.n_edges,
+                    mean_degree=float(deg.mean()), max_degree=int(deg.max()),
+                    index_mb=self.index_bytes / 2**20,
+                    build_seconds=self.g.build_seconds)

@@ -1,0 +1,377 @@
+"""Baselines the paper compares against, reimplemented on the same substrate:
+
+* ``BruteForceIndex``   — pre-filtering (exact linear scan; also ground truth).
+* ``MRNGIndex``         — spatial-only approximate-MRNG graph with
+                          ``in-filter`` and ``post-filter`` query modes.
+* ``SegmentTreeIndex``  — iRangeGraph-like: one elemental (MRNG-pruned) graph
+                          per segment-tree node; queries decompose the rank
+                          interval into maximal aligned blocks and search the
+                          composed graph with one entry per canonical block.
+
+All share ids = attribute ranks and squared-L2 distances.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.beam import beam_search_batch
+from repro.core.entry import build_rmq, centroid_dists, rmq_query_jax
+from repro.core.pruning import _prune_side_batch
+from repro.data.ann import ground_truth
+from repro.index.knn import exact_knn, sq_dists
+
+
+def _sorted_by_dist(knn_ids: np.ndarray) -> np.ndarray:
+    return knn_ids  # exact_knn already returns ascending-distance order
+
+
+def mrng_prune_graph(vecs: np.ndarray, knn_ids: np.ndarray, m: int,
+                     block: int = 2048) -> np.ndarray:
+    """Plain MRNG/NSG pruning: scan candidates by ascending distance, keep v_i
+    iff no kept v_j with d(x,v_j) < d(x,v_i) and d(v_j,v_i) < d(x,v_i)."""
+    n = vecs.shape[0]
+    v = jnp.asarray(vecs, jnp.float32)
+    out = np.full((n, m), -1, np.int32)
+    cand = _sorted_by_dist(knn_ids).astype(np.int32)
+    for lo in range(0, n, block):
+        hi = min(lo + block, n)
+        ci = jnp.asarray(cand[lo:hi])
+        cv = v[jnp.maximum(ci, 0)]
+        kept = np.asarray(_prune_side_batch(v[lo:hi], ci, cv, m))
+        for b in range(hi - lo):
+            ids = cand[lo + b][kept[b]]
+            out[lo + b, :len(ids)] = ids[:m]
+    return out
+
+
+def add_reverse_edges(nbrs: np.ndarray, cap: int) -> np.ndarray:
+    """NSG-style reverse-edge augmentation, degree-capped."""
+    n, m = nbrs.shape
+    ext = np.full((n, cap), -1, np.int32)
+    ext[:, :m] = nbrs
+    fill = (nbrs >= 0).sum(1)
+    for u in range(n):
+        for v in nbrs[u]:
+            if v < 0:
+                break
+            if fill[v] < cap and u not in ext[v, :fill[v]]:
+                ext[v, fill[v]] = u
+                fill[v] += 1
+    return ext
+
+
+def connectivity_repair(nbrs: np.ndarray, vecs: np.ndarray, entry: int) -> np.ndarray:
+    """NSG-style tree growing: label undirected components once, then link
+    every stray component to the entry's component through its closest cross
+    pair (bidirectional; may evict the worst slot)."""
+    n, m = nbrs.shape
+    nbrs = nbrs.copy()
+    comp = np.full(n, -1, np.int64)
+    cid = 0
+    for src in range(n):
+        if comp[src] >= 0:
+            continue
+        comp[src] = cid
+        stack = [src]
+        while stack:
+            u = stack.pop()
+            for v in nbrs[u]:
+                if v >= 0 and comp[v] < 0:
+                    comp[v] = cid
+                    stack.append(int(v))
+        cid += 1
+    # undirected closure: merge labels across reverse edges (a few sweeps)
+    for _ in range(4):
+        changed = False
+        src = np.repeat(np.arange(n), m)
+        dst = nbrs.reshape(-1)
+        ok = dst >= 0
+        a, b = comp[src[ok]], comp[dst[ok]]
+        lo = np.minimum(a, b)
+        if np.any(a != lo):
+            remap = np.arange(cid)
+            np.minimum.at(remap, np.maximum(a, b), lo)
+            while np.any(remap[remap] != remap):
+                remap = remap[remap]
+            comp = remap[comp]
+            changed = True
+        if not changed:
+            break
+    main = comp[entry]
+    vmain = np.flatnonzero(comp == main)
+    for c in np.unique(comp):
+        if c == main:
+            continue
+        members = np.flatnonzero(comp == c)
+        d = np.asarray(sq_dists(jnp.asarray(vecs[members]),
+                                jnp.asarray(vecs[vmain])))
+        oi, ii = np.unravel_index(np.argmin(d), d.shape)
+        u, v = int(members[oi]), int(vmain[ii])
+        for a, b in ((u, v), (v, u)):
+            row = nbrs[a]
+            slot = int(np.argmax(row < 0)) if (row < 0).any() else m - 1
+            nbrs[a, slot] = b
+    return nbrs
+
+
+# ----------------------------------------------------------------------
+class BruteForceIndex:
+    """Pre-filtering: exact scan over the in-range subset."""
+
+    def __init__(self, vectors, attrs):
+        order = np.argsort(attrs, kind="stable")
+        self.vecs = np.asarray(vectors, np.float32)[order]
+        self.attrs = np.asarray(attrs, np.float32)[order]
+        self.order = order.astype(np.int32)
+        self.build_seconds = 0.0
+
+    def search(self, queries, attr_ranges, *, k=10, **_):
+        ids, d = ground_truth(self.vecs, self.attrs, queries, attr_ranges, k)
+        orig = np.where(ids >= 0, self.order[np.maximum(ids, 0)], -1)
+        return orig, d, {}
+
+    @property
+    def index_bytes(self):
+        return 0  # no graph structure
+
+
+# ----------------------------------------------------------------------
+class MRNGIndex:
+    """Spatial-only graph (the paper's Fig.1 failure case under ranges)."""
+
+    def __init__(self, vectors, attrs, *, m=32, ef_spatial=64,
+                 mode: str = "infilter", oversample: int = 4):
+        t0 = time.perf_counter()
+        order = np.argsort(attrs, kind="stable")
+        self.vecs = np.asarray(vectors, np.float32)[order]
+        self.attrs = np.asarray(attrs, np.float32)[order]
+        self.order = order.astype(np.int32)
+        _, knn_ids = exact_knn(self.vecs, ef_spatial)
+        self.nbrs = mrng_prune_graph(self.vecs, knn_ids, m)
+        self.nbrs = add_reverse_edges(self.nbrs, m)
+        self.centroid, self.dist_c = centroid_dists(self.vecs)
+        self.rmq = build_rmq(self.dist_c)
+        entry = int(np.argmin(self.dist_c))
+        self.nbrs = connectivity_repair(self.nbrs, self.vecs, entry)
+        self.mode = mode
+        self.oversample = oversample
+        self.build_seconds = time.perf_counter() - t0
+        self._v = jnp.asarray(self.vecs)
+        self._nb = jnp.asarray(self.nbrs)
+        self._rmq = jnp.asarray(self.rmq)
+        self._dc = jnp.asarray(self.dist_c)
+
+    @property
+    def index_bytes(self):
+        return self.nbrs.nbytes + self.rmq.nbytes + self.dist_c.nbytes
+
+    def search(self, queries, attr_ranges, *, k=10, ef=64, **_):
+        n = len(self.attrs)
+        lo = np.searchsorted(self.attrs, attr_ranges[:, 0], "left").astype(np.int32)
+        hi = (np.searchsorted(self.attrs, attr_ranges[:, 1], "right") - 1).astype(np.int32)
+        qv = jnp.asarray(queries, jnp.float32)
+        if self.mode == "infilter":
+            lo_j, hi_j = jnp.asarray(lo), jnp.asarray(hi)
+            entry = rmq_query_jax(self._rmq, self._dc,
+                                  jnp.minimum(lo_j, n - 1), jnp.clip(hi_j, 0, n - 1))
+            ids, d, st = beam_search_batch(self._v, self._nb, qv, lo_j, hi_j,
+                                           entry, k=k, ef=max(ef, k))
+        else:  # postfilter: unfiltered search, oversampled, then range filter
+            big = max(ef, k * self.oversample)
+            zeros = jnp.zeros(len(lo), jnp.int32)
+            full_hi = jnp.full(len(hi), n - 1, jnp.int32)
+            entry = rmq_query_jax(self._rmq, self._dc, zeros, full_hi)
+            ids, d, st = beam_search_batch(self._v, self._nb, qv, zeros, full_hi,
+                                           entry, k=big, ef=big)
+            idn = np.asarray(ids)
+            dn = np.asarray(d)
+            in_range = (idn >= lo[:, None]) & (idn <= hi[:, None]) & (idn >= 0)
+            dn = np.where(in_range, dn, np.inf)
+            sel = np.argsort(dn, axis=1)[:, :k]
+            ids = np.take_along_axis(idn, sel, axis=1)
+            d = np.take_along_axis(dn, sel, axis=1)
+            ids = np.where(np.isfinite(d), ids, -1)
+        idn = np.asarray(ids)
+        orig = np.where(idn >= 0, self.order[np.maximum(idn, 0)], -1)
+        return orig, np.asarray(d), jax.tree.map(np.asarray, st)
+
+
+# ----------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("k", "ef", "max_steps", "smin"))
+def _segtree_beam(vecs, nbrs_lvl, qv, lo, hi, entries, *, k, ef,
+                  max_steps=0, smin=0):
+    """Beam search over the composed segment-tree graph.
+    nbrs_lvl: (LEVELS, n, m); a node's adjacency row comes from the level of
+    the maximal aligned block containing it inside [lo, hi]."""
+    levels, n, m = nbrs_lvl.shape
+    steps_cap = max_steps or 8 * ef + 64
+
+    def lvl_of(v, L, R):
+        def body(s, best):
+            start = (v >> s) << s
+            ok = (start >= L) & (start + (1 << s) - 1 <= R)
+            return jnp.where(ok, s, best)
+        return jax.lax.fori_loop(0, levels, body, jnp.int32(0))
+
+    def one(q, L, R, e0):
+        e0 = e0[:ef]                         # entry list never exceeds the pool
+        ev = (e0 >= 0)
+        e0c = jnp.clip(e0, 0, n - 1)
+        d0 = jnp.where(ev, jnp.sum(jnp.square(vecs[e0c] - q[None, :]), -1), jnp.inf)
+        ne = e0.shape[0]
+        cand_ids = jnp.full((ef,), -1, jnp.int32).at[:ne].set(e0c.astype(jnp.int32))
+        cand_d = jnp.full((ef,), jnp.inf).at[:ne].set(d0)
+        expanded = jnp.zeros((ef,), bool).at[:ne].set(~ev)
+        visited = jnp.zeros((n + 1,), bool).at[jnp.where(ev, e0c, n)].set(True)
+
+        def cond(st):
+            cand_d, expanded, _, _, steps, _ = st
+            best = jnp.min(jnp.where(~expanded, cand_d, jnp.inf))
+            worst = jnp.where(jnp.any(~jnp.isfinite(cand_d)), jnp.inf,
+                              jnp.max(jnp.where(jnp.isfinite(cand_d), cand_d, -jnp.inf)))
+            return (best <= worst) & (steps < steps_cap)
+
+        def body(st):
+            cand_d, expanded, cand_ids, visited, steps, ndist = st
+            bi = jnp.argmin(jnp.where(~expanded, cand_d, jnp.inf))
+            expanded = expanded.at[bi].set(True)
+            node = jnp.maximum(cand_ids[bi], 0)
+            nb = nbrs_lvl[lvl_of(node, L, R), node]
+            valid = (nb >= 0) & (nb >= L) & (nb <= R) & ~visited[jnp.maximum(nb, 0)]
+            visited = visited.at[jnp.where(valid, nb, n)].set(True)
+            nv = vecs[jnp.maximum(nb, 0)]
+            d_nb = jnp.where(valid, jnp.sum(jnp.square(nv - q[None, :]), -1), jnp.inf)
+            ids_all = jnp.concatenate([cand_ids, nb.astype(jnp.int32)])
+            d_all = jnp.concatenate([cand_d, d_nb])
+            exp_all = jnp.concatenate([expanded, ~valid])
+            order = jnp.argsort(d_all)[:ef]
+            return (d_all[order], exp_all[order], ids_all[order], visited,
+                    steps + 1, ndist + jnp.sum(valid))
+
+        st = (cand_d, expanded, cand_ids, visited,
+              jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+        cand_d, _, cand_ids, _, steps, ndist = jax.lax.while_loop(cond, body, st)
+        return (jnp.where(jnp.isfinite(cand_d[:k]), cand_ids[:k], -1),
+                cand_d[:k], steps, ndist)
+
+    ids, d, steps, ndist = jax.vmap(one)(qv, lo, hi, entries)
+    return ids, d, {"hops": steps, "ndist": ndist}
+
+
+class SegmentTreeIndex:
+    """iRangeGraph-like: elemental MRNG graphs on every segment-tree node."""
+
+    def __init__(self, vectors, attrs, *, m=16, ef_spatial=48):
+        t0 = time.perf_counter()
+        order = np.argsort(attrs, kind="stable")
+        self.vecs = np.asarray(vectors, np.float32)[order]
+        self.attrs = np.asarray(attrs, np.float32)[order]
+        self.order = order.astype(np.int32)
+        n = len(self.attrs)
+        depth = max(1, int(np.ceil(np.log2(max(n, 2)))))
+        self.levels = depth + 1
+        self.m = m
+        nbrs = np.full((self.levels, n, m), -1, np.int32)
+        kmax = max(ef_spatial, m)
+        for s in range(self.levels):
+            size = 1 << s
+            if size <= 1:
+                continue
+            # per-level batched block-local KNN (one vectorized pass per level)
+            k = min(kmax, size - 1)
+            knn_lvl = np.full((n, k), -1, np.int32)
+            for start in range(0, n, size):
+                end = min(start + size, n)
+                bn = end - start
+                if bn <= 1:
+                    continue
+                blk = self.vecs[start:end]
+                d2 = np.sum(blk * blk, 1)[:, None] - 2 * blk @ blk.T \
+                    + np.sum(blk * blk, 1)[None, :]
+                np.fill_diagonal(d2, np.inf)
+                kk = min(k, bn - 1)
+                idx = np.argpartition(d2, kth=kk - 1, axis=1)[:, :kk]
+                row_d = np.take_along_axis(d2, idx, axis=1)
+                o = np.argsort(row_d, axis=1)
+                knn_lvl[start:end, :kk] = np.take_along_axis(idx, o, axis=1) + start
+            g = mrng_prune_graph(self.vecs, knn_lvl, m)
+            g = add_reverse_edges(g, m)
+            # repair per block only when actually disconnected (rare for
+            # blocks ≲ ef_spatial, where the candidate set is near-complete)
+            for start in range(0, n, size):
+                end = min(start + size, n)
+                bn = end - start
+                if bn <= 2:
+                    continue
+                sub = g[start:end]
+                loc = np.where(sub >= 0, sub - start, -1)
+                blk = self.vecs[start:end]
+                dl = np.sum((blk - blk.mean(0)) ** 2, axis=1)
+                ent = int(np.argmin(dl))
+                seen = np.zeros(bn, bool)
+                seen[ent] = True
+                stack = [ent]
+                while stack:
+                    u = stack.pop()
+                    for vv in loc[u]:
+                        if vv >= 0 and not seen[vv]:
+                            seen[vv] = True
+                            stack.append(int(vv))
+                if not seen.all():
+                    loc = connectivity_repair(loc, blk, ent)
+                g[start:end] = np.where(loc >= 0, loc + start, -1)
+            nbrs[s] = g
+        self.nbrs = nbrs
+        self.centroid, self.dist_c = centroid_dists(self.vecs)
+        self.rmq = build_rmq(self.dist_c)
+        self.build_seconds = time.perf_counter() - t0
+        self._v = jnp.asarray(self.vecs)
+        self._nb = jnp.asarray(self.nbrs)
+        self._rmq = jnp.asarray(self.rmq)
+        self._dc = jnp.asarray(self.dist_c)
+
+    @property
+    def index_bytes(self):
+        return self.nbrs.nbytes + self.rmq.nbytes + self.dist_c.nbytes
+
+    def _canonical_entries(self, lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
+        """One entry (centroid-nearest node) per maximal aligned block."""
+        out = np.full((len(lo), 2 * self.levels), -1, np.int32)
+        for qi, (L, R) in enumerate(zip(lo, hi)):
+            if L > R:
+                continue
+            segs = []
+            v = int(L)
+            while v <= R:
+                s = 0
+                while s + 1 < self.levels:
+                    size = 1 << (s + 1)
+                    if v % size == 0 and v + size - 1 <= R:
+                        s += 1
+                    else:
+                        break
+                segs.append((v, v + (1 << s) - 1))
+                v += 1 << s
+            from repro.core.entry import rmq_query_np
+            for j, (a, b) in enumerate(segs[:out.shape[1]]):
+                out[qi, j] = rmq_query_np(self.rmq, self.dist_c, a, b)
+        return out
+
+    def search(self, queries, attr_ranges, *, k=10, ef=64, **_):
+        n = len(self.attrs)
+        lo = np.searchsorted(self.attrs, attr_ranges[:, 0], "left").astype(np.int32)
+        hi = (np.searchsorted(self.attrs, attr_ranges[:, 1], "right") - 1).astype(np.int32)
+        entries = self._canonical_entries(lo, hi)
+        ids, d, st = _segtree_beam(self._v, self._nb, jnp.asarray(queries, jnp.float32),
+                                   jnp.asarray(lo), jnp.asarray(hi),
+                                   jnp.asarray(entries), k=k, ef=max(ef, k))
+        idn = np.asarray(ids)
+        orig = np.where(idn >= 0, self.order[np.maximum(idn, 0)], -1)
+        return orig, np.asarray(d), jax.tree.map(np.asarray, st)

@@ -1,0 +1,26 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode — the
+kernel body runs verbatim for correctness; on TPU the same call sites compile
+to Mosaic.  Backend selection is automatic.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.gather_dist import gather_dist_pallas
+from repro.kernels.l2dist import l2dist_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def l2dist(q: jax.Array, x: jax.Array, **kw) -> jax.Array:
+    """(Q,d) × (N,d) -> (Q,N) squared-L2 distance matrix."""
+    return l2dist_pallas(q, x, interpret=_interpret(), **kw)
+
+
+def gather_dist(x: jax.Array, ids: jax.Array, q: jax.Array) -> jax.Array:
+    """Fused gather+score of M neighbor rows against one query."""
+    return gather_dist_pallas(x, ids, q, interpret=_interpret())

@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def l2dist_ref(q: jax.Array, x: jax.Array) -> jax.Array:
+    """(Q,d) × (N,d) -> (Q,N) squared L2, f32 accumulation."""
+    qf = q.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    qn = jnp.sum(qf * qf, axis=-1, keepdims=True)
+    xn = jnp.sum(xf * xf, axis=-1)
+    return jnp.maximum(qn - 2.0 * (qf @ xf.T) + xn[None, :], 0.0)
+
+
+def gather_dist_ref(x: jax.Array, ids: jax.Array, q: jax.Array) -> jax.Array:
+    """x:(N,d); ids:(M,) int32 (clipped to range); q:(d,) -> (M,) sq dists."""
+    rows = x[jnp.clip(ids, 0, x.shape[0] - 1)].astype(jnp.float32)
+    diff = rows - q.astype(jnp.float32)[None, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """(B,S,H,hd) GQA-free reference attention, f32 softmax."""
+    b, s, h, d = q.shape
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (d ** 0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,105 @@
+"""Post-SPMD HLO analysis: collective-byte accounting + roofline terms.
+
+``collective_bytes`` parses the compiled (per-device) HLO text and sums the
+operand sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (async ``-start`` forms counted once).
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for x in dims.split(","):
+            if x:
+                n *= int(x)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device operand bytes per collective kind (and 'total')."""
+    # name -> result-type text (first token group before the op name)
+    result_types: Dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        mm = _DEF_RE.match(line)
+        if mm:
+            name, rhs = mm.groups()
+            result_types[name] = rhs.split(" ")[0]
+
+    out = {k: 0 for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        rhs = m.group(2)
+        kind = next((c for c in COLLECTIVES
+                     if re.search(rf"\b{c}(-start)?\(", rhs)), None)
+        if kind is None:
+            continue
+        if re.search(rf"\b{kind}-done\(", rhs):
+            continue
+        # operand section: text inside the outermost call parens
+        call = re.search(rf"{kind}(?:-start)?\((.*)\)", rhs)
+        args = call.group(1) if call else ""
+        b = _shape_bytes(args)
+        if b == 0:
+            # operands printed as bare %names: resolve via definition map
+            for ref in re.findall(r"%([\w.\-]+)", args):
+                b += _shape_bytes(result_types.get(ref, ""))
+        if b == 0:
+            # last resort: result type (upper-bounds AG, matches AR)
+            b = _shape_bytes(rhs.split(f" {kind}")[0])
+        out[kind] += b
+    out["total"] = sum(out[k] for k in COLLECTIVES)
+    return out
+
+
+# ----------------------------------------------------------------------
+# TPU v5e (target hardware)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+
+def roofline_terms(per_device_flops: float, per_device_bytes: float,
+                   per_device_coll_bytes: float, chips: int) -> Dict[str, float]:
+    """Three roofline times (seconds), global convention: X_global/(chips·peak)
+    == X_per_device/peak."""
+    t_compute = per_device_flops / PEAK_FLOPS
+    t_memory = per_device_bytes / HBM_BW
+    t_coll = per_device_coll_bytes / ICI_BW
+    dominant = max((t_compute, "compute"), (t_memory, "memory"),
+                   (t_coll, "collective"))[1]
+    bound = max(t_compute, t_memory, t_coll)
+    return dict(t_compute=t_compute, t_memory=t_memory, t_collective=t_coll,
+                dominant=dominant, t_bound=bound,
+                flops_global=per_device_flops * chips,
+                bytes_global=per_device_bytes * chips,
+                coll_bytes_global=per_device_coll_bytes * chips)
+
+
+def model_flops(cfg, shape, n_active: int) -> float:
+    """6·N_active·tokens (train) / 2·N_active·tokens (serve)."""
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens

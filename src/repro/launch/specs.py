@@ -1,0 +1,63 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape) cell.
+
+Shapes follow the assignment contract:
+  * train/prefill: tokens (global_batch, seq_len)
+  * decode_*: ONE new token with a KV cache of seq_len (serve_step, not train)
+  * [audio]/[vlm]: the modality frontend is a stub — ``input_specs`` delivers
+    precomputed frame/patch embeddings.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, dm=None) -> Dict:
+    b, s = shape.global_batch, shape.seq_len
+    bf = jnp.dtype(cfg.dtype)
+    out: Dict = {}
+    if shape.kind == "train":
+        out["tokens"] = SDS((b, s), jnp.int32)
+        out["labels"] = SDS((b, s), jnp.int32)
+    elif shape.kind == "prefill":
+        out["tokens"] = SDS((b, s), jnp.int32)
+    elif shape.kind == "decode":
+        out["token"] = SDS((b,), jnp.int32)
+    if cfg.family == "encdec" and shape.kind in ("train", "prefill"):
+        out["frames"] = SDS((b, max(s // 4, 1), cfg.frontend_dim or cfg.d_model), bf)
+    if cfg.family == "vlm" and shape.kind in ("train", "prefill"):
+        out["patches"] = SDS((b, cfg.n_frontend_tokens,
+                              cfg.frontend_dim or cfg.d_model), bf)
+    return out
+
+
+def concrete_batch(cfg: ArchConfig, shape_kind: str, batch: int, seq: int,
+                   rng: np.random.Generator) -> Dict:
+    """Small concrete batch for smoke tests / examples."""
+    out: Dict = {}
+    v = cfg.vocab_size
+    if shape_kind == "train":
+        out["tokens"] = jnp.asarray(rng.integers(0, v, (batch, seq)), jnp.int32)
+        out["labels"] = jnp.asarray(rng.integers(0, v, (batch, seq)), jnp.int32)
+    elif shape_kind == "prefill":
+        out["tokens"] = jnp.asarray(rng.integers(0, v, (batch, seq)), jnp.int32)
+    elif shape_kind == "decode":
+        out["token"] = jnp.asarray(rng.integers(0, v, (batch,)), jnp.int32)
+    if cfg.family == "encdec" and shape_kind in ("train", "prefill"):
+        out["frames"] = jnp.asarray(
+            rng.standard_normal((batch, max(seq // 4, 1),
+                                 cfg.frontend_dim or cfg.d_model)),
+            jnp.dtype(cfg.dtype))
+    if cfg.family == "vlm" and shape_kind in ("train", "prefill"):
+        out["patches"] = jnp.asarray(
+            rng.standard_normal((batch, cfg.n_frontend_tokens,
+                                 cfg.frontend_dim or cfg.d_model)),
+            jnp.dtype(cfg.dtype))
+    return out

@@ -1,0 +1,258 @@
+"""GQA attention: double-chunked (flash-style) prefill/train path, direct decode
+path, cross-attention. Pure jnp/lax — fixed shapes, online softmax, f32 accum."""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import apply_rope, norm
+from repro.models.params import ModelDims
+
+NEG = -1e30
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> Tuple[jax.Array, int]:
+    s = x.shape[axis]
+    pad = (-s) % mult
+    if pad == 0:
+        return x, s
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), s
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0, q_offset: int = 0,
+                    kv_valid: Optional[jax.Array] = None,
+                    q_chunk: int = 1024, kv_chunk: int = 1024,
+                    unroll: bool = False,
+                    block_skip: bool = False) -> jax.Array:
+    """q: (B,Sq,H,hd); k,v: (B,Skv,Kh,hd) with H % Kh == 0.  Returns (B,Sq,H,hd).
+
+    Double-chunked online-softmax attention: outer loop over q chunks, inner
+    loop over kv chunks.  All masking (causal / sliding window / kv validity /
+    padding) happens on the f32 score tile.
+
+    unroll=True runs python loops instead of lax.scan — used by the dry-run
+    analysis mode so HLO cost analysis sees every block (XLA counts a while
+    body once).  block_skip=True (requires unroll) skips fully-masked blocks
+    above the causal diagonal / outside the sliding window.
+    """
+    B, Sq, H, hd = q.shape
+    Skv, Kh = k.shape[1], k.shape[2]
+    G = H // Kh
+    scale = hd ** -0.5
+    qc = min(q_chunk, max(Sq, 1))
+    kc = min(kv_chunk, max(Skv, 1))
+
+    qp, Sq0 = _pad_to(q, 1, qc)
+    kp, Skv0 = _pad_to(k, 1, kc)
+    vp, _ = _pad_to(v, 1, kc)
+    nq, nk = qp.shape[1] // qc, kp.shape[1] // kc
+
+    if kv_valid is None:
+        kv_valid = jnp.asarray(Skv0, jnp.int32)
+
+    qp = qp.reshape(B, nq, qc, Kh, G, hd)
+    kp = kp.reshape(B, nk, kc, Kh, hd)
+    vp = vp.reshape(B, nk, kc, Kh, hd)
+
+    def kv_block(carry, qi, iq_glob, kj, vj, jk):
+        m, l, acc = carry
+        jk_glob = jk * kc + jnp.arange(kc)
+        s = jnp.einsum("bqkgh,bjkh->bkgqj", qi, kj,
+                       preferred_element_type=jnp.float32) * scale
+        mask = jk_glob[None, :] < kv_valid
+        if causal:
+            mask = mask & (jk_glob[None, :] <= iq_glob[:, None])
+        if window:
+            mask = mask & (jk_glob[None, :] > iq_glob[:, None] - window)
+        s = jnp.where(mask[None, None, None], s, NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqj,bjkh->bkgqh", p.astype(vj.dtype), vj,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr[..., None] + pv
+        return m_new, l, acc
+
+    def q_block(qi, iq):
+        iq_glob = q_offset + iq * qc + jnp.arange(qc)
+        m0 = jnp.full((B, Kh, G, qc), NEG, jnp.float32)
+        l0 = jnp.zeros((B, Kh, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, Kh, G, qc, hd), jnp.float32)
+        if unroll:
+            carry = (m0, l0, a0)
+            for jk in range(nk):
+                if block_skip and causal and isinstance(iq, int):
+                    if jk * kc > q_offset + iq * qc + qc - 1:
+                        continue        # block fully above causal diagonal
+                    if window and (jk + 1) * kc - 1 <= q_offset + iq * qc - window:
+                        continue        # block fully outside the window
+                carry = kv_block(carry, qi, iq_glob, kp[:, jk], vp[:, jk],
+                                 jnp.asarray(jk))
+            m, l, acc = carry
+        else:
+            def kv_step(carry, x):
+                kj, vj, jk = x
+                return kv_block(carry, qi, iq_glob, kj, vj, jk), None
+            ks = jnp.moveaxis(kp, 1, 0)
+            vs = jnp.moveaxis(vp, 1, 0)
+            (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                          (ks, vs, jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]        # (B,Kh,G,qc,hd)
+        return jnp.moveaxis(out, 3, 1).astype(q.dtype)       # (B,qc,Kh,G,hd)
+
+    if unroll:
+        outs = [q_block(qp[:, i], i) for i in range(nq)]
+        out = jnp.stack(outs, axis=1)
+    elif block_skip and causal and isinstance(q_offset, int):
+        # Production block skipping, differentiable form: one scan over the
+        # STATIC lower-triangle (iq, jk) block list — exactly the causal /
+        # windowed band is computed (≈2× fewer blocks than the dense grid);
+        # accumulators for all q chunks ride in the carry.
+        pairs = []
+        for i in range(nq):
+            j_hi = min(nk - 1, (q_offset + (i + 1) * qc - 1) // kc)
+            j_lo = max(0, (q_offset + i * qc - window) // kc) if window else 0
+            pairs.extend((i, j) for j in range(j_lo, j_hi + 1))
+        iq_arr = jnp.asarray([p[0] for p in pairs], jnp.int32)
+        jk_arr = jnp.asarray([p[1] for p in pairs], jnp.int32)
+
+        def tri_step(carry, ij):
+            m, l, acc = carry                 # (B,Kh,G,nq,qc[,hd])
+            iq, jk = ij
+            qi = jax.lax.dynamic_index_in_dim(qp, iq, 1, keepdims=False)
+            kj = jax.lax.dynamic_index_in_dim(kp, jk, 1, keepdims=False)
+            vj = jax.lax.dynamic_index_in_dim(vp, jk, 1, keepdims=False)
+            iq_glob = q_offset + iq * qc + jnp.arange(qc)
+            mi = jax.lax.dynamic_index_in_dim(m, iq, 3, keepdims=False)
+            li = jax.lax.dynamic_index_in_dim(l, iq, 3, keepdims=False)
+            ai = jax.lax.dynamic_index_in_dim(acc, iq, 3, keepdims=False)
+            mi, li, ai = kv_block((mi, li, ai), qi, iq_glob, kj, vj, jk)
+            m = jax.lax.dynamic_update_index_in_dim(m, mi, iq, 3)
+            l = jax.lax.dynamic_update_index_in_dim(l, li, iq, 3)
+            acc = jax.lax.dynamic_update_index_in_dim(acc, ai, iq, 3)
+            return (m, l, acc), None
+
+        m0 = jnp.full((B, Kh, G, nq, qc), NEG, jnp.float32)
+        l0 = jnp.zeros((B, Kh, G, nq, qc), jnp.float32)
+        a0 = jnp.zeros((B, Kh, G, nq, qc, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(tri_step, (m0, l0, a0), (iq_arr, jk_arr))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]      # (B,Kh,G,nq,qc,hd)
+        out = jnp.moveaxis(out.reshape(B, Kh, G, nq * qc, hd), 3, 1)
+        out = out.astype(q.dtype)                          # (B,S,Kh,G,hd)
+    else:
+        qs = jnp.moveaxis(qp, 1, 0)
+        _, outs = jax.lax.scan(lambda _, x: (None, q_block(*x)), None,
+                               (qs, jnp.arange(nq)))
+        out = jnp.moveaxis(outs, 0, 1)
+    out = out.reshape(B, nq * qc, H, hd)
+    return out[:, :Sq0]
+
+
+def decode_attention(q1: jax.Array, k: jax.Array, v: jax.Array, *,
+                     cur_len: jax.Array, window: int = 0) -> jax.Array:
+    """q1: (B,1,H,hd); k,v: (B,S,Kh,hd) cache. Attends to positions < cur_len."""
+    B, _, H, hd = q1.shape
+    S, Kh = k.shape[1], k.shape[2]
+    G = H // Kh
+    qg = q1.reshape(B, Kh, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, k,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    pos = jnp.arange(S)
+    mask = pos < cur_len
+    if window:
+        mask = mask & (pos > cur_len - window)
+    s = jnp.where(mask[None, None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, hd).astype(q1.dtype)
+
+
+# ----------------------------------------------------------------------
+def _qkv(x: jax.Array, p: Dict, cfg: ArchConfig, dm: ModelDims):
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    B, S = x.shape[0], x.shape[1]
+    return (q.reshape(B, S, dm.h, dm.hd),
+            k.reshape(B, S, dm.kh, dm.hd),
+            v.reshape(B, S, dm.kh, dm.hd))
+
+
+def self_attn_train(x: jax.Array, p: Dict, cfg: ArchConfig, dm: ModelDims,
+                    positions: jax.Array, causal: bool = True,
+                    opts: Optional[Dict] = None) -> jax.Array:
+    """Full-sequence self-attention sublayer (pre-norm, residual added by caller)."""
+    h = norm(x, p, cfg.norm)
+    q, k, v = _qkv(h, p, cfg, dm)
+    if cfg.rope_theta:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    o = flash_attention(q, k, v, causal=causal, window=cfg.sliding_window,
+                        **(opts or {}))
+    return o.reshape(*x.shape[:2], dm.h * dm.hd) @ p["wo"]
+
+
+def self_attn_prefill(x, p, cfg: ArchConfig, dm: ModelDims, positions,
+                      opts: Optional[Dict] = None):
+    """Like train, but also returns (k, v) for the cache."""
+    h = norm(x, p, cfg.norm)
+    q, k, v = _qkv(h, p, cfg, dm)
+    if cfg.rope_theta:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    o = flash_attention(q, k, v, causal=True, window=cfg.sliding_window,
+                        **(opts or {}))
+    return o.reshape(*x.shape[:2], dm.h * dm.hd) @ p["wo"], (k, v)
+
+
+def self_attn_decode(x1, p, cfg: ArchConfig, dm: ModelDims, cache_k, cache_v, cur_len):
+    """x1: (B,1,D). cache_k/v: (B,S,Kh,hd). Returns (out, new_k, new_v)."""
+    h = norm(x1, p, cfg.norm)
+    q, k, v = _qkv(h, p, cfg, dm)
+    if cfg.rope_theta:
+        pos = jnp.full((1,), 0, jnp.int32) + cur_len
+        q = apply_rope(q, pos[None, :], cfg.rope_theta)
+        k = apply_rope(k, pos[None, :], cfg.rope_theta)
+    ck = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                      (0, cur_len, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                      (0, cur_len, 0, 0))
+    o = decode_attention(q, ck, cv, cur_len=cur_len + 1, window=cfg.sliding_window)
+    return o.reshape(x1.shape[0], 1, dm.h * dm.hd) @ p["wo"], ck, cv
+
+
+# ----------------------------------------------------------------------
+def cross_kv(memory: jax.Array, p: Dict, cfg: ArchConfig, dm: ModelDims):
+    B, S = memory.shape[:2]
+    k = (memory @ p["wk"]).reshape(B, S, dm.kh, dm.hd)
+    v = (memory @ p["wv"]).reshape(B, S, dm.kh, dm.hd)
+    if cfg.qkv_bias:
+        k = k + p["bk"].reshape(dm.kh, dm.hd)
+        v = v + p["bv"].reshape(dm.kh, dm.hd)
+    return k, v
+
+
+def cross_attn(x, memory_kv, p, cfg: ArchConfig, dm: ModelDims,
+               opts: Optional[Dict] = None):
+    """Cross-attention sublayer: queries from x, K/V precomputed from memory."""
+    k, v = memory_kv
+    h = norm(x, p, cfg.norm)
+    B, S = x.shape[:2]
+    q = (h @ p["wq"]).reshape(B, S, dm.h, dm.hd)
+    if cfg.qkv_bias:
+        q = q + p["bq"].reshape(dm.h, dm.hd)
+    opts = dict(opts or {})
+    opts.pop("block_skip", None)        # no causal structure to skip
+    o = flash_attention(q, k, v, causal=False, **opts)
+    return o.reshape(B, S, dm.h * dm.hd) @ p["wo"]

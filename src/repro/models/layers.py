@@ -1,0 +1,84 @@
+"""Stateless layer ops: norms, RoPE, MLPs, embedding, vocab-sharded cross entropy."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm(x: jax.Array, p: Dict, kind: str, key: str = "norm") -> jax.Array:
+    if kind == "layernorm":
+        return layernorm(x, p[key], p[f"{key}_b"])
+    return rmsnorm(x, p[key])
+
+
+# ----------------------------------------------------------------------
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)
+    ang = positions.astype(jnp.float32)[..., None] * inv            # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                                # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+def mlp(x: jax.Array, p: Dict, act: str) -> jax.Array:
+    h = x @ p["w_in"]
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * h
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["w_out"]
+
+
+def embed_tokens(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def lm_logits(x: jax.Array, params: Dict, tie: bool) -> jax.Array:
+    if tie:
+        return jnp.einsum("...d,vd->...v", x, params["embed"],
+                          preferred_element_type=jnp.float32)
+    return jnp.einsum("...d,dv->...v", x, params["lm_head"],
+                      preferred_element_type=jnp.float32)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, vocab_real: int,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Vocab-sharded-safe CE: pure jnp reductions over the (possibly padded)
+    vocab dim; padded entries are masked to -inf so they never win."""
+    v_pad = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if v_pad != vocab_real:
+        pad_mask = jnp.arange(v_pad) >= vocab_real
+        logits = jnp.where(pad_mask, -1e30, logits)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, v_pad, dtype=jnp.float32)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,495 @@
+"""Unified model: dense / MoE / SSM / hybrid / enc-dec / VLM families.
+
+One ``Model`` object per ``ArchConfig``: parameters are group-stacked and the
+layer stack is a ``lax.scan`` over groups (a group is 1 layer for uniform
+stacks, ``attn_every`` layers for hybrids, ``cross_attn_every`` for VLMs).
+Exposes ``loss`` (train), ``prefill`` and ``decode`` (serve) plus abstract
+shape variants for the dry-run.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import ssm as ssm_mod
+from repro.models.layers import cross_entropy, embed_tokens, mlp, norm
+from repro.models.moe import moe_ffn
+from repro.models.params import (ModelDims, ShardPlan, build_param_specs,
+                                 init_params, param_shapes, resolve_dims)
+
+
+def _remat(fn, mode: str):
+    if mode == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    if mode == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return fn
+
+
+def _mlp_block(x, p, cfg):
+    return x + mlp(norm(x, p, cfg.norm), p, cfg.mlp_act)
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig, plan: ShardPlan = ShardPlan(),
+                 mesh=None, act_shard=None, opts: Optional[Dict] = None):
+        """opts:
+          unroll (bool)      — python loops instead of lax.scan (dry-run cost
+                               analysis mode: XLA counts a while body once)
+          sp (bool)          — Megatron-style sequence parallelism on the
+                               residual stream (seq dim over the model axis)
+          q_chunk/kv_chunk   — flash-attention tile sizes
+          block_skip (bool)  — skip fully-masked causal blocks (needs unroll)
+          ssm_chunk          — SSD chunk length
+          ce_chunk           — sequence-chunked cross-entropy slice
+        """
+        self.cfg = cfg
+        self.plan = plan
+        self.dm: ModelDims = resolve_dims(cfg, plan)
+        self.mesh = mesh
+        self.opts = dict(opts or {})
+        self.unroll = bool(self.opts.get("unroll", False))
+        self.sp = bool(self.opts.get("sp", False))
+        self._attn_opts = {k: self.opts[k] for k in
+                           ("q_chunk", "kv_chunk", "unroll", "block_skip")
+                           if k in self.opts}
+        self._ssm_opts = {k: self.opts[k] for k in
+                          ("ssm_chunk", "unroll", "ssd_dtype")
+                          if k in self.opts}
+        # act_shard(x, logical_tuple) -> x  (sharding constraint hook)
+        self._sa = act_shard or (lambda x, spec: x)
+
+    def _res_spec(self):
+        """Residual-stream activation sharding (SP shards seq over 'model')."""
+        return ("batch", "sp", None) if self.sp else ("batch", None, None)
+
+    # ------------------------------------------------------------- params
+    def init(self, rng) -> Dict:
+        return init_params(self.cfg, self.plan, rng)
+
+    def param_shapes(self) -> Dict:
+        return param_shapes(self.cfg, self.plan)
+
+    # ------------------------------------------------------------- embedding
+    def _embed(self, params, tokens):
+        x = embed_tokens(tokens, params["embed"])
+        return self._sa(x, ("batch", None, None))
+
+    def _head_matrix(self, params):
+        if self.cfg.tie_embeddings:
+            return params["embed"].T
+        return params["lm_head"]
+
+    def _logits(self, params, x):
+        logits = jnp.einsum("...d,dv->...v", x, self._head_matrix(params).astype(x.dtype),
+                            preferred_element_type=jnp.float32)
+        return self._sa(logits, ("batch", None, "tp"))
+
+    # ------------------------------------------------------------- stacks
+    def _group_train(self, x, pl, positions, memory_kv=None):
+        """One scan group, full-sequence. Returns (x, aux)."""
+        cfg, dm = self.cfg, self.dm
+        aux = jnp.zeros((), jnp.float32)
+        fam = cfg.family
+        if fam in ("dense", "moe"):
+            x = x + attn.self_attn_train(x, pl["attn"], cfg, dm, positions, opts=self._attn_opts)
+            if fam == "moe":
+                f, a = moe_ffn(x, pl["moe"], cfg, dm, self.mesh)
+                x, aux = x + f, aux + a
+            else:
+                x = _mlp_block(x, pl["mlp"], cfg)
+        elif fam == "ssm":
+            x = x + ssm_mod.mamba_train(x, pl["ssm"], cfg, dm, opts=self._ssm_opts)
+        elif fam == "hybrid":
+            for j in range(dm.group_layers):
+                if j == 0:
+                    x = x + attn.self_attn_train(x, pl["attn"], cfg, dm, positions, opts=self._attn_opts)
+                else:
+                    x = x + ssm_mod.mamba_train(x, pl[f"ssm{j}"], cfg, dm, opts=self._ssm_opts)
+                if cfg.n_experts and (j % cfg.moe_every == cfg.moe_every - 1):
+                    f, a = moe_ffn(x, pl[f"ffn{j}_moe"], cfg, dm, self.mesh)
+                    x, aux = x + f, aux + a
+                else:
+                    x = _mlp_block(x, pl[f"ffn{j}"], cfg)
+        elif fam == "encdec":
+            x = x + attn.self_attn_train(x, pl["attn"], cfg, dm, positions, opts=self._attn_opts)
+            ckv = attn.cross_kv(memory_kv, pl["cross"], cfg, dm)
+            x = x + attn.cross_attn(x, ckv, pl["cross"], cfg, dm, opts=self._attn_opts)
+            x = _mlp_block(x, pl["mlp"], cfg)
+        elif fam == "vlm":
+            x = x + attn.self_attn_train(x, pl["attn"], cfg, dm, positions, opts=self._attn_opts)
+            ckv = attn.cross_kv(memory_kv, pl["cross"], cfg, dm)
+            x = x + attn.cross_attn(x, ckv, pl["cross"], cfg, dm, opts=self._attn_opts)
+            x = _mlp_block(x, pl["mlp"], cfg)
+            for j in range(1, dm.group_layers):
+                x = x + attn.self_attn_train(x, pl[f"attn{j}"], cfg, dm, positions, opts=self._attn_opts)
+                x = _mlp_block(x, pl[f"mlp{j}"], cfg)
+        x = self._sa(x, self._res_spec())
+        return x, aux
+
+    def _stack_train(self, params, x, positions, memory=None):
+        if self.unroll:
+            aux = jnp.zeros((), jnp.float32)
+            for g in range(self.dm.groups):
+                pl = jax.tree.map(lambda a: a[g], params["blocks"])
+                x, a = self._group_train(x, pl, positions, memory)
+                aux = aux + a
+            return x, aux
+        # remat_group r: scan over G/r super-groups of r layers each — the
+        # full-remat carry (the dominant training activation cost when TP
+        # replicates the residual stream) shrinks by r at the price of r×
+        # within-group recompute locality.
+        r = max(1, int(self.opts.get("remat_group", self.cfg.remat_group)))
+        blocks = params["blocks"]
+        if r > 1 and self.dm.groups % r == 0:
+            blocks = jax.tree.map(
+                lambda a: a.reshape(a.shape[0] // r, r, *a.shape[1:]), blocks)
+
+            def body0(carry, plr):
+                x, aux = carry
+                for i in range(r):
+                    pl = jax.tree.map(lambda a: a[i], plr)
+                    x, a = self._group_train(x, pl, positions, memory)
+                    aux = aux + a
+                return (x, aux), None
+        else:
+            def body0(carry, pl):
+                x, a = self._group_train(carry[0], pl, positions, memory)
+                return (x, carry[1] + a), None
+        body = _remat(body0, self.cfg.remat)
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   blocks)
+        return x, aux
+
+    def _encode(self, params, frames):
+        cfg, dm = self.cfg, self.dm
+        x = frames
+        if "frontend_proj" in params:
+            x = x @ params["frontend_proj"]
+        x = self._sa(x.astype(jnp.dtype(cfg.dtype)), ("batch", None, None))
+        positions = jnp.arange(x.shape[1])[None, :]
+
+        def enc_group(h, pl):
+            h = h + attn.self_attn_train(h, pl["attn"], cfg, dm,
+                                         positions, causal=False,
+                                         opts=self._attn_opts)
+            h = _mlp_block(h, pl["mlp"], cfg)
+            return self._sa(h, self._res_spec())
+
+        if self.unroll:
+            for g in range(dm.enc_layers):
+                pl = jax.tree.map(lambda a: a[g], params["enc_blocks"])
+                x = enc_group(x, pl)
+        else:
+            body = _remat(lambda c, pl: (enc_group(c, pl), None), cfg.remat)
+            x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+        if cfg.norm == "layernorm":
+            from repro.models.layers import layernorm
+            x = layernorm(x, params["enc_final_norm"], params["enc_final_norm_b"])
+        else:
+            from repro.models.layers import rmsnorm
+            x = rmsnorm(x, params["enc_final_norm"])
+        return x
+
+    def _memory(self, params, batch):
+        """Frontend memory for encdec (audio frames) / vlm (image patches)."""
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return self._encode(params, batch["frames"])
+        if cfg.family == "vlm":
+            x = batch["patches"]
+            if "frontend_proj" in params:
+                x = x @ params["frontend_proj"]
+            return x.astype(jnp.dtype(cfg.dtype))
+        return None
+
+    # ------------------------------------------------------------- train
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict]:
+        cfg, dm = self.cfg, self.dm
+        tokens, labels = batch["tokens"], batch["labels"]
+        positions = jnp.arange(tokens.shape[1])[None, :]
+        memory = self._memory(params, batch)
+        x = self._embed(params, tokens)
+        x, aux = self._stack_train(params, x, positions, memory)
+        x = norm(x, params, cfg.norm, "final_norm")
+        ce = self._chunked_ce(params, x, labels)
+        total = ce + 0.01 * aux
+        return total, {"loss": ce, "aux": aux}
+
+    def _chunked_ce(self, params, x, labels):
+        """Sequence-chunked CE so (tokens × vocab) logits are never live at
+        once.  Python loop over static slices (sharding-friendly: slices of a
+        seq-sharded dim stay aligned; every chunk is visible to cost analysis);
+        each chunk is checkpointed so logits are recomputed in backward."""
+        cfg, dm = self.cfg, self.dm
+        # leave SP before the head: slices of a sharded seq dim would force
+        # expensive GSPMD reshards per chunk (Megatron gathers here too)
+        x = self._sa(x, ("batch", None, None))
+        b, s, d = x.shape
+        head = self._head_matrix(params)
+        c = min(int(self.opts.get("ce_chunk", 1024)), s)
+        pad = (-s) % c
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+            labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        nch = x.shape[1] // c
+
+        @jax.checkpoint
+        def chunk_loss(xc, lc, head):
+            logits = jnp.einsum("bcd,dv->bcv", xc, head.astype(xc.dtype),
+                                preferred_element_type=jnp.float32)
+            logits = self._sa(logits, ("batch", None, "tp"))
+            valid = (lc >= 0).astype(jnp.float32)
+            nll = cross_entropy(logits, jnp.maximum(lc, 0), cfg.vocab_size,
+                                mask=valid) * jnp.sum(valid)
+            return nll, jnp.sum(valid)
+
+        tot = jnp.zeros(())
+        cnt = jnp.zeros(())
+        for i in range(nch):
+            xc = jax.lax.slice_in_dim(x, i * c, (i + 1) * c, axis=1)
+            lc = jax.lax.slice_in_dim(labels, i * c, (i + 1) * c, axis=1)
+            nll, nv = chunk_loss(xc, lc, head)
+            tot = tot + nll
+            cnt = cnt + nv
+        return tot / jnp.maximum(cnt, 1.0)
+
+    # ------------------------------------------------------------- serve
+    def init_cache(self, batch_size: int, max_len: int, abstract: bool = False):
+        cfg, dm = self.cfg, self.dm
+        G = dm.groups
+        mk = (lambda shape, dt: jax.ShapeDtypeStruct(shape, dt)) if abstract \
+            else (lambda shape, dt: jnp.zeros(shape, dt))
+        bf = jnp.dtype(cfg.dtype)
+        cache: Dict = {}
+        if cfg.family in ("dense", "moe", "encdec"):
+            cache["k"] = mk((G, batch_size, max_len, dm.kh, dm.hd), bf)
+            cache["v"] = mk((G, batch_size, max_len, dm.kh, dm.hd), bf)
+        if cfg.family == "vlm":   # one KV slot per in-group self-attn layer
+            gl = dm.group_layers
+            cache["k"] = mk((G, gl, batch_size, max_len, dm.kh, dm.hd), bf)
+            cache["v"] = mk((G, gl, batch_size, max_len, dm.kh, dm.hd), bf)
+        if cfg.family == "ssm":
+            cache["state"] = mk((G, batch_size, dm.ssm_h, dm.ssm_p, dm.ssm_n),
+                                jnp.float32)
+            cache["conv"] = mk((G, batch_size, dm.conv_w - 1, dm.conv_dim), bf)
+        if cfg.family == "hybrid":
+            gl = dm.group_layers
+            cache["k"] = mk((G, batch_size, max_len, dm.kh, dm.hd), bf)
+            cache["v"] = mk((G, batch_size, max_len, dm.kh, dm.hd), bf)
+            cache["state"] = mk((G, gl - 1, batch_size, dm.ssm_h, dm.ssm_p, dm.ssm_n),
+                                jnp.float32)
+            cache["conv"] = mk((G, gl - 1, batch_size, dm.conv_w - 1, dm.conv_dim), bf)
+        if cfg.family == "encdec":
+            enc_len = max_len // 4
+            cache["ck"] = mk((G, batch_size, enc_len, dm.kh, dm.hd), bf)
+            cache["cv"] = mk((G, batch_size, enc_len, dm.kh, dm.hd), bf)
+        if cfg.family == "vlm":
+            cache["ck"] = mk((G, batch_size, cfg.n_frontend_tokens, dm.kh, dm.hd), bf)
+            cache["cv"] = mk((G, batch_size, cfg.n_frontend_tokens, dm.kh, dm.hd), bf)
+        return cache
+
+    def prefill(self, params, batch, cache_len: Optional[int] = None):
+        """Full-sequence forward that also builds the decode cache.
+        Returns (cache, logits_last:(B,vocab))."""
+        cfg, dm = self.cfg, self.dm
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        cache_len = cache_len or s
+        positions = jnp.arange(s)[None, :]
+        memory = self._memory(params, batch)
+        x = self._embed(params, tokens)
+
+        def pad_kv(k):
+            if cache_len == s:
+                return k
+            return jnp.pad(k, ((0, 0), (0, cache_len - s), (0, 0), (0, 0)))
+
+        def body0(carry, pl):
+            x, aux = carry
+            ys = {}
+            if cfg.family in ("dense", "moe"):
+                o, (k, v) = attn.self_attn_prefill(x, pl["attn"], cfg, dm, positions, opts=self._attn_opts)
+                x = x + o
+                ys["k"], ys["v"] = pad_kv(k), pad_kv(v)
+                if cfg.family == "moe":
+                    f, a = moe_ffn(x, pl["moe"], cfg, dm, self.mesh)
+                    x, aux = x + f, aux + a
+                else:
+                    x = _mlp_block(x, pl["mlp"], cfg)
+            elif cfg.family == "ssm":
+                o, (st, conv) = ssm_mod.mamba_train(x, pl["ssm"], cfg, dm,
+                                                    return_state=True,
+                                                    opts=self._ssm_opts)
+                x = x + o
+                ys["state"], ys["conv"] = st, conv
+            elif cfg.family == "hybrid":
+                sts, convs = [], []
+                for j in range(dm.group_layers):
+                    if j == 0:
+                        o, (k, v) = attn.self_attn_prefill(x, pl["attn"], cfg, dm,
+                                                           positions, opts=self._attn_opts)
+                        x = x + o
+                        ys["k"], ys["v"] = pad_kv(k), pad_kv(v)
+                    else:
+                        o, (st, conv) = ssm_mod.mamba_train(
+                            x, pl[f"ssm{j}"], cfg, dm, return_state=True,
+                            opts=self._ssm_opts)
+                        x = x + o
+                        sts.append(st)
+                        convs.append(conv)
+                    if cfg.n_experts and (j % cfg.moe_every == cfg.moe_every - 1):
+                        f, a = moe_ffn(x, pl[f"ffn{j}_moe"], cfg, dm, self.mesh)
+                        x, aux = x + f, aux + a
+                    else:
+                        x = _mlp_block(x, pl[f"ffn{j}"], cfg)
+                ys["state"] = jnp.stack(sts)
+                ys["conv"] = jnp.stack(convs)
+            elif cfg.family == "encdec":
+                o, (k, v) = attn.self_attn_prefill(x, pl["attn"], cfg, dm, positions, opts=self._attn_opts)
+                x = x + o
+                ys["k"], ys["v"] = pad_kv(k), pad_kv(v)
+                ck, cv = attn.cross_kv(memory, pl["cross"], cfg, dm)
+                x = x + attn.cross_attn(x, (ck, cv), pl["cross"], cfg, dm, opts=self._attn_opts)
+                ys["ck"], ys["cv"] = ck, cv
+                x = _mlp_block(x, pl["mlp"], cfg)
+            elif cfg.family == "vlm":
+                ks, vs = [], []
+                o, (k, v) = attn.self_attn_prefill(x, pl["attn"], cfg, dm, positions, opts=self._attn_opts)
+                x = x + o
+                ks.append(pad_kv(k))
+                vs.append(pad_kv(v))
+                ck, cv = attn.cross_kv(memory, pl["cross"], cfg, dm)
+                x = x + attn.cross_attn(x, (ck, cv), pl["cross"], cfg, dm, opts=self._attn_opts)
+                ys["ck"], ys["cv"] = ck, cv
+                x = _mlp_block(x, pl["mlp"], cfg)
+                for j in range(1, dm.group_layers):
+                    o, (k, v) = attn.self_attn_prefill(x, pl[f"attn{j}"], cfg, dm,
+                                                       positions, opts=self._attn_opts)
+                    x = x + o
+                    ks.append(pad_kv(k))
+                    vs.append(pad_kv(v))
+                    x = _mlp_block(x, pl[f"mlp{j}"], cfg)
+                ys["k"], ys["v"] = jnp.stack(ks), jnp.stack(vs)
+            x = self._sa(x, ("batch", None, None))
+            return (x, aux), ys
+
+        if self.unroll:
+            carry = (x, jnp.zeros((), jnp.float32))
+            ys_l = []
+            for g in range(self.dm.groups):
+                pl = jax.tree.map(lambda a: a[g], params["blocks"])
+                carry, ys = body0(carry, pl)
+                ys_l.append(ys)
+            x, _ = carry
+            cache = jax.tree.map(lambda *a: jnp.stack(a), *ys_l)
+        else:
+            body = _remat(body0, self.cfg.remat) if cfg.remat != "none" else body0
+            (x, _), cache = jax.lax.scan(
+                body, (x, jnp.zeros((), jnp.float32)), params["blocks"])
+        x = norm(x, params, cfg.norm, "final_norm")
+        logits = self._logits(params, x[:, -1])
+        return cache, logits
+
+    def decode(self, params, cache, cur_len, token):
+        """token:(B,) int32; cur_len: scalar int32. Returns (logits, cache)."""
+        cfg, dm = self.cfg, self.dm
+        x = self._embed(params, token[:, None])
+
+        def body(x, pl_and_cache):
+            pl, cl = pl_and_cache
+            ncl = {}
+            if cfg.family in ("dense", "moe", "encdec"):
+                o, ck_, cv_ = attn.self_attn_decode(x, pl["attn"], cfg, dm,
+                                                    cl["k"], cl["v"], cur_len)
+                x = x + o
+                ncl["k"], ncl["v"] = ck_, cv_
+            if cfg.family == "moe":
+                f, _ = moe_ffn(x, pl["moe"], cfg, dm, self.mesh)
+                x = x + f
+            elif cfg.family == "dense":
+                x = _mlp_block(x, pl["mlp"], cfg)
+            elif cfg.family == "ssm":
+                o, st, conv = ssm_mod.mamba_decode(x, pl["ssm"], cfg, dm,
+                                                   cl["state"], cl["conv"])
+                x = x + o
+                ncl["state"], ncl["conv"] = st, conv
+            elif cfg.family == "hybrid":
+                sts, convs = [], []
+                for j in range(dm.group_layers):
+                    if j == 0:
+                        o, ck_, cv_ = attn.self_attn_decode(
+                            x, pl["attn"], cfg, dm, cl["k"], cl["v"], cur_len)
+                        x = x + o
+                        ncl["k"], ncl["v"] = ck_, cv_
+                    else:
+                        o, st, conv = ssm_mod.mamba_decode(
+                            x, pl[f"ssm{j}"], cfg, dm,
+                            cl["state"][j - 1], cl["conv"][j - 1])
+                        x = x + o
+                        sts.append(st)
+                        convs.append(conv)
+                    if cfg.n_experts and (j % cfg.moe_every == cfg.moe_every - 1):
+                        f, _ = moe_ffn(x, pl[f"ffn{j}_moe"], cfg, dm, self.mesh)
+                        x = x + f
+                    else:
+                        x = _mlp_block(x, pl[f"ffn{j}"], cfg)
+                ncl["state"] = jnp.stack(sts)
+                ncl["conv"] = jnp.stack(convs)
+            elif cfg.family in ("encdec", "vlm"):
+                def _cross_dec(x, pc, ck, cv):
+                    h = norm(x, pc, cfg.norm)
+                    b = x.shape[0]
+                    q = (h @ pc["wq"]).reshape(b, 1, dm.h, dm.hd)
+                    if cfg.qkv_bias:
+                        q = q + pc["bq"].reshape(dm.h, dm.hd)
+                    enc_len = ck.shape[1]
+                    o = attn.decode_attention(q, ck, cv,
+                                              cur_len=jnp.asarray(enc_len))
+                    return x + o.reshape(b, 1, dm.h * dm.hd) @ pc["wo"]
+
+                ncl["ck"], ncl["cv"] = cl["ck"], cl["cv"]
+                if cfg.family == "encdec":
+                    x = _cross_dec(x, pl["cross"], cl["ck"], cl["cv"])
+                    x = _mlp_block(x, pl["mlp"], cfg)
+                else:  # vlm: per-in-group-layer self-attn caches
+                    ks, vs = [], []
+                    o, ck_, cv_ = attn.self_attn_decode(
+                        x, pl["attn"], cfg, dm, cl["k"][0], cl["v"][0], cur_len)
+                    x = x + o
+                    ks.append(ck_)
+                    vs.append(cv_)
+                    x = _cross_dec(x, pl["cross"], cl["ck"], cl["cv"])
+                    x = _mlp_block(x, pl["mlp"], cfg)
+                    for j in range(1, dm.group_layers):
+                        o, ck_, cv_ = attn.self_attn_decode(
+                            x, pl[f"attn{j}"], cfg, dm, cl["k"][j], cl["v"][j],
+                            cur_len)
+                        x = x + o
+                        ks.append(ck_)
+                        vs.append(cv_)
+                        x = _mlp_block(x, pl[f"mlp{j}"], cfg)
+                    ncl["k"], ncl["v"] = jnp.stack(ks), jnp.stack(vs)
+            x = self._sa(x, ("batch", None, None))
+            return x, ncl
+
+        if self.unroll:
+            ncl_l = []
+            for g in range(self.dm.groups):
+                pl = jax.tree.map(lambda a: a[g], params["blocks"])
+                cl = jax.tree.map(lambda a: a[g], cache)
+                x, ncl = body(x, (pl, cl))
+                ncl_l.append(ncl)
+            new_cache = jax.tree.map(lambda *a: jnp.stack(a), *ncl_l)
+        else:
+            x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+        x = norm(x, params, cfg.norm, "final_norm")
+        logits = self._logits(params, x[:, -1])
+        return logits, new_cache

@@ -1,0 +1,180 @@
+"""Mamba2 (SSD — state-space duality) block, chunked dual form.
+
+Training/prefill uses the block-decomposed SSD algorithm (intra-chunk
+quadratic term + inter-chunk state recurrence via ``lax.scan``); decode is a
+single-step state update.  Layout follows the minimal-SSD reference:
+``x:(B,S,H,P)  dt:(B,S,H)  A:(H)<0  Bm,Cm:(B,S,N)`` (n_groups = 1).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import rmsnorm, norm
+from repro.models.params import ModelDims
+
+
+def _chunk(x: jax.Array, q: int) -> jax.Array:
+    b, s = x.shape[:2]
+    return x.reshape(b, s // q, q, *x.shape[2:])
+
+
+def ssd_chunked(x, dt, a, bm, cm, chunk: int = 128, unroll: bool = False,
+                dtype16: bool = False):
+    """Returns y:(B,S,H,P) and final state:(B,H,P,N). f32 math.
+    unroll=True replaces the inter-chunk lax.scan with a python loop (dry-run
+    cost-analysis mode).  dtype16=True keeps the O(S·Q·H) intra-chunk decay /
+    weight tensors in bf16 (halves their HBM traffic; accumulation stays f32)."""
+    b, s, h, p = x.shape
+    n = bm.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    xb, dtb = _chunk(x, q), _chunk(dt, q)
+    bb, cb = _chunk(bm, q), _chunk(cm, q)
+    nc = s // q
+    wdt = jnp.bfloat16 if dtype16 else jnp.float32
+
+    da = dtb * a                                        # (B,nc,Q,H)
+    da_cs = jnp.cumsum(da, axis=2)                      # (B,nc,Q,H)
+
+    # ---- intra-chunk (diagonal blocks) ----
+    # L[i,j] = exp(da_cs[i] - da_cs[j]) for i >= j else 0
+    seg = (da_cs[:, :, :, None, :].astype(wdt)
+           - da_cs[:, :, None, :, :].astype(wdt))               # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    # mask BEFORE exp: the i<j entries are large-positive and would overflow
+    # (and poison gradients through the where)
+    seg = jnp.where(tri[None, None, :, :, None], seg, -jnp.inf)
+    l_mat = jnp.exp(seg)
+    cb_bt = jnp.einsum("bcin,bcjn->bcij", cb.astype(wdt), bb.astype(wdt),
+                       preferred_element_type=wdt)               # (B,nc,Q,Q)
+    w = cb_bt[..., None] * l_mat * dtb[:, :, None, :, :].astype(wdt)
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", w, xb.astype(wdt),
+                        preferred_element_type=jnp.float32)
+
+    # ---- per-chunk final states ----
+    decay_tail = jnp.exp(da_cs[:, :, -1:, :] - da_cs)            # (B,nc,Q,H)
+    st = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", bb, decay_tail * dtb, xb,
+                    preferred_element_type=jnp.float32)          # (B,nc,H,P,N)
+
+    # ---- inter-chunk recurrence ----
+    chunk_decay = jnp.exp(jnp.sum(da, axis=2))                   # (B,nc,H)
+
+    def step(state, inp):
+        st_c, dec_c = inp                                        # (B,H,P,N),(B,H)
+        prev = state
+        state = prev * dec_c[:, :, None, None] + st_c
+        return state, prev
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    if unroll:
+        state, prevs_l = init, []
+        for ci in range(nc):
+            state, prev = step(state, (st[:, ci], chunk_decay[:, ci]))
+            prevs_l.append(prev)
+        final = state
+        prev_states = jnp.stack(prevs_l, axis=1)                 # (B,nc,H,P,N)
+    else:
+        st_s = jnp.moveaxis(st, 1, 0)
+        dec_s = jnp.moveaxis(chunk_decay, 1, 0)
+        final, prevs = jax.lax.scan(step, init, (st_s, dec_s))
+        prev_states = jnp.moveaxis(prevs, 0, 1)                  # (B,nc,H,P,N)
+
+    # ---- off-diagonal contribution ----
+    decay_in = jnp.exp(da_cs)                                    # (B,nc,Q,H)
+    y_off = jnp.einsum("bcin,bcih,bchpn->bcihp", cb, decay_in, prev_states,
+                       preferred_element_type=jnp.float32)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final
+
+
+def ssd_decode_step(state, x1, dt1, a, b1, c1):
+    """state:(B,H,P,N); x1:(B,H,P); dt1:(B,H); b1,c1:(B,N). One token."""
+    da = jnp.exp(dt1 * a)                                        # (B,H)
+    upd = jnp.einsum("bhp,bn->bhpn", x1 * dt1[..., None], b1)
+    state = state * da[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, c1)
+    return y, state
+
+
+# ----------------------------------------------------------------------
+def _conv_full(xbc: jax.Array, w: jax.Array, bias: jax.Array) -> jax.Array:
+    """Causal depthwise conv; xbc:(B,S,C), w:(W,C)."""
+    width, ch = w.shape
+    out = jax.lax.conv_general_dilated(
+        xbc, w[:, None, :].astype(xbc.dtype),
+        window_strides=(1,), padding=[(width - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"), feature_group_count=ch)
+    return out + bias.astype(xbc.dtype)
+
+
+def _split_in(h: jax.Array, dm: ModelDims):
+    di, n, H = dm.d_inner, dm.ssm_n, dm.ssm_h
+    z = h[..., :di]
+    xbc = h[..., di:di + dm.conv_dim]
+    dt = h[..., di + dm.conv_dim:]
+    assert dt.shape[-1] == H
+    return z, xbc, dt
+
+
+def mamba_train(x: jax.Array, p: Dict, cfg: ArchConfig, dm: ModelDims,
+                return_state: bool = False, opts: Optional[dict] = None):
+    """Full-sequence Mamba2 sublayer (pre-norm; residual added by caller)."""
+    opts = opts or {}
+    bsz, s, _ = x.shape
+    h = norm(x, p, cfg.norm) @ p["w_in"]
+    z, xbc, dt = _split_in(h, dm)
+    xbc = jax.nn.silu(_conv_full(xbc, p["conv_w"], p["conv_b"]))
+    xi = xbc[..., :dm.d_inner].reshape(bsz, s, dm.ssm_h, dm.ssm_p).astype(jnp.float32)
+    bm = xbc[..., dm.d_inner:dm.d_inner + dm.ssm_n].astype(jnp.float32)
+    cm = xbc[..., dm.d_inner + dm.ssm_n:].astype(jnp.float32)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    default_chunk = 256 if s >= 8192 else 128   # intra∝Q vs state-pass∝1/Q
+    y, state = ssd_chunked(xi, dtf, a, bm, cm,
+                           chunk=opts.get("ssm_chunk", default_chunk),
+                           unroll=opts.get("unroll", False),
+                           dtype16=opts.get("ssd_dtype", "") == "bfloat16")
+    y = y + xi * p["d_skip"][:, None]
+    y = y.reshape(bsz, s, dm.d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["out_norm"])
+    out = y @ p["w_out"]
+    if return_state:
+        conv_tail = xbc_raw_tail(x, p, cfg, dm)
+        return out, (state, conv_tail)
+    return out
+
+
+def xbc_raw_tail(x, p, cfg: ArchConfig, dm: ModelDims):
+    """Last (conv_w - 1) pre-conv xBC activations — the decode conv state."""
+    h = norm(x, p, cfg.norm) @ p["w_in"]
+    _, xbc, _ = _split_in(h, dm)
+    return xbc[:, -(dm.conv_w - 1):, :]
+
+
+def mamba_decode(x1: jax.Array, p: Dict, cfg: ArchConfig, dm: ModelDims,
+                 state: jax.Array, conv_state: jax.Array):
+    """x1:(B,1,D); state:(B,H,P,N); conv_state:(B,W-1,conv_dim)."""
+    bsz = x1.shape[0]
+    h = norm(x1, p, cfg.norm) @ p["w_in"]
+    z, xbc, dt = _split_in(h, dm)
+    xbc1 = xbc[:, 0]                                             # (B,conv_dim)
+    window = jnp.concatenate([conv_state, xbc1[:, None, :]], axis=1)  # (B,W,C)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xbc1 = jax.nn.silu(conv_out)
+    xi = xbc1[:, :dm.d_inner].reshape(bsz, dm.ssm_h, dm.ssm_p)
+    b1 = xbc1[:, dm.d_inner:dm.d_inner + dm.ssm_n]
+    c1 = xbc1[:, dm.d_inner + dm.ssm_n:]
+    dtf = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    y, state = ssd_decode_step(state, xi, dtf, a, b1, c1)
+    y = y + xi * p["d_skip"][:, None]
+    y = y.reshape(bsz, 1, dm.d_inner).astype(x1.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["out_norm"])
+    new_conv = window[:, 1:, :].astype(conv_state.dtype)
+    return y @ p["w_out"], state, new_conv

@@ -1,0 +1,142 @@
+"""Distributed RFANN serving: range-partitioned shards via ``shard_map``.
+
+The scale-out design falls directly out of Theorem 4.7 (structural heredity):
+an attribute-contiguous shard's induced subgraph *is* the RNSG built on that
+shard, so
+
+  * shards can be **constructed independently in parallel** (provably
+    equivalent to slicing a global build, up to KNN approximation noise), and
+  * a query with range ``q.I`` only needs the shards whose attribute span
+    intersects ``q.I``; per-shard beam searches are exact RNSG searches on
+    their sub-ranges, and a top-k merge of shard results equals the global
+    range search.
+
+Execution: one shard per device along the ``data`` axis; queries are
+replicated; each device clips the query range to its shard (empty ⇒ the beam
+no-ops), runs the batched beam search, and an ``all_gather`` + top-k merge
+produces replicated results.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.beam import beam_search_batch
+from repro.core.construction import build_rnsg
+from repro.core.entry import rmq_query_jax
+
+
+def _shard_search(vecs, nbrs, attrs, rmq, dist_c, order, qv, ranges, *,
+                  k: int, ef: int):
+    """Per-device body. Leading shard dim of size 1 (shard_map slice)."""
+    vecs, nbrs, attrs = vecs[0], nbrs[0], attrs[0]
+    rmq, dist_c, order = rmq[0], dist_c[0], order[0]
+    n = attrs.shape[0]
+    lo = jnp.searchsorted(attrs, ranges[:, 0], side="left").astype(jnp.int32)
+    hi = (jnp.searchsorted(attrs, ranges[:, 1], side="right") - 1).astype(jnp.int32)
+    entry = rmq_query_jax(rmq, dist_c, jnp.minimum(lo, n - 1),
+                          jnp.clip(hi, 0, n - 1))
+    ids, dists, _ = beam_search_batch(vecs, nbrs, qv, lo, hi, entry, k=k, ef=ef)
+    orig = jnp.where(ids >= 0, order[jnp.maximum(ids, 0)], -1)
+    dists = jnp.where(ids >= 0, dists, jnp.inf)
+    return orig[None], dists[None]                       # (1, Q, k)
+
+
+def _merge_topk(ids, dists, k: int):
+    """(S,Q,k) -> (Q,k) global top-k."""
+    s, q, kk = ids.shape
+    flat_i = jnp.moveaxis(ids, 0, 1).reshape(q, s * kk)
+    flat_d = jnp.moveaxis(dists, 0, 1).reshape(q, s * kk)
+    nd, sel = jax.lax.top_k(-flat_d, k)
+    out_i = jnp.take_along_axis(flat_i, sel, axis=1)
+    return jnp.where(jnp.isfinite(-nd), out_i, -1), -nd
+
+
+class DistributedRFANN:
+    """Attribute-range-partitioned RNSG serving across the 'data' mesh axis."""
+
+    def __init__(self, vectors: np.ndarray, attrs: np.ndarray, *,
+                 n_shards: int, mesh=None, axis: str = "data", **build_kw):
+        order = np.argsort(attrs, kind="stable")
+        vs = np.asarray(vectors, np.float32)[order]
+        as_ = np.asarray(attrs, np.float32)[order]
+        n = len(as_)
+        per = n // n_shards
+        assert per * n_shards == n, "pad the corpus to a shard multiple"
+        self.mesh = mesh
+        self.axis = axis
+        self.n_shards = n_shards
+        graphs = []
+        for s in range(n_shards):      # independently buildable (heredity)
+            sl = slice(s * per, (s + 1) * per)
+            g = build_rnsg(vs[sl], as_[sl], **build_kw)
+            graphs.append((g, order[sl]))
+        self.shard_span = np.asarray(
+            [[g.attrs[0], g.attrs[-1]] for g, _ in graphs], np.float32)
+        stack = lambda f: jnp.asarray(np.stack([f(g, o) for g, o in graphs]))  # noqa: E731
+        self.vecs = stack(lambda g, o: g.vecs)
+        self.nbrs = stack(lambda g, o: g.nbrs)
+        self.attrs = stack(lambda g, o: g.attrs)
+        self.rmq = stack(lambda g, o: g.rmq)
+        self.dist_c = stack(lambda g, o: g.dist_c)
+        self.order = stack(lambda g, o: o[g.order].astype(np.int32))
+        self.build_seconds = sum(g.build_seconds for g, _ in graphs)
+
+    @property
+    def index_bytes(self) -> int:
+        return (self.nbrs.nbytes + self.rmq.nbytes + self.dist_c.nbytes)
+
+    # ------------------------------------------------------------------
+    def _search_fn(self, k: int, ef: int):
+        body = partial(_shard_search, k=k, ef=ef)
+
+        if self.mesh is None:
+            def local(vecs, nbrs, attrs, rmq, dist_c, order, qv, ranges):
+                outs = [body(vecs[s:s + 1], nbrs[s:s + 1], attrs[s:s + 1],
+                             rmq[s:s + 1], dist_c[s:s + 1], order[s:s + 1],
+                             qv, ranges) for s in range(self.n_shards)]
+                ids = jnp.concatenate([o[0] for o in outs])
+                ds = jnp.concatenate([o[1] for o in outs])
+                return _merge_topk(ids, ds, k)
+            return jax.jit(local)
+
+        ax = self.axis
+
+        def sharded(vecs, nbrs, attrs, rmq, dist_c, order, qv, ranges):
+            ids, ds = body(vecs, nbrs, attrs, rmq, dist_c, order, qv, ranges)
+            ids = jax.lax.all_gather(ids[0], ax)         # (S, Q, k)
+            ds = jax.lax.all_gather(ds[0], ax)
+            return _merge_topk(ids, ds, k)
+
+        shard_spec = P(ax)
+        rep = P()
+        fn = jax.shard_map(
+            sharded, mesh=self.mesh,
+            in_specs=(shard_spec,) * 6 + (rep, rep),
+            out_specs=(rep, rep), check_vma=False)
+        return jax.jit(fn)
+
+    def search(self, queries: np.ndarray, attr_ranges: np.ndarray, *,
+               k: int = 10, ef: int = 64) -> Tuple[np.ndarray, np.ndarray]:
+        fn = self._search_fn(k, max(ef, k))
+        ids, dists = fn(self.vecs, self.nbrs, self.attrs, self.rmq,
+                        self.dist_c, self.order,
+                        jnp.asarray(queries, jnp.float32),
+                        jnp.asarray(attr_ranges, jnp.float32))
+        return np.asarray(ids), np.asarray(dists)
+
+    # ------------------------------------------------------------------
+    def lower_for_dryrun(self, nq: int, d: int, k: int = 10, ef: int = 64):
+        """Compile-only proof that the sharded search lowers on a real mesh."""
+        fn = self._search_fn(k, ef)
+        args = (self.vecs, self.nbrs, self.attrs, self.rmq, self.dist_c,
+                self.order,
+                jax.ShapeDtypeStruct((nq, d), jnp.float32),
+                jax.ShapeDtypeStruct((nq, 2), jnp.float32))
+        sds = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in args[:6]]
+        return jax.jit(fn).lower(*sds, *args[6:])

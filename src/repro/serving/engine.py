@@ -1,0 +1,83 @@
+"""Batched RFANN serving engine: dynamic batching over a request queue.
+
+Requests (query vector + attribute range) are coalesced into batches of up to
+``max_batch`` or ``max_wait_ms``, executed on the single RNSG index (one jit'd
+batched beam search), and resolved through per-request futures.  This is the
+paper's system in its deployment form.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class EngineStats:
+    served: int = 0
+    batches: int = 0
+    latencies_ms: List[float] = field(default_factory=list)
+
+    def summary(self) -> dict:
+        lat = np.asarray(self.latencies_ms) if self.latencies_ms else np.zeros(1)
+        return dict(served=self.served, batches=self.batches,
+                    mean_batch=self.served / max(self.batches, 1),
+                    p50_ms=float(np.percentile(lat, 50)),
+                    p95_ms=float(np.percentile(lat, 95)),
+                    p99_ms=float(np.percentile(lat, 99)))
+
+
+class RFANNEngine:
+    def __init__(self, index, *, k: int = 10, ef: int = 64,
+                 max_batch: int = 64, max_wait_ms: float = 2.0):
+        self.index = index
+        self.k, self.ef = k, ef
+        self.max_batch = max_batch
+        self.max_wait = max_wait_ms / 1000.0
+        self._q: queue.Queue = queue.Queue()
+        self._stop = threading.Event()
+        self.stats = EngineStats()
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    # ------------------------------------------------------------------
+    def submit(self, query: np.ndarray, attr_range: Tuple[float, float]) -> Future:
+        fut: Future = Future()
+        self._q.put((np.asarray(query, np.float32),
+                     np.asarray(attr_range, np.float32), time.perf_counter(), fut))
+        return fut
+
+    def _loop(self):
+        while not self._stop.is_set():
+            try:
+                first = self._q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            batch = [first]
+            deadline = time.perf_counter() + self.max_wait
+            while len(batch) < self.max_batch:
+                left = deadline - time.perf_counter()
+                if left <= 0:
+                    break
+                try:
+                    batch.append(self._q.get(timeout=left))
+                except queue.Empty:
+                    break
+            qv = np.stack([b[0] for b in batch])
+            rg = np.stack([b[1] for b in batch])
+            ids, dists, _ = self.index.search(qv, rg, k=self.k, ef=self.ef)
+            now = time.perf_counter()
+            for i, (_, _, t0, fut) in enumerate(batch):
+                self.stats.latencies_ms.append((now - t0) * 1e3)
+                fut.set_result((ids[i], dists[i]))
+            self.stats.served += len(batch)
+            self.stats.batches += 1
+
+    def close(self):
+        self._stop.set()
+        self._thread.join(timeout=2.0)

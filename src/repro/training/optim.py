@@ -1,0 +1,65 @@
+"""Handwritten AdamW + schedules + global-norm clipping (no optax)."""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params, opt_dtype: str = "float32") -> Dict:
+    dt = jnp.dtype(opt_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)  # noqa: E731
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+def adamw_update(params, grads, opt, lr, *, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1) -> Tuple[Dict, Dict]:
+    step = opt["step"] + 1
+    sf = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** sf
+    bc2 = 1.0 - b2 ** sf
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        update = (mf / bc1) / (jnp.sqrt(vf / bc2) + eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            update = update + weight_decay * p.astype(jnp.float32)
+        pn = p.astype(jnp.float32) - lr * update
+        return pn.astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt["m"])
+    flat_v = jax.tree.leaves(opt["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}
+
+
+def cosine_schedule(step, *, base_lr=3e-4, warmup=100, total=10000, min_frac=0.1):
+    s = step.astype(jnp.float32)
+    warm = s / max(warmup, 1)
+    prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(math.pi * prog))
+    return base_lr * jnp.where(s < warmup, warm, cos)

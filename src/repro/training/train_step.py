@@ -1,0 +1,73 @@
+"""Train-step factory: value_and_grad → clip → AdamW, with optional
+microbatch gradient accumulation and optional cross-pod gradient compression."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.optim import (adamw_init, adamw_update, clip_by_global_norm,
+                                  cosine_schedule)
+
+
+def init_train_state(model, rng) -> Dict:
+    params = model.init(rng)
+    return {"params": params, "opt": adamw_init(params, model.cfg.opt_dtype)}
+
+
+def train_state_shapes(model) -> Dict:
+    """Abstract train state for the dry-run (no allocation)."""
+    pshapes = model.param_shapes()
+    dt = jnp.dtype(model.cfg.opt_dtype)
+    mv = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, dt), pshapes)
+    return {"params": pshapes,
+            "opt": {"m": mv, "v": jax.tree.map(lambda s: s, mv),
+                    "step": jax.ShapeDtypeStruct((), jnp.int32)}}
+
+
+def build_train_step(model, *, lr_schedule: Optional[Callable] = None,
+                     max_grad_norm: float = 1.0, micro_batches: int = 1,
+                     grad_transform: Optional[Callable] = None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    micro_batches > 1: batch leaves must carry a leading (micro, ...) dim;
+    gradients are accumulated with a lax.scan before the optimizer update.
+    grad_transform: optional hook (e.g. cross-pod int8 compression)."""
+    lr_schedule = lr_schedule or cosine_schedule
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def train_step(state, batch):
+        params, opt = state["params"], state["opt"]
+        if micro_batches > 1:
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                loss, _, grads = grads_of(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / micro_batches,
+                    g_acc, grads)
+                return (g_acc, l_acc + loss / micro_batches), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(acc_body, (g0, jnp.zeros(())), batch)
+            metrics = {"loss": loss, "aux": jnp.zeros(())}
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        lr = lr_schedule(opt["step"])
+        new_params, new_opt = adamw_update(params, grads, opt, lr)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr,
+                       step=new_opt["step"].astype(jnp.float32))
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step

@@ -1,0 +1,57 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ops import gather_dist, l2dist
+from repro.kernels.ref import gather_dist_ref, l2dist_ref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("q,n,d", [
+    (1, 1, 1), (4, 7, 3), (128, 128, 128), (128, 256, 64),
+    (100, 300, 130), (257, 129, 515), (33, 1000, 96),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_l2dist_shapes_dtypes(q, n, d, dtype):
+    a = jnp.asarray(RNG.standard_normal((q, d)), dtype)
+    b = jnp.asarray(RNG.standard_normal((n, d)), dtype)
+    got = l2dist(a, b)
+    want = l2dist_ref(a, b)
+    tol = 1e-3 if dtype == jnp.float32 else 0.15
+    assert got.shape == (q, n)
+    assert float(jnp.max(jnp.abs(got - want))) < tol * max(1.0, d / 64)
+
+
+@pytest.mark.parametrize("n,m,d", [(50, 8, 16), (1000, 32, 64), (77, 5, 130),
+                                   (8, 64, 256)])
+def test_gather_dist_shapes(n, m, d):
+    x = jnp.asarray(RNG.standard_normal((n, d)), jnp.float32)
+    ids = jnp.asarray(RNG.integers(-2, n + 2, m), jnp.int32)   # incl. OOB
+    q = jnp.asarray(RNG.standard_normal(d), jnp.float32)
+    got = gather_dist(x, ids, q)
+    want = gather_dist_ref(x, ids, q)
+    assert np.allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 40), st.integers(1, 70),
+       st.integers(0, 2**31 - 1))
+def test_l2dist_property(q, n, d, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((q, d)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    got = np.asarray(l2dist(a, b))
+    want = np.asarray(l2dist_ref(a, b))
+    assert got.shape == want.shape
+    assert np.allclose(got, want, rtol=1e-3, atol=1e-3)
+    assert (got >= 0).all()
+
+
+def test_l2dist_zero_distance_on_identical_rows():
+    x = jnp.asarray(RNG.standard_normal((32, 48)), jnp.float32)
+    dmat = np.asarray(l2dist(x, x))
+    assert np.allclose(np.diag(dmat), 0.0, atol=1e-4)

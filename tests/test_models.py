@@ -1,0 +1,185 @@
+"""Model zoo: per-arch smoke (reduced config — forward/train step, shapes, no
+NaNs), prefill/decode consistency, attention & SSD & MoE oracles."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import get_config, get_smoke_config, list_archs
+from repro.launch.specs import concrete_batch
+from repro.models.attention import flash_attention
+from repro.models.lm import Model
+from repro.models.moe import _moe_local
+from repro.models.params import ShardPlan
+from repro.models.ssm import ssd_chunked
+from repro.kernels.ref import flash_attention_ref
+
+RNG = np.random.default_rng(0)
+ARCHS = list_archs()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = concrete_batch(cfg, "train", 2, 32, RNG)
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert np.isfinite(float(loss))
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_prefill_decode_consistency(arch):
+    cfg = dataclasses.replace(get_smoke_config(arch), dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.key(1))
+    B, S = 2, 16
+    batch = concrete_batch(cfg, "prefill", B, S, RNG)
+    pre = jax.jit(lambda p, b: model.prefill(p, b, cache_len=S + 4))
+    dec = jax.jit(model.decode)
+    cache, logits = pre(params, batch)
+    assert logits.shape[0] == B
+    nxt = jnp.argmax(logits[:, :cfg.vocab_size], -1).astype(jnp.int32)
+    l_dec, cache = dec(params, cache, jnp.asarray(S, jnp.int32), nxt)
+    toks2 = jnp.concatenate([batch["tokens"], nxt[:, None]], axis=1)
+    _, l_full = pre(params, dict(batch, tokens=toks2))
+    assert float(jnp.max(jnp.abs(l_dec - l_full))) < 1e-3, arch
+
+
+def test_smoke_loss_decreases_under_training():
+    from repro.launch.train import main as train_main
+    state, losses = train_main(["--arch", "qwen1.5-4b", "--steps", "30",
+                                "--batch", "4", "--seq", "64",
+                                "--log-every", "1000"])
+    assert losses[-1] < losses[0] - 0.1, losses[::10]
+
+
+def test_shape_applicability_contract():
+    cells = {(a, s): SHAPES[s].applicable(get_config(a))
+             for a in ARCHS for s in SHAPES}
+    assert sum(1 for v in cells.values() if v) == 32        # 40 - 8 long skips
+    assert cells[("mamba2-780m", "long_500k")]
+    assert cells[("jamba-1.5-large-398b", "long_500k")]
+    assert not cells[("llama3-8b", "long_500k")]
+
+
+# ---------------------------------------------------------------- attention
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("chunks", [(64, 64), (16, 32), (128, 8)])
+def test_flash_attention_matches_ref(causal, chunks):
+    B, S, H, hd = 2, 50, 4, 16
+    q = jnp.asarray(RNG.standard_normal((B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, S, H, hd)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, S, H, hd)), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, q_chunk=chunks[0],
+                          kv_chunk=chunks[1])
+    want = flash_attention_ref(q, k, v, causal=causal)
+    assert float(jnp.max(jnp.abs(got - want))) < 1e-3
+
+
+def test_flash_attention_unroll_and_blockskip_match_scan():
+    B, S, H, hd = 1, 64, 2, 8
+    q = jnp.asarray(RNG.standard_normal((B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, S, H, hd)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, S, H, hd)), jnp.float32)
+    base = flash_attention(q, k, v, q_chunk=16, kv_chunk=16)
+    unr = flash_attention(q, k, v, q_chunk=16, kv_chunk=16, unroll=True)
+    skip = flash_attention(q, k, v, q_chunk=16, kv_chunk=16, unroll=True,
+                           block_skip=True)
+    assert float(jnp.max(jnp.abs(base - unr))) < 1e-5
+    assert float(jnp.max(jnp.abs(base - skip))) < 1e-5
+
+
+def test_flash_attention_gqa_and_window():
+    B, S, H, Kh, hd = 1, 40, 8, 2, 8
+    q = jnp.asarray(RNG.standard_normal((B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, S, Kh, hd)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, S, Kh, hd)), jnp.float32)
+    kr = jnp.repeat(k, H // Kh, axis=2)
+    vr = jnp.repeat(v, H // Kh, axis=2)
+    got = flash_attention(q, k, v, q_chunk=16, kv_chunk=16)
+    want = flash_attention_ref(q, kr, vr, causal=True)
+    assert float(jnp.max(jnp.abs(got - want))) < 1e-3
+    # sliding window == explicit mask reference
+    w = 8
+    gotw = flash_attention(q, kr, vr, window=w, q_chunk=16, kv_chunk=16)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kr) / np.sqrt(hd)
+    i = jnp.arange(S)
+    mask = (i[None, :] <= i[:, None]) & (i[None, :] > i[:, None] - w)
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    wantw = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(logits, -1), vr)
+    assert float(jnp.max(jnp.abs(gotw - wantw))) < 1e-3
+
+
+# ---------------------------------------------------------------- SSD oracle
+def _ssd_sequential(x, dt, a, bm, cm):
+    """Naive state-space recurrence oracle."""
+    b, s, h, p = x.shape
+    n = bm.shape[-1]
+    state = np.zeros((b, h, p, n), np.float32)
+    ys = []
+    for t in range(s):
+        da = np.exp(dt[:, t] * a)                                  # (B,H)
+        state = state * da[:, :, None, None] + np.einsum(
+            "bhp,bn->bhpn", x[:, t] * dt[:, t][..., None], bm[:, t])
+        ys.append(np.einsum("bhpn,bn->bhp", state, cm[:, t]))
+    return np.stack(ys, 1), state
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 32])
+def test_ssd_chunked_matches_sequential(chunk):
+    b, s, h, p, n = 2, 32, 3, 4, 5
+    x = RNG.standard_normal((b, s, h, p)).astype(np.float32)
+    dt = (0.1 + RNG.random((b, s, h))).astype(np.float32)
+    a = -(0.5 + RNG.random(h)).astype(np.float32)
+    bm = RNG.standard_normal((b, s, n)).astype(np.float32)
+    cm = RNG.standard_normal((b, s, n)).astype(np.float32)
+    y, st = ssd_chunked(jnp.asarray(x), jnp.asarray(dt), jnp.asarray(a),
+                        jnp.asarray(bm), jnp.asarray(cm), chunk=chunk)
+    y_ref, st_ref = _ssd_sequential(x, dt, a, bm, cm)
+    assert np.allclose(np.asarray(y), y_ref, rtol=1e-3, atol=1e-3)
+    assert np.allclose(np.asarray(st), st_ref, rtol=1e-3, atol=1e-3)
+
+
+def test_ssd_unroll_matches_scan():
+    b, s, h, p, n = 1, 24, 2, 3, 4
+    x = RNG.standard_normal((b, s, h, p)).astype(np.float32)
+    dt = (0.1 + RNG.random((b, s, h))).astype(np.float32)
+    a = -(0.5 + RNG.random(h)).astype(np.float32)
+    bm = RNG.standard_normal((b, s, n)).astype(np.float32)
+    cm = RNG.standard_normal((b, s, n)).astype(np.float32)
+    y1, s1 = ssd_chunked(jnp.asarray(x), jnp.asarray(dt), jnp.asarray(a),
+                         jnp.asarray(bm), jnp.asarray(cm), chunk=8)
+    y2, s2 = ssd_chunked(jnp.asarray(x), jnp.asarray(dt), jnp.asarray(a),
+                         jnp.asarray(bm), jnp.asarray(cm), chunk=8, unroll=True)
+    assert np.allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+    assert np.allclose(np.asarray(s1), np.asarray(s2), atol=1e-5)
+
+
+# ---------------------------------------------------------------- MoE oracle
+def test_moe_sort_dispatch_matches_dense_oracle():
+    t, d, f, e, k = 64, 8, 16, 4, 2
+    xt = jnp.asarray(RNG.standard_normal((t, d)), jnp.float32)
+    router = jnp.asarray(RNG.standard_normal((d, e)), jnp.float32)
+    w_in = jnp.asarray(RNG.standard_normal((e, d, f)) * 0.1, jnp.float32)
+    w_gate = jnp.asarray(RNG.standard_normal((e, d, f)) * 0.1, jnp.float32)
+    w_out = jnp.asarray(RNG.standard_normal((e, f, d)) * 0.1, jnp.float32)
+    # capacity_factor = e ⇒ no drops ⇒ must equal the dense oracle
+    y, aux = _moe_local(xt, router, w_in, w_gate, w_out, k=k, cf=float(e))
+    probs = jax.nn.softmax(xt @ router, -1)
+    gates, eidx = jax.lax.top_k(probs, k)
+    gates = gates / jnp.sum(gates, -1, keepdims=True)
+    dense = jnp.zeros_like(xt)
+    for kk in range(k):
+        for ee in range(e):
+            sel = (eidx[:, kk] == ee)
+            h = jax.nn.silu(xt @ w_gate[ee]) * (xt @ w_in[ee])
+            yo = h @ w_out[ee]
+            dense = dense + jnp.where(sel[:, None], gates[:, kk:kk + 1] * yo, 0)
+    assert float(jnp.max(jnp.abs(y - dense))) < 1e-4

@@ -1,0 +1,125 @@
+"""Property tests for the paper's theorems (hypothesis + exact oracles)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.construction import build_rnsg
+from repro.core.exact import (exact_mrng, exact_rrng, greedy_monotonic_reachable,
+                              induced, pair_dists, strongly_connected)
+from repro.core.pruning import rrng_prune_np
+
+
+def _points(n, d, seed):
+    rng = np.random.default_rng(seed)
+    v = rng.standard_normal((n, d)).astype(np.float32)
+    # ids are attribute ranks: vectors independent of attrs ⇒ any order works
+    return v
+
+
+pointsets = st.builds(_points,
+                      st.integers(min_value=4, max_value=26),
+                      st.integers(min_value=2, max_value=6),
+                      st.integers(min_value=0, max_value=10_000))
+
+
+@settings(max_examples=20, deadline=None)
+@given(pointsets)
+def test_thm_3_3_monotonic_searchability(vecs):
+    """Every pair of RRNG nodes is connected by a strictly-decreasing greedy walk."""
+    adj = exact_rrng(vecs)
+    n = len(vecs)
+    rng = np.random.default_rng(0)
+    pairs = rng.integers(0, n, (min(20, n * n), 2))
+    for s, t in pairs:
+        if s == t:
+            continue
+        assert greedy_monotonic_reachable(vecs, adj, int(s), int(t)), (s, t)
+
+
+@settings(max_examples=20, deadline=None)
+@given(pointsets, st.integers(0, 1000))
+def test_thm_3_5_rrng_heredity(vecs, seed):
+    """Induced subgraph of the RRNG == RRNG rebuilt on the interval."""
+    n = len(vecs)
+    rng = np.random.default_rng(seed)
+    lo = int(rng.integers(0, n - 1))
+    hi = int(rng.integers(lo + 1, n))
+    adj = exact_rrng(vecs)
+    sub = induced(adj, lo, hi - 1)
+    rebuilt = exact_rrng(vecs[lo:hi])
+    assert np.array_equal(sub, rebuilt)
+
+
+def test_mrng_lacks_heredity():
+    """Fig.1b: there exist pointsets where the induced MRNG ≠ rebuilt MRNG."""
+    for seed in range(200):
+        vecs = _points(12, 2, seed)
+        adj = exact_mrng(vecs)
+        lo, hi = 2, 9
+        sub = induced(adj, lo, hi)
+        rebuilt = exact_mrng(vecs[lo:hi + 1])
+        if not np.array_equal(sub, rebuilt):
+            return  # counterexample found — MRNG is not hereditary
+    pytest.fail("no MRNG heredity counterexample found in 200 seeds")
+
+
+@settings(max_examples=15, deadline=None)
+@given(pointsets)
+def test_thm_4_3_alg1_full_candidates_equals_rrng(vecs):
+    """Algorithm 1 with C = D and m = ∞ reproduces the exact RRNG."""
+    n = len(vecs)
+    adj = exact_rrng(vecs)
+    for x in range(n):
+        got = set(rrng_prune_np(x, np.arange(n), vecs, m=10 ** 9))
+        # Definition 3.1 prunes via *witness edges from the lower endpoint*;
+        # Algorithm 1's per-node sets reproduce each node's RRNG neighborhood.
+        want = set(np.flatnonzero(adj[x]).tolist())
+        assert got == want, (x, got, want)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 100))
+def test_thm_4_6_rnsg_induced_strong_connectivity(seed):
+    """RNSG + every interval-induced subgraph stays (strongly) connected."""
+    rng = np.random.default_rng(seed)
+    n = 256
+    vecs = rng.standard_normal((n, 8)).astype(np.float32)
+    attrs = rng.random(n).astype(np.float32) + np.arange(n) * 1e-9
+    g = build_rnsg(vecs, attrs, m=8, ef_spatial=8, ef_attribute=8)
+    for _ in range(5):
+        lo = int(rng.integers(0, n - 2))
+        hi = int(rng.integers(lo + 1, n))
+        sub_n = hi - lo
+        adj = np.zeros((sub_n, sub_n), bool)
+        for i in range(sub_n):
+            for j in g.nbrs[lo + i]:
+                if lo <= j < hi:
+                    adj[i, j - lo] = True
+        # undirected reachability over the bidirectional chain guarantee
+        adj = adj | adj.T
+        assert strongly_connected(adj), (lo, hi)
+
+
+def test_thm_4_7_rnsg_heredity_with_induced_knn():
+    """RNSG built on V_I with the induced KNN graph == induced RNSG subgraph."""
+    rng = np.random.default_rng(3)
+    n, d, k = 200, 6, 12
+    vecs = rng.standard_normal((n, d)).astype(np.float32)
+    attrs = np.arange(n).astype(np.float32)
+    from repro.index.knn import exact_knn
+    _, knn = exact_knn(vecs, k)
+    ef_attr, m = 10, 8
+    g = build_rnsg(vecs, attrs, m=m, ef_attribute=ef_attr, knn_ids=knn)
+    lo, hi = 40, 160   # interval [lo, hi)
+    # induced KNN graph (global neighbors restricted to the interval)
+    ind = np.full((hi - lo, k), -1, np.int32)
+    for i in range(lo, hi):
+        js = [j - lo for j in knn[i] if lo <= j < hi]
+        ind[i - lo, :len(js)] = js
+    g_sub = build_rnsg(vecs[lo:hi], attrs[lo:hi], m=m, ef_attribute=ef_attr,
+                       knn_ids=ind)
+    # compare neighbor sets on the interval
+    for i in range(hi - lo):
+        glob = {j - lo for j in g.nbrs[lo + i] if lo <= j < hi}
+        sub = {int(j) for j in g_sub.nbrs[i] if j >= 0}
+        assert glob == sub, (i, glob, sub)
