@@ -1,0 +1,24 @@
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: test test-fast bench-quick bench-planner bench-full quickstart
+
+# tier-1 verify (the command CI runs)
+test:
+	$(PY) -m pytest -x -q
+
+# skip the slow multidevice subprocess tests
+test-fast:
+	$(PY) -m pytest -x -q --ignore=tests/test_multidevice.py
+
+bench-quick:
+	$(PY) -m benchmarks.run --only qps_recall,kernels
+
+bench-planner:
+	$(PY) -m benchmarks.run --only planner
+
+bench-full:
+	$(PY) -m benchmarks.run --full
+
+quickstart:
+	$(PY) examples/quickstart.py

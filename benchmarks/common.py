@@ -64,13 +64,15 @@ def build_seconds(ix) -> float:
     return getattr(ix, "build_seconds", 0.0)
 
 
-def timed_search(ix, qv, ranges, k, ef, repeats: int = 2):
-    ix.search(qv, ranges, k=k, ef=ef)            # warm the jit
+def timed_search(ix, qv, ranges, k, ef, repeats: int = 2, warmups: int = 1,
+                 **search_kw):
+    for _ in range(max(warmups, 1)):             # warm the jit (planner paths
+        ix.search(qv, ranges, k=k, ef=ef, **search_kw)   # may recalibrate)
     best = np.inf
     out = None
     for _ in range(repeats):
         t0 = time.perf_counter()
-        out = ix.search(qv, ranges, k=k, ef=ef)
+        out = ix.search(qv, ranges, k=k, ef=ef, **search_kw)
         best = min(best, time.perf_counter() - t0)
     return out, len(qv) / best
 

@@ -123,6 +123,45 @@ def bench_scalability(d, nq, quick):
     return rows
 
 
+def bench_planner(n, d, nq, quick):
+    """Adaptive planner vs pure-graph vs brute across selectivity regimes.
+    Narrow workloads must route to the fused range_scan (exact, faster);
+    wide workloads must stay on beam search."""
+    from repro.index.baselines import BruteForceIndex
+    vecs, attrs = dataset(n, d)
+    m = 24 if quick else 48
+    ix = RNSGIndex.build(vecs, attrs, m=m, ef_spatial=m, ef_attribute=2 * m)
+    brute = BruteForceIndex(vecs, attrs)
+    wls = {
+        "narrow_0.4pct": 0.004,
+        "narrow_1pct": 0.01,
+        "medium_10pct": 0.10,
+        "wide_50pct": 0.50,
+    }
+    k, ef = 10, 64
+    rows = []
+    for wname, frac in wls.items():
+        from repro.data.ann import selectivity_ranges
+        ranges = selectivity_ranges(attrs, nq, frac, seed=17)
+        qv = dataset(nq, d, seed=91)[0]
+        gt = gt_for(vecs, attrs, qv, ranges, k)
+        # planner warms twice: the second warm runs with a calibrated cost
+        # model, so the timed repeats see the steady-state routing
+        (pids, _, pst), pqps = timed_search(ix, qv, ranges, k, ef,
+                                            warmups=2, plan="auto")
+        (gids, _, _), gqps = timed_search(ix, qv, ranges, k, ef, plan="graph")
+        (bids, _, _), bqps = timed_search(brute, qv, ranges, k, ef)
+        for mname, ids, qps, sf in (
+                ("planner", pids, pqps, round(float(pst["scan_frac"]), 3)),
+                ("graph", gids, gqps, ""),
+                ("brute", bids, bqps, "")):
+            rows.append(dict(method=mname, workload=wname, ef=ef,
+                             recall=round(recall_at_k(ids, gt), 4),
+                             qps=round(qps, 1), scan_frac=sf))
+    emit("planner", rows, quiet=True)
+    return rows
+
+
 def bench_kernels(quick):
     """Kernel microbench (interpret mode on CPU: correctness + derived
     roofline terms; wall numbers are *not* TPU times)."""
@@ -163,7 +202,7 @@ def bench_kernels(quick):
 
 
 ALL = ["qps_recall", "construction_time", "index_size", "param_sensitivity",
-       "vary_k", "scalability", "kernels"]
+       "vary_k", "scalability", "planner", "kernels"]
 
 
 def main() -> None:
@@ -208,6 +247,23 @@ def main() -> None:
         rows = bench_scalability(d, nq, quick)
         print(f"scalability,0,qps_{rows[0]['n']}={rows[0]['qps']}"
               f"_qps_{rows[-1]['n']}={rows[-1]['qps']}")
+    if "planner" in only:
+        rows = bench_planner(n, d, nq, quick)
+        print("method,workload,ef,recall,qps,scan_frac")
+        for r in rows:
+            print(f"{r['method']},{r['workload']},{r['ef']},{r['recall']},"
+                  f"{r['qps']},{r['scan_frac']}")
+        np_ = next(r for r in rows if r["method"] == "planner"
+                   and r["workload"] == "narrow_1pct")
+        ng = next(r for r in rows if r["method"] == "graph"
+                  and r["workload"] == "narrow_1pct")
+        wp = next(r for r in rows if r["method"] == "planner"
+                  and r["workload"] == "wide_50pct")
+        print(f"planner,{1e6/np_['qps']:.1f},"
+              f"narrow_speedup_vs_graph={np_['qps']/max(ng['qps'],1e-9):.2f}x"
+              f"_narrow_recall={np_['recall']}vs{ng['recall']}"
+              f"_narrow_scan_frac={np_['scan_frac']}"
+              f"_wide_scan_frac={wp['scan_frac']}")
     if "kernels" in only:
         rows = bench_kernels(quick)
         for r in rows:

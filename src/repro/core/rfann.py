@@ -23,6 +23,7 @@ class RNSGIndex:
         self._nbrs = jnp.asarray(graph.nbrs)
         self._rmq = jnp.asarray(graph.rmq)
         self._dist_c = jnp.asarray(graph.dist_c)
+        self._executor = None          # lazy adaptive query planner
 
     # ------------------------------------------------------------------
     @classmethod
@@ -43,16 +44,39 @@ class RNSGIndex:
         hi = np.searchsorted(self.g.attrs, attr_ranges[:, 1], side="right") - 1
         return lo.astype(np.int32), hi.astype(np.int32)
 
+    @property
+    def executor(self):
+        """Lazily-built adaptive planner/executor (scan-vs-beam routing)."""
+        if self._executor is None:
+            from repro.planner import PlanExecutor, QueryPlanner
+            deg = float((self.g.nbrs >= 0).sum(1).mean())
+            planner = QueryPlanner(self.g.n, deg)
+            self._executor = PlanExecutor(self.g.vecs, self.g.nbrs,
+                                          self.g.rmq, self.g.dist_c, planner)
+        return self._executor
+
     def search(self, queries: np.ndarray, attr_ranges: np.ndarray, *,
-               k: int = 10, ef: int = 64,
-               use_kernel: bool = False) -> Tuple[np.ndarray, np.ndarray, Dict]:
+               k: int = 10, ef: int = 64, use_kernel: bool = False,
+               plan: str = "graph") -> Tuple[np.ndarray, np.ndarray, Dict]:
         """queries:(Q,d); attr_ranges:(Q,2) attribute values (inclusive).
+        plan: "graph" (pure beam search) | "auto" (cost-based scan/beam
+        routing) | "scan" / "beam" (forced strategy).
         Returns (original ids (Q,k), sq dists, stats)."""
         lo, hi = self.rank_range(np.asarray(attr_ranges, np.float32))
         return self.search_ranks(queries, lo, hi, k=k, ef=ef,
-                                 use_kernel=use_kernel)
+                                 use_kernel=use_kernel, plan=plan)
 
-    def search_ranks(self, queries, lo, hi, *, k=10, ef=64, use_kernel=False):
+    def search_ranks(self, queries, lo, hi, *, k=10, ef=64, use_kernel=False,
+                     plan="graph"):
+        if plan not in ("graph", "auto", "scan", "beam"):
+            raise ValueError(f"unknown plan {plan!r}: "
+                             "expected graph|auto|scan|beam")
+        if plan != "graph":
+            ids, dists, stats = self.executor.execute(
+                queries, lo, hi, k=k, ef=ef, mode=plan,
+                use_kernel=use_kernel)
+            orig = np.where(ids >= 0, self.g.order[np.maximum(ids, 0)], -1)
+            return orig, dists, stats
         qv = jnp.asarray(queries, jnp.float32)
         lo_j = jnp.asarray(lo)
         hi_j = jnp.asarray(hi)

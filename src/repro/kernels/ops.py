@@ -10,6 +10,7 @@ import jax
 
 from repro.kernels.gather_dist import gather_dist_pallas
 from repro.kernels.l2dist import l2dist_pallas
+from repro.kernels.range_scan import range_scan_pallas
 
 
 def _interpret() -> bool:
@@ -24,3 +25,10 @@ def l2dist(q: jax.Array, x: jax.Array, **kw) -> jax.Array:
 def gather_dist(x: jax.Array, ids: jax.Array, q: jax.Array) -> jax.Array:
     """Fused gather+score of M neighbor rows against one query."""
     return gather_dist_pallas(x, ids, q, interpret=_interpret())
+
+
+def range_scan(x: jax.Array, starts: jax.Array, lens: jax.Array,
+               q: jax.Array, *, bucket: int, k: int):
+    """Per-query masked scan + top-k over contiguous rank slices of x."""
+    return range_scan_pallas(x, starts, lens, q, bucket=bucket, k=k,
+                             interpret=_interpret())

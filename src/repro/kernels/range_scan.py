@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: fused brute-force scan over a contiguous rank slice.
+
+The planner's exact strategy for highly selective ranges: ids are attribute
+ranks, so the candidate set of a range query is the contiguous slice
+``x[L : R+1]`` and an exact masked L2 scan + top-k beats graph traversal when
+the slice is small.
+
+Each query carries its own ``(start, len)``; the per-query window start is
+*scalar-prefetched* so the BlockSpec index_map steers each grid step's DMA to
+the right row-block of X.  Window starts are aligned down to the row-tile
+(``tb``) boundary and one extra row-block is appended, so a bucket of length B
+is served by ``ceil(B/tb)+1`` fixed-shape blocks regardless of alignment;
+positions outside ``[start, start+len)`` are masked to +inf by absolute rank.
+
+Grid = (Q, row-blocks, d-chunks); the d-axis is the innermost "arbitrary"
+dimension accumulating qn − 2·qᵀx + xn into the (1, tb) output block in VMEM
+(same scheme as ``l2dist``); the mask is applied on the last d-step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def window_rows(bucket: int, tb: int = 128) -> int:
+    """Rows actually scanned for a bucket: ceil(bucket/tb) blocks plus one
+    extra block so any start alignment is covered (single source of truth —
+    the kernel, its jnp oracle, and the planner cost model all use this)."""
+    return (-(-bucket // tb) + 1) * tb
+
+
+def _kernel(starts_ref, lens_ref, x_ref, q_ref, o_ref, *, nd: int, tb: int):
+    i = pl.program_id(0)          # query
+    j = pl.program_id(1)          # row block within the window
+    kd = pl.program_id(2)         # d-chunk
+
+    @pl.when(kd == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)            # (tb, td)
+    q = q_ref[...].astype(jnp.float32)            # (1, td)
+    dot = jax.lax.dot_general(q, x, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    o_ref[...] += -2.0 * dot
+    o_ref[...] += jnp.sum(q * q, axis=1, keepdims=True)
+    o_ref[...] += jnp.sum(x * x, axis=1)[None, :]
+
+    @pl.when(kd == nd - 1)
+    def _fin():
+        start = starts_ref[i]
+        ln = lens_ref[i]
+        base = (start // tb) * tb
+        rank = base + j * tb + jax.lax.broadcasted_iota(jnp.int32, (1, tb), 1)
+        valid = (rank >= start) & (rank < start + ln)
+        o_ref[...] = jnp.where(valid, jnp.maximum(o_ref[...], 0.0), jnp.inf)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bucket", "k", "tb", "td", "interpret"))
+def range_scan_pallas(x: jax.Array, starts: jax.Array, lens: jax.Array,
+                      q: jax.Array, *, bucket: int, k: int, tb: int = 128,
+                      td: int = 512, interpret: bool = False):
+    """x:(n_pad,d_pad) f32 rank-ordered, n_pad % tb == 0, d_pad % 128 == 0;
+    starts/lens:(Q,) i32 per-query rank windows (len ≤ bucket); q:(Q,d_pad).
+    Returns (ids:(Q,k) i32 absolute ranks (-1 pad), dists:(Q,k) f32)."""
+    n_pad, d_pad = x.shape
+    Q = q.shape[0]
+    td = d_pad if d_pad <= td else 128
+    nd = d_pad // td
+    w = window_rows(bucket, tb)
+    nb = w // tb
+    max_blk = n_pad // tb - 1
+    starts = starts.astype(jnp.int32)
+    lens = lens.astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(Q, nb, nd),
+        in_specs=[
+            pl.BlockSpec((tb, td),
+                         lambda i, j, kd, s_ref, l_ref:
+                         (jnp.minimum(s_ref[i] // tb + j, max_blk), kd)),
+            pl.BlockSpec((1, td), lambda i, j, kd, s_ref, l_ref: (i, kd)),
+        ],
+        out_specs=pl.BlockSpec((1, tb), lambda i, j, kd, s_ref, l_ref: (i, j)),
+    )
+    dists = pl.pallas_call(
+        functools.partial(_kernel, nd=nd, tb=tb),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Q, w), jnp.float32),
+        interpret=interpret,
+    )(starts, lens, x, q)
+
+    neg, idx = jax.lax.top_k(-dists, k)
+    base = (starts // tb) * tb
+    ids = jnp.where(jnp.isfinite(neg), base[:, None] + idx, -1)
+    return ids.astype(jnp.int32), -neg

@@ -35,9 +35,10 @@ def serve_rfann(args):
     print("[serve] building RNSG index ...")
     idx = RNSGIndex.build(vecs, attrs, m=args.m, ef_spatial=32, ef_attribute=48)
     print(f"[serve] {idx.stats()}")
-    idx.search(qv[:8], ranges[:8], k=args.k, ef=args.ef)    # warm the jit
+    idx.search(qv[:8], ranges[:8], k=args.k, ef=args.ef,
+               plan=args.plan)                              # warm the jit
 
-    engine = RFANNEngine(idx, k=args.k, ef=args.ef,
+    engine = RFANNEngine(idx, k=args.k, ef=args.ef, plan=args.plan,
                          max_batch=args.max_batch, max_wait_ms=2.0)
     rng = np.random.default_rng(0)
     futs = []
@@ -96,6 +97,8 @@ def main(argv=None):
     ap.add_argument("--ef", type=int, default=64)
     ap.add_argument("--m", type=int, default=32)
     ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--plan", choices=["auto", "graph", "scan", "beam"],
+                    default="auto", help="query-planner strategy routing")
     ap.add_argument("--new-tokens", type=int, default=16)
     args = ap.parse_args(argv)
     if args.mode == "rfann":

@@ -72,6 +72,16 @@ REPLICA_RULES: Dict[Optional[str], Tuple] = {
 STRATEGIES = {"tp": DEFAULT_RULES, "fsdp": FSDP_RULES, "replica": REPLICA_RULES}
 
 
+def abstract_mesh(axis_sizes: Sequence[int], axis_names: Sequence[str]):
+    """Version-portable AbstractMesh: jax ≤ 0.4.x takes one tuple of
+    (name, size) pairs, jax ≥ 0.5 takes (axis_sizes, axis_names)."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+    except TypeError:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+
+
 def _alternatives(entry) -> Tuple[Tuple[str, ...], ...]:
     if not entry:
         return ()

@@ -1,0 +1,71 @@
+"""Online-calibrated cost model: fused range scan vs graph beam search.
+
+Costs are expressed in *beam distance units* (one gather-expanded neighbor
+distance ≡ 1).  A row scanned inside the fused ``range_scan`` kernel is much
+cheaper — it is one row of a batched MXU matmul rather than a dependent
+gather inside a sequential ``while_loop`` — so it is weighted by
+``scan_unit`` < 1.
+
+Two quantities are calibrated online:
+
+* ``ndist_per_ef`` — predicted beam distance evaluations per unit of ``ef``,
+  an EMA over the ``ndist`` stats every beam batch already returns (prior:
+  the graph's mean out-degree, i.e. ndist ≈ ef · m̄).
+* ``scan_unit`` — refined from observed per-unit wall times of executed scan
+  and beam partitions (warm calls only; the executor skips the first call of
+  each jit signature so compile time never poisons the estimate).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+
+class CostModel:
+    def __init__(self, mean_degree: float, *, scan_unit: float = 0.125,
+                 decay: float = 0.9):
+        self.scan_unit = float(scan_unit)
+        self.beam_unit = 1.0
+        self.ndist_per_ef = float(max(mean_degree, 1.0))
+        self.decay = float(decay)
+        self.beam_obs = 0
+        self._scan_us: Optional[float] = None    # wall us per scanned row
+        self._beam_us: Optional[float] = None    # wall us per beam distance
+
+    # ------------------------------------------------------------- predict
+    def predict_beam_units(self, ef: int) -> float:
+        return self.beam_unit * self.ndist_per_ef * float(ef)
+
+    def predict_scan_units(self, window_rows: int) -> float:
+        return self.scan_unit * float(window_rows)
+
+    # ----------------------------------------------------------- calibrate
+    def update_beam(self, ndist_mean: float, ef: int) -> None:
+        """Feed observed per-query distance evaluations from a beam batch."""
+        if ef <= 0 or not (ndist_mean >= 0):
+            return
+        r = float(ndist_mean) / float(ef)
+        a = self.decay if self.beam_obs else 0.0   # first obs replaces prior
+        self.ndist_per_ef = a * self.ndist_per_ef + (1.0 - a) * r
+        self.beam_obs += 1
+
+    def observe_wall(self, strategy: str, units_per_query: float,
+                     seconds: float, nq: int) -> None:
+        """Feed measured wall time of one executed (warm) partition."""
+        if nq <= 0 or units_per_query <= 0 or seconds <= 0:
+            return
+        per_unit = seconds * 1e6 / nq / units_per_query
+        if strategy == "scan":
+            self._scan_us = per_unit if self._scan_us is None else \
+                self.decay * self._scan_us + (1.0 - self.decay) * per_unit
+        else:
+            self._beam_us = per_unit if self._beam_us is None else \
+                self.decay * self._beam_us + (1.0 - self.decay) * per_unit
+        if self._scan_us and self._beam_us:
+            # re-anchor the relative per-unit weight on real hardware timings
+            self.scan_unit = self._scan_us / self._beam_us
+
+    def snapshot(self) -> dict:
+        return dict(scan_unit=round(self.scan_unit, 5),
+                    ndist_per_ef=round(self.ndist_per_ef, 2),
+                    beam_obs=self.beam_obs,
+                    scan_us=self._scan_us, beam_us=self._beam_us)

@@ -1,0 +1,141 @@
+"""Batched plan executor: one fixed-shape jit dispatch per partition, results
+stitched back in request order.
+
+Scan partitions go to the fused Pallas ``range_scan`` kernel over the padded
+rank slice; beam partitions go to the existing ``beam_search_batch`` with the
+partition's bucketed ``ef``.  Per-partition batch sizes are padded to pow2 —
+scan pads with empty windows (masked, ~free), beam pads by duplicating the
+last real query (a duplicate lane adds no extra ``while_loop`` iterations
+under vmap, unlike a synthetic query that converges on a different schedule).
+
+After every dispatch the executor feeds the cost model: observed ``ndist``
+from beam stats, and warm-call wall times per work unit (the first call of
+each jit signature is excluded so compile time never enters calibration).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.beam import beam_search_batch
+from repro.core.entry import rmq_query_jax
+from repro.kernels.ops import range_scan
+from repro.planner.bucketing import ROW_TILE, window_rows
+from repro.planner.planner import QueryPlanner
+
+INF = np.float32(np.inf)
+
+
+class PlanExecutor:
+    def __init__(self, vecs: np.ndarray, nbrs, rmq, dist_c,
+                 planner: QueryPlanner, *, use_kernel: bool = False):
+        self.planner = planner
+        self.tb = ROW_TILE          # must match the range_scan kernel tile
+        self._vecs = jnp.asarray(vecs, jnp.float32)
+        self._nbrs = jnp.asarray(nbrs)
+        self._rmq = jnp.asarray(rmq)
+        self._dist_c = jnp.asarray(dist_c)
+        self.use_kernel = use_kernel
+        n, d = self._vecs.shape
+        self.n, self.d = n, d
+        self.d_pad = -(-d // 128) * 128
+        n_pad = -(-n // self.tb) * self.tb
+        # one-time padded copy for the scan kernel (rows→tb, cols→lane tile)
+        self._x_pad = jnp.pad(self._vecs,
+                              ((0, n_pad - n), (0, self.d_pad - d)))
+        self._warm: Set[Tuple] = set()
+
+    # ------------------------------------------------------------------
+    def execute(self, qv, lo, hi, *, k: int, ef: int, mode: str = "auto",
+                use_kernel: bool = None):
+        """qv:(Q,d); lo/hi:(Q,) rank intervals. Returns (ids:(Q,k) rank ids,
+        dists:(Q,k), stats) in request order."""
+        if use_kernel is None:
+            use_kernel = self.use_kernel
+        qv = np.asarray(qv, np.float32)
+        lo = np.asarray(lo, np.int64)
+        hi = np.asarray(hi, np.int64)
+        q = len(qv)
+        plan = self.planner.plan_batch(lo, hi, k=k, ef=ef, mode=mode)
+        out_ids = np.full((q, k), -1, np.int32)
+        out_d = np.full((q, k), INF, np.float32)
+        hops = np.zeros(q, np.int32)
+        ndist = np.zeros(q, np.int32)
+
+        for part in plan.partitions:
+            idx = part.indices
+            if part.kind == "scan":
+                ids_p, d_p, units = self._run_scan(qv, lo, hi, idx,
+                                                   part.param, part.pad_q, k)
+                ndist[idx] = units
+            else:
+                ids_p, d_p, st = self._run_beam(qv, lo, hi, idx,
+                                                part.param, part.pad_q, k,
+                                                calibrate=(mode == "auto"),
+                                                use_kernel=use_kernel)
+                hops[idx] = st["hops"]
+                ndist[idx] = st["ndist"]
+            out_ids[idx] = ids_p
+            out_d[idx] = d_p
+
+        stats = {"hops": hops, "ndist": ndist,
+                 "strategy": plan.strategy, "scan_frac": plan.scan_frac}
+        return out_ids, out_d, stats
+
+    # ------------------------------------------------------------------
+    def _run_scan(self, qv, lo, hi, idx, bucket: int, pad_q: int, k: int):
+        nq = len(idx)
+        starts = np.zeros(pad_q, np.int32)
+        lens = np.zeros(pad_q, np.int32)
+        starts[:nq] = lo[idx]
+        lens[:nq] = np.clip(hi[idx] - lo[idx] + 1, 0, bucket)
+        qp = np.zeros((pad_q, self.d_pad), np.float32)
+        qp[:nq, :self.d] = qv[idx]
+        sig = ("scan", bucket, pad_q, k)
+        t0 = time.perf_counter()
+        ids, d = range_scan(self._x_pad, jnp.asarray(starts),
+                            jnp.asarray(lens), jnp.asarray(qp),
+                            bucket=bucket, k=k)
+        ids = np.asarray(ids)[:nq]
+        d = np.asarray(d)[:nq]
+        dt = time.perf_counter() - t0
+        units = window_rows(bucket, self.tb)
+        if sig in self._warm:
+            # the dispatch did pad_q windows of work, not nq: normalize by
+            # pad_q so calibration measures the kernel, not the padding ratio
+            self.planner.cost.observe_wall("scan", units, dt, pad_q)
+        self._warm.add(sig)
+        return ids, d, units
+
+    def _run_beam(self, qv, lo, hi, idx, ef: int, pad_q: int, k: int, *,
+                  calibrate: bool, use_kernel: bool = False):
+        nq = len(idx)
+        pad = np.concatenate([idx, np.repeat(idx[-1:], pad_q - nq)])
+        lo_j = jnp.asarray(np.clip(lo[pad], 0, self.n - 1).astype(np.int32))
+        hi_j = jnp.asarray(np.clip(hi[pad], 0, self.n - 1).astype(np.int32))
+        entry = rmq_query_jax(self._rmq, self._dist_c, lo_j, hi_j)
+        qp = jnp.asarray(qv[pad])
+        sig = ("beam", ef, pad_q, k)
+        t0 = time.perf_counter()
+        ids, d, st = beam_search_batch(
+            self._vecs, self._nbrs, qp,
+            jnp.asarray(lo[pad].astype(np.int32)),
+            jnp.asarray(hi[pad].astype(np.int32)),
+            entry, k=k, ef=max(ef, k), use_kernel=use_kernel)
+        ids = np.asarray(ids)[:nq]
+        d = np.asarray(d)[:nq]
+        st = {kk: np.asarray(vv)[:nq] for kk, vv in st.items()}
+        dt = time.perf_counter() - t0
+        if calibrate:
+            self.planner.cost.update_beam(float(st["ndist"].mean()), ef)
+            if sig in self._warm:
+                # pad lanes duplicate the last real query, so pad_q lanes of
+                # ~ndist work each were executed — normalize by pad_q
+                self.planner.cost.observe_wall(
+                    "beam", max(float(st["ndist"].mean()), 1.0), dt, pad_q)
+        self._warm.add(sig)
+        return ids, d, st

@@ -1,0 +1,110 @@
+"""Selectivity-aware query planner: route each range query to the cheapest
+correct strategy.
+
+Given a batch of rank intervals ``[L, R]`` (ranks are free — the index
+already computes them), the planner estimates per-query selectivity
+``(R−L+1)/n``, prices the two strategies with the online-calibrated
+``CostModel``, and partitions the batch:
+
+* ``scan``  — exact fused brute-force over the contiguous rank slice
+              (narrow ranges; always used for empty/degenerate intervals),
+* ``beam``  — graph beam search with a selectivity-scaled ``ef``
+              (wide ranges, where traversal touches a small fraction of the
+              slice).
+
+Each partition carries a pow2 bucket signature so the executor dispatches it
+as one fixed-shape jit call regardless of batch mix.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.planner.bucketing import (ROW_TILE, buckets_np, ef_bucket,
+                                     next_pow2, pad_pow2, window_rows)
+from repro.planner.cost import CostModel
+
+SCAN, BEAM = 0, 1
+
+
+@dataclass
+class Partition:
+    kind: str                 # "scan" | "beam"
+    param: int                # scan: bucket; beam: ef
+    indices: np.ndarray       # positions in the request batch
+    pad_q: int                # padded batch size for this dispatch
+
+    @property
+    def signature(self) -> Tuple[str, int, int]:
+        return (self.kind, self.param, self.pad_q)
+
+
+@dataclass
+class Plan:
+    strategy: np.ndarray                  # (Q,) int8: 0 scan / 1 beam
+    partitions: List[Partition] = field(default_factory=list)
+
+    @property
+    def scan_frac(self) -> float:
+        return float((self.strategy == SCAN).mean()) if len(self.strategy) else 0.0
+
+
+class QueryPlanner:
+    def __init__(self, n: int, mean_degree: float, *,
+                 min_bucket: int = 64, max_scan_frac: float = 0.125,
+                 scan_unit: float = 0.125, decay: float = 0.9):
+        self.n = int(n)
+        self.cost = CostModel(mean_degree, scan_unit=scan_unit, decay=decay)
+        self.min_bucket = int(min_bucket)
+        # hard selectivity ceiling for the scan strategy: above this fraction
+        # the slice no longer fits the "few hundred candidates" regime and the
+        # graph's sublinear traversal wins asymptotically
+        self.max_scan_len = max(self.min_bucket,
+                                int(max_scan_frac * self.n))
+        self.max_bucket = next_pow2(self.n)
+
+    # ------------------------------------------------------------------
+    def plan_batch(self, lo: np.ndarray, hi: np.ndarray, *, k: int, ef: int,
+                   mode: str = "auto") -> Plan:
+        """lo/hi: (Q,) int rank intervals (inclusive; lo > hi = empty).
+        mode: "auto" (cost-based) | "scan" | "beam" (forced)."""
+        lo = np.asarray(lo, np.int64)
+        hi = np.asarray(hi, np.int64)
+        q = len(lo)
+        lens = np.clip(hi - lo + 1, 0, None)
+        buckets = buckets_np(lens, min_bucket=self.min_bucket,
+                             max_bucket=self.max_bucket)
+        if mode == "scan":
+            use_scan = np.ones(q, bool)
+        elif mode == "beam":
+            use_scan = lens <= 0           # beam cannot express empty ranges
+        else:
+            scan_cost = self.cost.predict_scan_units(1) * np.asarray(
+                [window_rows(int(b)) for b in buckets], np.float64)
+            ef_effs = np.asarray([ef_bucket(int(l), k, ef) for l in lens],
+                                 np.int64)
+            beam_cost = np.asarray(
+                [self.cost.predict_beam_units(int(e)) for e in ef_effs],
+                np.float64)
+            eligible = lens <= self.max_scan_len
+            use_scan = (eligible & (scan_cost <= beam_cost)) | (lens <= 0) \
+                | (lens <= k)              # tiny slices: scan is exact & free
+        strategy = np.where(use_scan, SCAN, BEAM).astype(np.int8)
+
+        partitions: List[Partition] = []
+        scan_idx = np.flatnonzero(use_scan)
+        for b in np.unique(buckets[scan_idx]) if len(scan_idx) else []:
+            idx = scan_idx[buckets[scan_idx] == b]
+            partitions.append(Partition("scan", int(b), idx,
+                                        pad_pow2(len(idx))))
+        beam_idx = np.flatnonzero(~use_scan)
+        if len(beam_idx):
+            efs = np.asarray([ef_bucket(int(lens[i]), k, ef)
+                              for i in beam_idx], np.int64)
+            for e in np.unique(efs):
+                idx = beam_idx[efs == e]
+                partitions.append(Partition("beam", int(e), idx,
+                                            pad_pow2(len(idx))))
+        return Plan(strategy=strategy, partitions=partitions)

@@ -1,32 +1,52 @@
 """Batched RFANN serving engine: dynamic batching over a request queue.
 
 Requests (query vector + attribute range) are coalesced into batches of up to
-``max_batch`` or ``max_wait_ms``, executed on the single RNSG index (one jit'd
-batched beam search), and resolved through per-request futures.  This is the
-paper's system in its deployment form.
+``max_batch`` or ``max_wait_ms``, planned by the adaptive query planner (each
+dynamic batch is partitioned into fused range-scan and beam-search dispatches
+by selectivity — see ``repro.planner``), and resolved through per-request
+futures.  This is the paper's system in its deployment form.
 """
 from __future__ import annotations
 
 import queue
+import random
 import threading
 import time
 from concurrent.futures import Future
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from typing import List, Tuple
 
 import numpy as np
 
 
 @dataclass
 class EngineStats:
+    """Bounded: latencies are a fixed-size uniform reservoir (Vitter's
+    Algorithm R), so a long-running server keeps O(1) memory while the
+    percentile summary stays an unbiased estimate of the full stream."""
     served: int = 0
     batches: int = 0
+    scan_routed: int = 0
+    reservoir_size: int = 4096
     latencies_ms: List[float] = field(default_factory=list)
+    lat_seen: int = 0
+    _rng: random.Random = field(default_factory=lambda: random.Random(0),
+                                repr=False)
+
+    def record_latency(self, ms: float) -> None:
+        self.lat_seen += 1
+        if len(self.latencies_ms) < self.reservoir_size:
+            self.latencies_ms.append(ms)
+        else:
+            j = self._rng.randrange(self.lat_seen)
+            if j < self.reservoir_size:
+                self.latencies_ms[j] = ms
 
     def summary(self) -> dict:
         lat = np.asarray(self.latencies_ms) if self.latencies_ms else np.zeros(1)
         return dict(served=self.served, batches=self.batches,
                     mean_batch=self.served / max(self.batches, 1),
+                    scan_frac=self.scan_routed / max(self.served, 1),
                     p50_ms=float(np.percentile(lat, 50)),
                     p95_ms=float(np.percentile(lat, 95)),
                     p99_ms=float(np.percentile(lat, 99)))
@@ -34,9 +54,11 @@ class EngineStats:
 
 class RFANNEngine:
     def __init__(self, index, *, k: int = 10, ef: int = 64,
-                 max_batch: int = 64, max_wait_ms: float = 2.0):
+                 max_batch: int = 64, max_wait_ms: float = 2.0,
+                 plan: str = "auto"):
         self.index = index
         self.k, self.ef = k, ef
+        self.plan = plan
         self.max_batch = max_batch
         self.max_wait = max_wait_ms / 1000.0
         self._q: queue.Queue = queue.Queue()
@@ -70,10 +92,15 @@ class RFANNEngine:
                     break
             qv = np.stack([b[0] for b in batch])
             rg = np.stack([b[1] for b in batch])
-            ids, dists, _ = self.index.search(qv, rg, k=self.k, ef=self.ef)
+            ids, dists, st = self.index.search(qv, rg, k=self.k, ef=self.ef,
+                                               plan=self.plan)
+            if "strategy" in st:
+                from repro.planner.planner import SCAN
+                self.stats.scan_routed += int(
+                    (np.asarray(st["strategy"]) == SCAN).sum())
             now = time.perf_counter()
             for i, (_, _, t0, fut) in enumerate(batch):
-                self.stats.latencies_ms.append((now - t0) * 1e3)
+                self.stats.record_latency((now - t0) * 1e3)
                 fut.set_result((ids[i], dists[i]))
             self.stats.served += len(batch)
             self.stats.batches += 1

@@ -1,0 +1,39 @@
+"""Optional-hypothesis shim: property tests skip (not error) when the
+``hypothesis`` package is absent from the environment.
+
+Import ``given, settings, st, HAVE_HYPOTHESIS`` from here instead of from
+``hypothesis`` directly.  With hypothesis installed this module is a pure
+re-export; without it, ``@given(...)`` turns the test into a skip and the
+``st.*`` strategy constructors return inert placeholders so module-level
+strategy definitions still evaluate.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:                                            # pragma: no cover
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    class _Strategy:
+        """Inert placeholder accepted anywhere a strategy is stored."""
+
+        def __call__(self, *a, **k):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    class _StModule:
+        def __getattr__(self, name):
+            return _Strategy()
+
+    st = _StModule()

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.kernels.ops import gather_dist, l2dist
 from repro.kernels.ref import gather_dist_ref, l2dist_ref

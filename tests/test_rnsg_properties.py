@@ -1,7 +1,7 @@
 """Property tests for the paper's theorems (hypothesis + exact oracles)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.construction import build_rnsg
 from repro.core.exact import (exact_mrng, exact_rrng, greedy_monotonic_reachable,

@@ -1,7 +1,7 @@
 """Beam search, entry generation, pruning equivalence, end-to-end recall."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.beam import beam_search_batch
 from repro.core.construction import RNSGGraph, build_rnsg
