@@ -1,11 +1,24 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-fast bench-quick bench-planner bench-full quickstart
+.PHONY: test test-fast verify lint bench-quick bench-planner bench-substrate \
+        bench-full quickstart
 
 # tier-1 verify (the command CI runs)
 test:
 	$(PY) -m pytest -x -q
+
+# alias for the tier-1 command
+verify: test
+
+# ruff when available; syntax-check fallback in minimal containers
+lint:
+	@if $(PY) -c "import ruff" >/dev/null 2>&1; then \
+	  $(PY) -m ruff check src tests benchmarks examples; \
+	else \
+	  echo "[lint] ruff unavailable; falling back to compileall"; \
+	  $(PY) -m compileall -q src tests benchmarks examples; \
+	fi
 
 # skip the slow multidevice subprocess tests
 test-fast:
@@ -16,6 +29,9 @@ bench-quick:
 
 bench-planner:
 	$(PY) -m benchmarks.run --only planner
+
+bench-substrate:
+	$(PY) -m benchmarks.run --only search_substrate
 
 bench-full:
 	$(PY) -m benchmarks.run --full

@@ -162,6 +162,54 @@ def bench_planner(n, d, nq, quick):
     return rows
 
 
+def bench_search_substrate(n, d, nq, quick):
+    """Pre/post-refactor comparison on the unified search substrate at
+    narrow/medium/wide selectivities: the beam early-out (pre = legacy
+    condition that burns steps_cap on under-filled pools) must cut
+    narrow-range beam latency with bit-identical results, and the routed
+    substrate paths ride on top."""
+    import jax.numpy as jnp
+
+    from repro.core.beam import beam_search_batch
+    from repro.search import remap_ids, select_entry
+
+    vecs, attrs = dataset(n, d)
+    m = 24 if quick else 48
+    ix = RNSGIndex.build(vecs, attrs, m=m, ef_spatial=m, ef_attribute=2 * m)
+    sub = ix.substrate
+    k, ef = 10, 64
+    wls = {"narrow_1pct": 0.01, "medium_10pct": 0.10, "wide_50pct": 0.50}
+    rows = []
+    for wname, frac in wls.items():
+        from repro.data.ann import selectivity_ranges
+        ranges = selectivity_ranges(attrs, nq, frac, seed=23)
+        qv = dataset(nq, d, seed=91)[0]
+        gt = gt_for(vecs, attrs, qv, ranges, k)
+        lo, hi = ix.rank_range(ranges)
+        qj, loj, hij = jnp.asarray(qv), jnp.asarray(lo), jnp.asarray(hi)
+        entry = select_entry(sub._rmq, sub._dist_c, loj, hij, ix.g.n)
+        for tag, es in (("beam_pre_early_out", False),
+                        ("beam_post_early_out", True)):
+            args = (sub._vecs, sub._nbrs, qj, loj, hij, entry)
+            np.asarray(beam_search_batch(*args, k=k, ef=ef,
+                                         early_stop=es)[0])     # warm
+            t0 = time.perf_counter()
+            ids, _, _ = beam_search_batch(*args, k=k, ef=ef, early_stop=es)
+            ids = np.asarray(ids)
+            dt = time.perf_counter() - t0
+            rec = recall_at_k(remap_ids(ix.g.order, ids), gt)
+            rows.append(dict(method=tag, workload=wname, ef=ef,
+                             recall=round(rec, 4), qps=round(nq / dt, 1)))
+        for plan in ("graph", "auto"):
+            (ids, _, st), qps = timed_search(ix, qv, ranges, k, ef,
+                                             warmups=2, plan=plan)
+            rows.append(dict(method=f"substrate_{plan}", workload=wname,
+                             ef=ef, recall=round(recall_at_k(ids, gt), 4),
+                             qps=round(qps, 1)))
+    emit("search_substrate", rows, quiet=True)
+    return rows
+
+
 def bench_kernels(quick):
     """Kernel microbench (interpret mode on CPU: correctness + derived
     roofline terms; wall numbers are *not* TPU times)."""
@@ -202,7 +250,7 @@ def bench_kernels(quick):
 
 
 ALL = ["qps_recall", "construction_time", "index_size", "param_sensitivity",
-       "vary_k", "scalability", "planner", "kernels"]
+       "vary_k", "scalability", "planner", "search_substrate", "kernels"]
 
 
 def main() -> None:
@@ -264,6 +312,15 @@ def main() -> None:
               f"_narrow_recall={np_['recall']}vs{ng['recall']}"
               f"_narrow_scan_frac={np_['scan_frac']}"
               f"_wide_scan_frac={wp['scan_frac']}")
+    if "search_substrate" in only:
+        rows = bench_search_substrate(n, d, nq, quick)
+        pre = next(r for r in rows if r["method"] == "beam_pre_early_out"
+                   and r["workload"] == "narrow_1pct")
+        post = next(r for r in rows if r["method"] == "beam_post_early_out"
+                    and r["workload"] == "narrow_1pct")
+        print(f"search_substrate,{1e6/post['qps']:.1f},"
+              f"narrow_beam_early_out_speedup={post['qps']/max(pre['qps'],1e-9):.2f}x"
+              f"_recall={post['recall']}vs{pre['recall']}")
     if "kernels" in only:
         rows = bench_kernels(quick)
         for r in rows:

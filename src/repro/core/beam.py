@@ -18,13 +18,22 @@ import jax.numpy as jnp
 INF = jnp.inf
 
 
-@partial(jax.jit, static_argnames=("k", "ef", "max_steps", "use_kernel"))
+@partial(jax.jit, static_argnames=("k", "ef", "max_steps", "use_kernel",
+                                   "early_stop"))
 def beam_search_batch(vecs: jax.Array, nbrs: jax.Array, qv: jax.Array,
                       lo: jax.Array, hi: jax.Array, entry: jax.Array,
                       *, k: int = 10, ef: int = 64, max_steps: int = 0,
-                      use_kernel: bool = False):
+                      use_kernel: bool = False, early_stop: bool = True):
     """vecs:(n,d) f32; nbrs:(n,m) i32; qv:(Q,d); lo/hi/entry:(Q,) rank ids.
-    Returns (ids:(Q,k) i32 rank ids (-1 pad), dists:(Q,k), stats dict)."""
+    Returns (ids:(Q,k) i32 rank ids (-1 pad), dists:(Q,k), stats dict).
+
+    ``early_stop`` exits the while_loop as soon as no finite unexpanded
+    candidate remains.  When the in-range node count is below ``ef`` the
+    pool never fills, so the worst-candidate bound stays +inf and the
+    legacy condition (kept under ``early_stop=False`` for A/B benchmarks)
+    burns the full ``steps_cap``; the results are identical either way —
+    the extra iterations re-expand the best already-expanded node, whose
+    neighbors are all visited."""
     n, m = nbrs.shape
     steps_cap = max_steps or 8 * ef + 64
 
@@ -61,7 +70,10 @@ def beam_search_batch(vecs: jax.Array, nbrs: jax.Array, qv: jax.Array,
             best = jnp.min(unexp)
             worst = jnp.max(jnp.where(jnp.isfinite(cand_d), cand_d, -INF))
             worst = jnp.where(jnp.any(~jnp.isfinite(cand_d)), INF, worst)
-            return (best <= worst) & (steps < steps_cap)
+            go = (best <= worst) & (steps < steps_cap)
+            if early_stop:
+                go &= jnp.isfinite(best)
+            return go
 
         def body(st):
             cand_d, expanded, cand_ids, visited, steps, ndist = st

@@ -1,17 +1,13 @@
-"""High-level RFANN API: build / save / load / batched search on one RNSG index."""
+"""High-level RFANN API: build / save / load / batched search on one RNSG
+index.  All query execution is delegated to the unified search substrate
+(``repro.search``) — this class only owns index lifecycle."""
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.beam import beam_search_batch
 from repro.core.construction import RNSGGraph, build_rnsg
-from repro.core.entry import rmq_query_jax
 
 
 class RNSGIndex:
@@ -19,11 +15,7 @@ class RNSGIndex:
 
     def __init__(self, graph: RNSGGraph):
         self.g = graph
-        self._vecs = jnp.asarray(graph.vecs)
-        self._nbrs = jnp.asarray(graph.nbrs)
-        self._rmq = jnp.asarray(graph.rmq)
-        self._dist_c = jnp.asarray(graph.dist_c)
-        self._executor = None          # lazy adaptive query planner
+        self._substrate = None        # lazy unified search substrate
 
     # ------------------------------------------------------------------
     @classmethod
@@ -38,57 +30,47 @@ class RNSGIndex:
         return cls(RNSGGraph.load(path))
 
     # ------------------------------------------------------------------
-    def rank_range(self, attr_ranges: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-        """[a_l, a_r] (inclusive) -> rank interval [L, R] (inclusive)."""
-        lo = np.searchsorted(self.g.attrs, attr_ranges[:, 0], side="left")
-        hi = np.searchsorted(self.g.attrs, attr_ranges[:, 1], side="right") - 1
-        return lo.astype(np.int32), hi.astype(np.int32)
+    @property
+    def substrate(self):
+        """Lazily-built unified search substrate (resolve/dispatch/stitch)."""
+        if self._substrate is None:
+            from repro.search import SearchSubstrate
+            self._substrate = SearchSubstrate.from_graph(self.g)
+        return self._substrate
 
+    # Back-compat aliases from the pre-substrate layering.
     @property
     def executor(self):
-        """Lazily-built adaptive planner/executor (scan-vs-beam routing)."""
-        if self._executor is None:
-            from repro.planner import PlanExecutor, QueryPlanner
-            deg = float((self.g.nbrs >= 0).sum(1).mean())
-            planner = QueryPlanner(self.g.n, deg)
-            self._executor = PlanExecutor(self.g.vecs, self.g.nbrs,
-                                          self.g.rmq, self.g.dist_c, planner)
-        return self._executor
+        return self.substrate
+
+    @property
+    def planner(self):
+        return self.substrate.planner
+
+    def rank_range(self, attr_ranges: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """[a_l, a_r] (inclusive) -> rank interval [L, R] (inclusive).
+        Pure host-side resolve — does not force the substrate's device
+        upload for callers that only need rank mapping."""
+        from repro.search import rank_interval
+        return rank_interval(self.g.attrs, np.asarray(attr_ranges, np.float32))
 
     def search(self, queries: np.ndarray, attr_ranges: np.ndarray, *,
                k: int = 10, ef: int = 64, use_kernel: bool = False,
-               plan: str = "graph") -> Tuple[np.ndarray, np.ndarray, Dict]:
+               plan: str = "graph"):
         """queries:(Q,d); attr_ranges:(Q,2) attribute values (inclusive).
         plan: "graph" (pure beam search) | "auto" (cost-based scan/beam
         routing) | "scan" / "beam" (forced strategy).
-        Returns (original ids (Q,k), sq dists, stats)."""
-        lo, hi = self.rank_range(np.asarray(attr_ranges, np.float32))
+        Returns a ``SearchResult`` (tuple-compatible: ids, dists, stats)."""
+        lo, hi = self.rank_range(attr_ranges)
         return self.search_ranks(queries, lo, hi, k=k, ef=ef,
                                  use_kernel=use_kernel, plan=plan)
 
     def search_ranks(self, queries, lo, hi, *, k=10, ef=64, use_kernel=False,
                      plan="graph"):
-        if plan not in ("graph", "auto", "scan", "beam"):
-            raise ValueError(f"unknown plan {plan!r}: "
-                             "expected graph|auto|scan|beam")
-        if plan != "graph":
-            ids, dists, stats = self.executor.execute(
-                queries, lo, hi, k=k, ef=ef, mode=plan,
-                use_kernel=use_kernel)
-            orig = np.where(ids >= 0, self.g.order[np.maximum(ids, 0)], -1)
-            return orig, dists, stats
-        qv = jnp.asarray(queries, jnp.float32)
-        lo_j = jnp.asarray(lo)
-        hi_j = jnp.asarray(hi)
-        entry = rmq_query_jax(self._rmq, self._dist_c,
-                              jnp.minimum(lo_j, self.g.n - 1),
-                              jnp.clip(hi_j, 0, self.g.n - 1))
-        ids, dists, stats = beam_search_batch(
-            self._vecs, self._nbrs, qv, lo_j, hi_j, entry,
-            k=k, ef=max(ef, k), use_kernel=use_kernel)
-        ids = np.asarray(ids)
-        orig = np.where(ids >= 0, self.g.order[np.maximum(ids, 0)], -1)
-        return orig, np.asarray(dists), jax.tree.map(np.asarray, stats)
+        from repro.search import SearchRequest
+        return self.substrate.run(SearchRequest(
+            queries=np.asarray(queries, np.float32), lo=lo, hi=hi,
+            k=k, ef=ef, strategy=plan, use_kernel=use_kernel))
 
     # ------------------------------------------------------------------
     @property

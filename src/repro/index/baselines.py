@@ -22,10 +22,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.beam import beam_search_batch
-from repro.core.entry import build_rmq, centroid_dists, rmq_query_jax
+from repro.core.entry import build_rmq, centroid_dists
 from repro.core.pruning import _prune_side_batch
 from repro.data.ann import ground_truth
 from repro.index.knn import exact_knn, sq_dists
+from repro.search import rank_interval, remap_ids, select_entry
 
 
 def _sorted_by_dist(knn_ids: np.ndarray) -> np.ndarray:
@@ -134,8 +135,7 @@ class BruteForceIndex:
 
     def search(self, queries, attr_ranges, *, k=10, **_):
         ids, d = ground_truth(self.vecs, self.attrs, queries, attr_ranges, k)
-        orig = np.where(ids >= 0, self.order[np.maximum(ids, 0)], -1)
-        return orig, d, {}
+        return remap_ids(self.order, ids), d, {}
 
     @property
     def index_bytes(self):
@@ -174,20 +174,18 @@ class MRNGIndex:
 
     def search(self, queries, attr_ranges, *, k=10, ef=64, **_):
         n = len(self.attrs)
-        lo = np.searchsorted(self.attrs, attr_ranges[:, 0], "left").astype(np.int32)
-        hi = (np.searchsorted(self.attrs, attr_ranges[:, 1], "right") - 1).astype(np.int32)
+        lo, hi = rank_interval(self.attrs, attr_ranges)
         qv = jnp.asarray(queries, jnp.float32)
         if self.mode == "infilter":
             lo_j, hi_j = jnp.asarray(lo), jnp.asarray(hi)
-            entry = rmq_query_jax(self._rmq, self._dc,
-                                  jnp.minimum(lo_j, n - 1), jnp.clip(hi_j, 0, n - 1))
+            entry = select_entry(self._rmq, self._dc, lo_j, hi_j, n)
             ids, d, st = beam_search_batch(self._v, self._nb, qv, lo_j, hi_j,
                                            entry, k=k, ef=max(ef, k))
         else:  # postfilter: unfiltered search, oversampled, then range filter
             big = max(ef, k * self.oversample)
             zeros = jnp.zeros(len(lo), jnp.int32)
             full_hi = jnp.full(len(hi), n - 1, jnp.int32)
-            entry = rmq_query_jax(self._rmq, self._dc, zeros, full_hi)
+            entry = select_entry(self._rmq, self._dc, zeros, full_hi, n)
             ids, d, st = beam_search_batch(self._v, self._nb, qv, zeros, full_hi,
                                            entry, k=big, ef=big)
             idn = np.asarray(ids)
@@ -198,8 +196,7 @@ class MRNGIndex:
             ids = np.take_along_axis(idn, sel, axis=1)
             d = np.take_along_axis(dn, sel, axis=1)
             ids = np.where(np.isfinite(d), ids, -1)
-        idn = np.asarray(ids)
-        orig = np.where(idn >= 0, self.order[np.maximum(idn, 0)], -1)
+        orig = remap_ids(self.order, np.asarray(ids))
         return orig, np.asarray(d), jax.tree.map(np.asarray, st)
 
 
@@ -365,13 +362,10 @@ class SegmentTreeIndex:
         return out
 
     def search(self, queries, attr_ranges, *, k=10, ef=64, **_):
-        n = len(self.attrs)
-        lo = np.searchsorted(self.attrs, attr_ranges[:, 0], "left").astype(np.int32)
-        hi = (np.searchsorted(self.attrs, attr_ranges[:, 1], "right") - 1).astype(np.int32)
+        lo, hi = rank_interval(self.attrs, attr_ranges)
         entries = self._canonical_entries(lo, hi)
         ids, d, st = _segtree_beam(self._v, self._nb, jnp.asarray(queries, jnp.float32),
                                    jnp.asarray(lo), jnp.asarray(hi),
                                    jnp.asarray(entries), k=k, ef=max(ef, k))
-        idn = np.asarray(ids)
-        orig = np.where(idn >= 0, self.order[np.maximum(idn, 0)], -1)
+        orig = remap_ids(self.order, np.asarray(ids))
         return orig, np.asarray(d), jax.tree.map(np.asarray, st)

@@ -13,8 +13,15 @@ is served by ``ceil(B/tb)+1`` fixed-shape blocks regardless of alignment;
 positions outside ``[start, start+len)`` are masked to +inf by absolute rank.
 
 Grid = (Q, row-blocks, d-chunks); the d-axis is the innermost "arbitrary"
-dimension accumulating qn − 2·qᵀx + xn into the (1, tb) output block in VMEM
-(same scheme as ``l2dist``); the mask is applied on the last d-step.
+dimension accumulating qn − 2·qᵀx + xn into a (1, tb) VMEM *scratch* block
+(same scheme as ``l2dist``).  On the last d-step the block's masked distances
+are folded into a per-query running top-k held in the (1, tb)-lane output
+blocks (dists + rank ids), so the full (Q, W) distance matrix is **never
+materialized** — the kernel's output is (Q, tb) regardless of window size.
+The merge is a k-step select-min over the 2·tb-lane union of the running
+top-k and the new block (vector argmin + one-hot updates only, so it lowers
+on both the Mosaic and interpret backends); ties break toward lower rank,
+matching ``jax.lax.top_k`` on the materialized matrix.
 """
 from __future__ import annotations
 
@@ -33,31 +40,56 @@ def window_rows(bucket: int, tb: int = 128) -> int:
     return (-(-bucket // tb) + 1) * tb
 
 
-def _kernel(starts_ref, lens_ref, x_ref, q_ref, o_ref, *, nd: int, tb: int):
+def _kernel(starts_ref, lens_ref, x_ref, q_ref, od_ref, oi_ref, acc_ref,
+            *, nd: int, tb: int, k: int):
     i = pl.program_id(0)          # query
     j = pl.program_id(1)          # row block within the window
     kd = pl.program_id(2)         # d-chunk
 
+    @pl.when((j == 0) & (kd == 0))
+    def _init_topk():
+        od_ref[...] = jnp.full_like(od_ref, jnp.inf)
+        oi_ref[...] = jnp.full_like(oi_ref, -1)
+
     @pl.when(kd == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
 
     x = x_ref[...].astype(jnp.float32)            # (tb, td)
     q = q_ref[...].astype(jnp.float32)            # (1, td)
     dot = jax.lax.dot_general(q, x, (((1,), (1,)), ((), ())),
                               preferred_element_type=jnp.float32)
-    o_ref[...] += -2.0 * dot
-    o_ref[...] += jnp.sum(q * q, axis=1, keepdims=True)
-    o_ref[...] += jnp.sum(x * x, axis=1)[None, :]
+    acc_ref[...] += -2.0 * dot
+    acc_ref[...] += jnp.sum(q * q, axis=1, keepdims=True)
+    acc_ref[...] += jnp.sum(x * x, axis=1)[None, :]
 
     @pl.when(kd == nd - 1)
-    def _fin():
+    def _merge():
         start = starts_ref[i]
         ln = lens_ref[i]
         base = (start // tb) * tb
         rank = base + j * tb + jax.lax.broadcasted_iota(jnp.int32, (1, tb), 1)
         valid = (rank >= start) & (rank < start + ln)
-        o_ref[...] = jnp.where(valid, jnp.maximum(o_ref[...], 0.0), jnp.inf)
+        d_blk = jnp.where(valid, jnp.maximum(acc_ref[...], 0.0), jnp.inf)
+        # union of the running top-k and this block; blocks arrive in
+        # ascending-rank order and the running half comes first, so the
+        # first-occurrence argmin breaks distance ties toward lower rank
+        cd = jnp.concatenate([od_ref[...], d_blk], axis=1)      # (1, 2*tb)
+        ci = jnp.concatenate([oi_ref[...], rank], axis=1)
+        lane_u = jax.lax.broadcasted_iota(jnp.int32, (1, 2 * tb), 1)
+        lane_o = jax.lax.broadcasted_iota(jnp.int32, (1, tb), 1)
+        new_d = jnp.full((1, tb), jnp.inf, jnp.float32)
+        new_i = jnp.full((1, tb), -1, jnp.int32)
+        for t in range(k):            # static unroll: k-step select-min
+            m = jnp.min(cd)
+            sel = lane_u == jnp.argmin(cd).astype(jnp.int32)
+            idv = jnp.sum(jnp.where(sel, ci, 0)).astype(jnp.int32)
+            idv = jnp.where(jnp.isfinite(m), idv, -1)
+            new_d = jnp.where(lane_o == t, m, new_d)
+            new_i = jnp.where(lane_o == t, idv, new_i)
+            cd = jnp.where(sel, jnp.inf, cd)
+        od_ref[...] = new_d
+        oi_ref[...] = new_i
 
 
 @functools.partial(jax.jit,
@@ -70,6 +102,11 @@ def range_scan_pallas(x: jax.Array, starts: jax.Array, lens: jax.Array,
     Returns (ids:(Q,k) i32 absolute ranks (-1 pad), dists:(Q,k) f32)."""
     n_pad, d_pad = x.shape
     Q = q.shape[0]
+    if k > tb:
+        # running top-k lives in one tb-lane register row; beyond that fall
+        # back to the materializing oracle (rare: k > 128)
+        from repro.kernels.ref import range_scan_ref
+        return range_scan_ref(x, starts, lens, q, bucket=bucket, k=k, tb=tb)
     td = d_pad if d_pad <= td else 128
     nd = d_pad // td
     w = window_rows(bucket, tb)
@@ -87,16 +124,18 @@ def range_scan_pallas(x: jax.Array, starts: jax.Array, lens: jax.Array,
                          (jnp.minimum(s_ref[i] // tb + j, max_blk), kd)),
             pl.BlockSpec((1, td), lambda i, j, kd, s_ref, l_ref: (i, kd)),
         ],
-        out_specs=pl.BlockSpec((1, tb), lambda i, j, kd, s_ref, l_ref: (i, j)),
+        out_specs=[
+            pl.BlockSpec((1, tb), lambda i, j, kd, s_ref, l_ref: (i, 0)),
+            pl.BlockSpec((1, tb), lambda i, j, kd, s_ref, l_ref: (i, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, tb), jnp.float32)],
     )
-    dists = pl.pallas_call(
-        functools.partial(_kernel, nd=nd, tb=tb),
+    dists, ids = pl.pallas_call(
+        functools.partial(_kernel, nd=nd, tb=tb, k=k),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((Q, w), jnp.float32),
+        out_shape=(jax.ShapeDtypeStruct((Q, tb), jnp.float32),
+                   jax.ShapeDtypeStruct((Q, tb), jnp.int32)),
         interpret=interpret,
     )(starts, lens, x, q)
 
-    neg, idx = jax.lax.top_k(-dists, k)
-    base = (starts // tb) * tb
-    ids = jnp.where(jnp.isfinite(neg), base[:, None] + idx, -1)
-    return ids.astype(jnp.int32), -neg
+    return ids[:, :k], dists[:, :k]

@@ -183,7 +183,7 @@ def run_rnsg_cell(multi_pod: bool, variant: str = "base", save: bool = True):
     the query batch over the 'model' axis (every model rank serves its own
     1/16 slice — 16× throughput at identical per-query work)."""
     from repro.core.beam import beam_search_batch
-    from repro.core.entry import rmq_query_jax
+    from repro.search import (rank_interval_jax, remap_ids_jax, select_entry)
     from repro.serving.distributed import _merge_topk
 
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -197,14 +197,11 @@ def run_rnsg_cell(multi_pod: bool, variant: str = "base", save: bool = True):
     def body(vecs, nbrs, attrs, rmq, dist_c, order, qv, ranges):
         vecs, nbrs, attrs = vecs[0], nbrs[0], attrs[0]
         rmq, dist_c, order = rmq[0], dist_c[0], order[0]
-        lo = jnp.searchsorted(attrs, ranges[:, 0]).astype(jnp.int32)
-        hi = (jnp.searchsorted(attrs, ranges[:, 1], side="right") - 1
-              ).astype(jnp.int32)
-        entry = rmq_query_jax(rmq, dist_c, jnp.minimum(lo, ns - 1),
-                              jnp.clip(hi, 0, ns - 1))
+        lo, hi = rank_interval_jax(attrs, ranges)
+        entry = select_entry(rmq, dist_c, lo, hi, ns)
         ids, dists, _ = beam_search_batch(vecs, nbrs, qv, lo, hi, entry,
                                           k=k, ef=ef)
-        orig = jnp.where(ids >= 0, order[jnp.maximum(ids, 0)], -1)
+        orig = remap_ids_jax(order, ids)
         ids_g = jax.lax.all_gather(orig, "data")
         d_g = jax.lax.all_gather(jnp.where(ids >= 0, dists, jnp.inf), "data")
         return _merge_topk(ids_g, d_g, k)

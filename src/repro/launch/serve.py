@@ -35,11 +35,13 @@ def serve_rfann(args):
     print("[serve] building RNSG index ...")
     idx = RNSGIndex.build(vecs, attrs, m=args.m, ef_spatial=32, ef_attribute=48)
     print(f"[serve] {idx.stats()}")
-    idx.search(qv[:8], ranges[:8], k=args.k, ef=args.ef,
-               plan=args.plan)                              # warm the jit
+    warm = idx.search(qv[:8], ranges[:8], k=args.k, ef=args.ef,
+                      plan=args.plan)                       # warm the jit
+    assert warm.ids.shape == (8, args.k)                    # SearchResult
 
     engine = RFANNEngine(idx, k=args.k, ef=args.ef, plan=args.plan,
-                         max_batch=args.max_batch, max_wait_ms=2.0)
+                         max_batch=args.max_batch, max_wait_ms=2.0,
+                         calibration_path=args.calibration or None)
     rng = np.random.default_rng(0)
     futs = []
     t0 = time.perf_counter()
@@ -47,9 +49,11 @@ def serve_rfann(args):
         futs.append(engine.submit(qv[i], ranges[i]))
         if args.rate > 0:
             time.sleep(rng.exponential(1.0 / args.rate))
-    results = np.stack([f.result()[0] for f in futs])
+    results = np.stack([f.result().ids for f in futs])      # per-request SearchResult
     dt = time.perf_counter() - t0
     engine.close()
+    if args.calibration:
+        print(f"[serve] cost-model calibration persisted to {args.calibration}")
 
     order = np.argsort(attrs, kind="stable")
     gt_r, _ = ground_truth(vecs[order], attrs[order], qv, ranges, args.k)
@@ -99,6 +103,9 @@ def main(argv=None):
     ap.add_argument("--max-batch", type=int, default=64)
     ap.add_argument("--plan", choices=["auto", "graph", "scan", "beam"],
                     default="auto", help="query-planner strategy routing")
+    ap.add_argument("--calibration", default="",
+                    help="JSON path: load cost-model calibration at startup, "
+                         "persist it on shutdown")
     ap.add_argument("--new-tokens", type=int, default=16)
     args = ap.parse_args(argv)
     if args.mode == "rfann":

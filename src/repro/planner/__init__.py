@@ -1,11 +1,14 @@
 """Adaptive query planner: selectivity-aware routing between the exact fused
-range-scan kernel and graph beam search (see docs/planner.md)."""
+range-scan kernel and graph beam search (see docs/planner.md).
+
+The planner is pure policy (cost model + batch partitioning).  Execution —
+kernel dispatch, padding, stitching — lives in the unified search substrate
+(``repro.search.SearchSubstrate``), which consumes ``plan_batch`` output."""
 from repro.planner.bucketing import (bucket_for_len, ef_bucket, next_pow2,
                                      pad_pow2, window_rows)
 from repro.planner.cost import CostModel
-from repro.planner.executor import PlanExecutor
 from repro.planner.planner import BEAM, SCAN, Partition, Plan, QueryPlanner
 
-__all__ = ["CostModel", "PlanExecutor", "QueryPlanner", "Plan", "Partition",
+__all__ = ["CostModel", "QueryPlanner", "Plan", "Partition",
            "SCAN", "BEAM", "bucket_for_len", "ef_bucket", "next_pow2",
            "pad_pow2", "window_rows"]

@@ -69,3 +69,20 @@ class CostModel:
                     ndist_per_ef=round(self.ndist_per_ef, 2),
                     beam_obs=self.beam_obs,
                     scan_us=self._scan_us, beam_us=self._beam_us)
+
+    # -------------------------------------------------------- persistence
+    def state_dict(self) -> dict:
+        """Full calibration state (JSON-serializable, exact restore)."""
+        return dict(scan_unit=self.scan_unit, beam_unit=self.beam_unit,
+                    ndist_per_ef=self.ndist_per_ef, decay=self.decay,
+                    beam_obs=self.beam_obs,
+                    scan_us=self._scan_us, beam_us=self._beam_us)
+
+    def load_state_dict(self, state: dict) -> None:
+        self.scan_unit = float(state["scan_unit"])
+        self.beam_unit = float(state.get("beam_unit", 1.0))
+        self.ndist_per_ef = float(state["ndist_per_ef"])
+        self.decay = float(state.get("decay", self.decay))
+        self.beam_obs = int(state["beam_obs"])
+        self._scan_us = state.get("scan_us")
+        self._beam_us = state.get("beam_us")

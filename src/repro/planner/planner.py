@@ -17,6 +17,7 @@ as one fixed-shape jit call regardless of batch mix.
 """
 from __future__ import annotations
 
+import json
 from dataclasses import dataclass, field
 from typing import List, Tuple
 
@@ -107,4 +108,29 @@ class QueryPlanner:
                 idx = beam_idx[efs == e]
                 partitions.append(Partition("beam", int(e), idx,
                                             pad_pow2(len(idx))))
-        return Plan(strategy=strategy, partitions=partitions)
+        # a plan never carries an empty partition (beam dispatch pads by
+        # duplicating idx[-1], which needs at least one real query)
+        return Plan(strategy=strategy,
+                    partitions=[p for p in partitions if len(p.indices)])
+
+    # ------------------------------------------------------------------
+    def save_calibration(self, path: str) -> None:
+        """Persist the online-calibrated cost model (JSON) so a restarted
+        server starts from steady-state routing instead of the prior."""
+        state = dict(version=1, n=self.n, cost=self.cost.state_dict())
+        with open(path, "w") as f:
+            json.dump(state, f, indent=2, sort_keys=True)
+
+    def load_calibration(self, path: str) -> None:
+        """Raises ValueError on a schema or corpus mismatch — calibration
+        units are only meaningful for the index they were measured on."""
+        with open(path) as f:
+            state = json.load(f)
+        if state.get("version") != 1:
+            raise ValueError(f"unsupported calibration version "
+                             f"{state.get('version')!r} in {path}")
+        if state.get("n") != self.n:
+            raise ValueError(f"calibration in {path} was measured on a "
+                             f"corpus of n={state.get('n')}, this index has "
+                             f"n={self.n}")
+        self.cost.load_state_dict(state["cost"])

@@ -1,0 +1,23 @@
+"""Unified search substrate: one strategy-routed execution layer.
+
+Every query path in the repo — single-node ``RNSGIndex``, the adaptive
+planner, the dynamic-batching engine, and range-partitioned distributed
+serving — flows through this package:
+
+    SearchRequest (queries, rank intervals, k/ef, strategy)
+        -> resolve   (rank-interval mapping + RMQ entry selection)
+        -> dispatch  (range-scan kernel | graph beam | planned mix)
+        -> stitch    (request-order stats, rank -> original id remap)
+        -> SearchResult
+
+See docs/architecture.md for the layer diagram.
+"""
+from repro.search.request import STRATEGIES, SearchRequest, SearchResult
+from repro.search.resolve import (clip_interval, clip_interval_jax,
+                                  rank_interval, rank_interval_jax,
+                                  remap_ids, remap_ids_jax, select_entry)
+from repro.search.substrate import SearchSubstrate
+
+__all__ = ["STRATEGIES", "SearchRequest", "SearchResult", "SearchSubstrate",
+           "rank_interval", "rank_interval_jax", "select_entry",
+           "remap_ids", "remap_ids_jax", "clip_interval", "clip_interval_jax"]

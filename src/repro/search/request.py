@@ -1,0 +1,66 @@
+"""Search request/result types shared by every query path.
+
+``SearchResult`` intentionally behaves like the historical
+``(ids, dists, stats)`` tuple (iteration and indexing) so call sites can
+migrate to attribute access incrementally.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict
+
+import numpy as np
+
+STRATEGIES = ("graph", "auto", "scan", "beam")
+
+
+@dataclass(frozen=True)
+class SearchRequest:
+    """One batched range-filtered kNN request in rank space.
+
+    queries : (Q, d) float32 query vectors.
+    lo, hi  : (Q,) inclusive attribute-rank interval per query (lo > hi
+              encodes an empty range).  Rank mapping from raw attribute
+              ranges lives in ``repro.search.resolve``.
+    strategy: "graph" — the paper's pure beam search over the full batch;
+              "auto"  — cost-based scan/beam routing per query;
+              "scan" / "beam" — forced strategy (tests, benchmarks).
+    """
+    queries: np.ndarray
+    lo: np.ndarray
+    hi: np.ndarray
+    k: int = 10
+    ef: int = 64
+    strategy: str = "graph"
+    use_kernel: bool = False
+
+    def __post_init__(self):
+        if self.strategy not in STRATEGIES:
+            raise ValueError(f"unknown strategy {self.strategy!r}: "
+                             f"expected one of {STRATEGIES}")
+
+
+@dataclass
+class SearchResult:
+    """ids: (Q, k) original corpus ids (-1 padded); dists: (Q, k) squared L2
+    (+inf padded); stats: per-query hops/ndist plus routing info."""
+    ids: np.ndarray
+    dists: np.ndarray
+    stats: Dict[str, Any] = field(default_factory=dict)
+
+    # tuple compatibility ------------------------------------------------
+    def __iter__(self):
+        return iter((self.ids, self.dists, self.stats))
+
+    def __getitem__(self, i):
+        return (self.ids, self.dists, self.stats)[i]
+
+    def __len__(self):
+        return 3
+
+    def row(self, i: int) -> "SearchResult":
+        """Per-request slice (engine futures resolve to these)."""
+        return SearchResult(self.ids[i], self.dists[i],
+                            {k: v[i] for k, v in self.stats.items()
+                             if isinstance(v, np.ndarray) and v.ndim >= 1
+                             and len(v) == len(self.ids)})

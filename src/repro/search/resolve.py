@@ -1,0 +1,81 @@
+"""Resolve stage: the single implementation of rank-interval mapping, RMQ
+entry selection, and rank -> original-id remapping.
+
+Ids everywhere in the search path are attribute ranks over the sorted
+corpus; raw attribute ranges enter here and leave as inclusive rank
+intervals ``[lo, hi]`` (``lo > hi`` = empty).  Both host (numpy) and traced
+(jax, usable inside ``shard_map`` bodies) variants live in this module —
+no other module under ``src/repro`` may call ``searchsorted`` or
+``rmq_query_jax`` directly (enforced by
+``tests/test_search_substrate.py::test_resolve_is_single_source``).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.entry import rmq_query_jax
+
+
+# ------------------------------------------------------------- rank mapping
+def rank_interval(attrs_sorted: np.ndarray,
+                  attr_ranges: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Host path: [a_l, a_r] (inclusive) -> rank interval [lo, hi] (inclusive).
+    attrs_sorted: (n,) ascending; attr_ranges: (Q, 2)."""
+    ar = np.asarray(attr_ranges, np.float32)
+    lo = np.searchsorted(attrs_sorted, ar[:, 0], side="left")
+    hi = np.searchsorted(attrs_sorted, ar[:, 1], side="right") - 1
+    return lo.astype(np.int32), hi.astype(np.int32)
+
+
+def rank_interval_jax(attrs_sorted: jax.Array,
+                      attr_ranges: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Traced path (shard_map bodies): same contract as ``rank_interval``."""
+    lo = jnp.searchsorted(attrs_sorted, attr_ranges[:, 0],
+                          side="left").astype(jnp.int32)
+    hi = (jnp.searchsorted(attrs_sorted, attr_ranges[:, 1],
+                           side="right") - 1).astype(jnp.int32)
+    return lo, hi
+
+
+# ----------------------------------------------------------- shard clipping
+def clip_interval(lo: np.ndarray, hi: np.ndarray, rank0: int,
+                  n_local: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Clip a *global* rank interval to the shard covering global ranks
+    [rank0, rank0 + n_local); returns shard-local ranks (empty stays empty).
+    Shards are contiguous slices of the sorted corpus, so this equals a
+    per-shard ``searchsorted`` (Theorem 4.7 heredity at the resolve layer)."""
+    slo = np.maximum(np.asarray(lo, np.int64) - rank0, 0)
+    shi = np.minimum(np.asarray(hi, np.int64) - rank0, n_local - 1)
+    return slo.astype(np.int32), shi.astype(np.int32)
+
+
+def clip_interval_jax(lo: jax.Array, hi: jax.Array, rank0: jax.Array,
+                      n_local: int) -> Tuple[jax.Array, jax.Array]:
+    slo = jnp.maximum(lo.astype(jnp.int32) - rank0, 0)
+    shi = jnp.minimum(hi.astype(jnp.int32) - rank0, n_local - 1)
+    return slo, shi
+
+
+# ---------------------------------------------------------- entry selection
+def select_entry(rmq: jax.Array, dist_c: jax.Array, lo: jax.Array,
+                 hi: jax.Array, n: int) -> jax.Array:
+    """RMQ entry node(s) for [lo, hi]: argmin of centroid distance over the
+    interval, with the empty/degenerate clipping every caller needs."""
+    return rmq_query_jax(rmq, dist_c, jnp.minimum(lo, n - 1),
+                         jnp.clip(hi, 0, n - 1))
+
+
+# -------------------------------------------------------------- id remap
+def remap_ids(order: np.ndarray, ids: np.ndarray) -> np.ndarray:
+    """Stitch stage, host path: attribute-rank ids -> original corpus ids
+    (-1 padding preserved)."""
+    ids = np.asarray(ids)
+    return np.where(ids >= 0, np.asarray(order)[np.maximum(ids, 0)], -1)
+
+
+def remap_ids_jax(order: jax.Array, ids: jax.Array) -> jax.Array:
+    return jnp.where(ids >= 0, order[jnp.maximum(ids, 0)], -1)

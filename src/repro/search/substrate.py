@@ -1,0 +1,201 @@
+"""Dispatch + stitch stages: one strategy-routed execution layer.
+
+``SearchSubstrate`` owns the entire query path for one attribute-sorted
+corpus slice (a whole index, or one shard of a distributed one):
+
+* ``resolve``  — attribute ranges -> rank intervals (``repro.search.resolve``);
+* dispatch     — ``graph`` runs the paper's beam search over the full batch;
+                 ``auto``/``scan``/``beam`` go through the adaptive planner,
+                 which partitions the batch into fixed-shape jit dispatches
+                 (fused Pallas ``range_scan`` | bucketed beam search);
+* stitch       — partition results land back in request order, rank ids are
+                 remapped to original corpus ids, and per-query stats
+                 (hops / ndist / strategy) are assembled.
+
+Scan partitions pad with empty windows (masked, ~free); beam partitions pad
+by duplicating the last real query (a duplicate lane adds no extra
+``while_loop`` iterations under vmap).  After every planned dispatch the
+substrate feeds the cost model: observed ``ndist`` from beam stats and
+warm-call wall times per work unit (the first call of each jit signature is
+excluded so compile time never enters calibration).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.beam import beam_search_batch
+from repro.kernels.ops import range_scan
+from repro.planner.bucketing import ROW_TILE, window_rows
+from repro.planner.planner import QueryPlanner, SCAN
+from repro.search import resolve
+from repro.search.request import SearchRequest, SearchResult
+
+INF = np.float32(np.inf)
+
+
+class SearchSubstrate:
+    def __init__(self, vecs, nbrs, rmq, dist_c, order, attrs, *,
+                 planner: Optional[QueryPlanner] = None,
+                 use_kernel: bool = False):
+        self._vecs = jnp.asarray(vecs, jnp.float32)
+        self._nbrs = jnp.asarray(nbrs)
+        self._rmq = jnp.asarray(rmq)
+        self._dist_c = jnp.asarray(dist_c)
+        self.order = np.asarray(order)
+        self.attrs = np.asarray(attrs)
+        self.use_kernel = use_kernel
+        n, d = self._vecs.shape
+        self.n, self.d = n, d
+        self.tb = ROW_TILE          # must match the range_scan kernel tile
+        self.d_pad = -(-d // 128) * 128
+        if planner is None:
+            deg = float((np.asarray(nbrs) >= 0).sum(1).mean()) if n else 1.0
+            planner = QueryPlanner(max(n, 1), deg)
+        self.planner = planner
+        self._x_pad = None          # padded scan copy, built on first scan
+        self._warm: Set[Tuple] = set()
+
+    @classmethod
+    def from_graph(cls, g, **kw) -> "SearchSubstrate":
+        """Build over one ``RNSGGraph`` (single node or one shard)."""
+        return cls(g.vecs, g.nbrs, g.rmq, g.dist_c, g.order, g.attrs, **kw)
+
+    # ------------------------------------------------------------ resolve
+    def resolve(self, attr_ranges: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Attribute ranges (Q,2) -> inclusive rank intervals (lo, hi)."""
+        return resolve.rank_interval(self.attrs, attr_ranges)
+
+    # ---------------------------------------------------------------- run
+    def run(self, req: SearchRequest) -> SearchResult:
+        """Dispatch one request and stitch the result (original ids)."""
+        qv = np.asarray(req.queries, np.float32)
+        lo = np.asarray(req.lo, np.int64)
+        hi = np.asarray(req.hi, np.int64)
+        k, ef = int(req.k), int(req.ef)
+        if req.strategy == "graph":
+            ids, dists, stats = self._run_graph(qv, lo, hi, k, ef,
+                                                req.use_kernel)
+        else:
+            ids, dists, stats = self._run_planned(qv, lo, hi, k, ef,
+                                                  req.strategy, req.use_kernel)
+        return SearchResult(resolve.remap_ids(self.order, ids), dists, stats)
+
+    # ------------------------------------------------------ graph strategy
+    def _run_graph(self, qv, lo, hi, k, ef, use_kernel):
+        """The paper's path: one beam-search dispatch over the full batch."""
+        qj = jnp.asarray(qv, jnp.float32)
+        lo_j = jnp.asarray(lo)
+        hi_j = jnp.asarray(hi)
+        entry = resolve.select_entry(self._rmq, self._dist_c, lo_j, hi_j,
+                                     self.n)
+        ids, dists, st = beam_search_batch(
+            self._vecs, self._nbrs, qj, lo_j, hi_j, entry,
+            k=k, ef=max(ef, k), use_kernel=use_kernel)
+        st = jax.tree.map(np.asarray, st)
+        st["strategy"] = np.ones(len(qv), np.int8)          # all graph/beam
+        st["scan_frac"] = 0.0
+        return np.asarray(ids), np.asarray(dists), st
+
+    # ---------------------------------------------------- planned strategies
+    def _run_planned(self, qv, lo, hi, k, ef, mode, use_kernel):
+        """Routing policy: plan the batch, dispatch each fixed-shape
+        partition, stitch back in request order."""
+        q = len(qv)
+        plan = self.planner.plan_batch(lo, hi, k=k, ef=ef, mode=mode)
+        out_ids = np.full((q, k), -1, np.int32)
+        out_d = np.full((q, k), INF, np.float32)
+        hops = np.zeros(q, np.int32)
+        ndist = np.zeros(q, np.int32)
+
+        for part in plan.partitions:
+            idx = part.indices      # never empty (guarded at plan time)
+            if part.kind == "scan":
+                ids_p, d_p, units = self._run_scan(qv, lo, hi, idx,
+                                                   part.param, part.pad_q, k)
+                ndist[idx] = units
+            else:
+                ids_p, d_p, st = self._run_beam(qv, lo, hi, idx,
+                                                part.param, part.pad_q, k,
+                                                calibrate=(mode == "auto"),
+                                                use_kernel=use_kernel)
+                hops[idx] = st["hops"]
+                ndist[idx] = st["ndist"]
+            out_ids[idx] = ids_p
+            out_d[idx] = d_p
+
+        stats = {"hops": hops, "ndist": ndist,
+                 "strategy": plan.strategy, "scan_frac": plan.scan_frac}
+        return out_ids, out_d, stats
+
+    # ------------------------------------------------------------------
+    def _scan_corpus(self):
+        """Row/lane-padded corpus copy for the scan kernel (lazy: shards
+        that never route to scan skip the duplicate)."""
+        if self._x_pad is None:
+            n_pad = -(-self.n // self.tb) * self.tb
+            self._x_pad = jnp.pad(
+                self._vecs, ((0, n_pad - self.n), (0, self.d_pad - self.d)))
+        return self._x_pad
+
+    def _run_scan(self, qv, lo, hi, idx, bucket: int, pad_q: int, k: int):
+        nq = len(idx)
+        starts = np.zeros(pad_q, np.int32)
+        lens = np.zeros(pad_q, np.int32)
+        starts[:nq] = lo[idx]
+        lens[:nq] = np.clip(hi[idx] - lo[idx] + 1, 0, bucket)
+        qp = np.zeros((pad_q, self.d_pad), np.float32)
+        qp[:nq, :self.d] = qv[idx]
+        sig = ("scan", bucket, pad_q, k)
+        t0 = time.perf_counter()
+        ids, d = range_scan(self._scan_corpus(), jnp.asarray(starts),
+                            jnp.asarray(lens), jnp.asarray(qp),
+                            bucket=bucket, k=k)
+        ids = np.asarray(ids)[:nq]
+        d = np.asarray(d)[:nq]
+        dt = time.perf_counter() - t0
+        units = window_rows(bucket, self.tb)
+        if sig in self._warm:
+            # the dispatch did pad_q windows of work, not nq: normalize by
+            # pad_q so calibration measures the kernel, not the padding ratio
+            self.planner.cost.observe_wall("scan", units, dt, pad_q)
+        self._warm.add(sig)
+        return ids, d, units
+
+    def _run_beam(self, qv, lo, hi, idx, ef: int, pad_q: int, k: int, *,
+                  calibrate: bool, use_kernel: bool = False):
+        nq = len(idx)
+        if nq == 0:                 # empty partition: nothing to dispatch
+            empty = np.zeros(0, np.int32)
+            return (np.zeros((0, k), np.int32), np.zeros((0, k), np.float32),
+                    {"hops": empty, "ndist": empty})
+        pad = np.concatenate([idx, np.repeat(idx[-1:], pad_q - nq)])
+        lo_j = jnp.asarray(np.clip(lo[pad], 0, self.n - 1).astype(np.int32))
+        hi_j = jnp.asarray(np.clip(hi[pad], 0, self.n - 1).astype(np.int32))
+        entry = resolve.select_entry(self._rmq, self._dist_c, lo_j, hi_j,
+                                     self.n)
+        qp = jnp.asarray(qv[pad])
+        sig = ("beam", ef, pad_q, k)
+        t0 = time.perf_counter()
+        ids, d, st = beam_search_batch(
+            self._vecs, self._nbrs, qp,
+            jnp.asarray(lo[pad].astype(np.int32)),
+            jnp.asarray(hi[pad].astype(np.int32)),
+            entry, k=k, ef=max(ef, k), use_kernel=use_kernel)
+        ids = np.asarray(ids)[:nq]
+        d = np.asarray(d)[:nq]
+        st = {kk: np.asarray(vv)[:nq] for kk, vv in st.items()}
+        dt = time.perf_counter() - t0
+        if calibrate:
+            self.planner.cost.update_beam(float(st["ndist"].mean()), ef)
+            if sig in self._warm:
+                # pad lanes duplicate the last real query, so pad_q lanes of
+                # ~ndist work each were executed — normalize by pad_q
+                self.planner.cost.observe_wall(
+                    "beam", max(float(st["ndist"].mean()), 1.0), dt, pad_q)
+        self._warm.add(sig)
+        return ids, d, st

@@ -7,19 +7,29 @@ shard, so
   * shards can be **constructed independently in parallel** (provably
     equivalent to slicing a global build, up to KNN approximation noise), and
   * a query with range ``q.I`` only needs the shards whose attribute span
-    intersects ``q.I``; per-shard beam searches are exact RNSG searches on
-    their sub-ranges, and a top-k merge of shard results equals the global
-    range search.
+    intersects ``q.I``; per-shard searches are exact RNSG searches on their
+    sub-ranges, and a top-k merge of shard results equals the global search.
 
-Execution: one shard per device along the ``data`` axis; queries are
-replicated; each device clips the query range to its shard (empty ⇒ the beam
-no-ops), runs the batched beam search, and an ``all_gather`` + top-k merge
-produces replicated results.
+Resolution happens **once**, globally: the query's attribute range maps to a
+global rank interval (``repro.search.resolve``), which each shard *clips* to
+its contiguous rank slice — no per-shard ``searchsorted``.  Execution then
+routes through the unified search substrate:
+
+  * local path (``mesh=None``): one ``SearchSubstrate`` per shard, so each
+    shard runs the full strategy router — ``plan="auto"`` composes the fused
+    range-scan strategy across shards (shard-local rank slices stay
+    contiguous) — followed by a host top-k merge;
+  * mesh path: one shard per device along the ``data`` axis; the traced
+    per-device body uses the substrate's resolve primitives (clip, RMQ entry,
+    id remap) around the shared beam search, and an ``all_gather`` + top-k
+    merge produces replicated results.  (The cost-model router is host-side
+    policy and is not traced, so the mesh path always runs the graph
+    strategy.)
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,21 +38,24 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.beam import beam_search_batch
 from repro.core.construction import build_rnsg
-from repro.core.entry import rmq_query_jax
+from repro.search import (SearchRequest, SearchSubstrate, clip_interval,
+                          clip_interval_jax, rank_interval, remap_ids_jax,
+                          select_entry)
 
 
-def _shard_search(vecs, nbrs, attrs, rmq, dist_c, order, qv, ranges, *,
+def _shard_search(vecs, nbrs, rmq, dist_c, order, rank0, qv, lo, hi, *,
                   k: int, ef: int):
-    """Per-device body. Leading shard dim of size 1 (shard_map slice)."""
-    vecs, nbrs, attrs = vecs[0], nbrs[0], attrs[0]
+    """Per-device body. Leading shard dim of size 1 (shard_map slice).
+    lo/hi are *global* rank intervals (replicated); rank0 is this shard's
+    first global rank."""
+    vecs, nbrs = vecs[0], nbrs[0]
     rmq, dist_c, order = rmq[0], dist_c[0], order[0]
-    n = attrs.shape[0]
-    lo = jnp.searchsorted(attrs, ranges[:, 0], side="left").astype(jnp.int32)
-    hi = (jnp.searchsorted(attrs, ranges[:, 1], side="right") - 1).astype(jnp.int32)
-    entry = rmq_query_jax(rmq, dist_c, jnp.minimum(lo, n - 1),
-                          jnp.clip(hi, 0, n - 1))
-    ids, dists, _ = beam_search_batch(vecs, nbrs, qv, lo, hi, entry, k=k, ef=ef)
-    orig = jnp.where(ids >= 0, order[jnp.maximum(ids, 0)], -1)
+    n = vecs.shape[0]
+    slo, shi = clip_interval_jax(lo, hi, rank0[0], n)
+    entry = select_entry(rmq, dist_c, slo, shi, n)
+    ids, dists, _ = beam_search_batch(vecs, nbrs, qv, slo, shi, entry,
+                                      k=k, ef=ef)
+    orig = remap_ids_jax(order, ids)
     dists = jnp.where(ids >= 0, dists, jnp.inf)
     return orig[None], dists[None]                       # (1, Q, k)
 
@@ -71,6 +84,8 @@ class DistributedRFANN:
         self.mesh = mesh
         self.axis = axis
         self.n_shards = n_shards
+        self.per = per
+        self.attrs_sorted = as_       # global resolve happens over this
         graphs = []
         for s in range(n_shards):      # independently buildable (heredity)
             sl = slice(s * per, (s + 1) * per)
@@ -85,30 +100,49 @@ class DistributedRFANN:
         self.rmq = stack(lambda g, o: g.rmq)
         self.dist_c = stack(lambda g, o: g.dist_c)
         self.order = stack(lambda g, o: o[g.order].astype(np.int32))
+        self.rank0 = jnp.asarray(
+            np.arange(n_shards, dtype=np.int32)[:, None] * per)   # (S, 1)
         self.build_seconds = sum(g.build_seconds for g, _ in graphs)
+        self._subs: Optional[list] = None
 
     @property
     def index_bytes(self) -> int:
         return (self.nbrs.nbytes + self.rmq.nbytes + self.dist_c.nbytes)
 
     # ------------------------------------------------------------------
+    @property
+    def substrates(self):
+        """One unified search substrate per shard (local execution path)."""
+        if self._subs is None:
+            self._subs = [
+                SearchSubstrate(self.vecs[s], self.nbrs[s], self.rmq[s],
+                                self.dist_c[s], np.asarray(self.order[s]),
+                                np.asarray(self.attrs[s]))
+                for s in range(self.n_shards)]
+        return self._subs
+
+    def _search_local(self, qv, lo, hi, *, k: int, ef: int, plan: str):
+        """Sequential per-shard substrate dispatch, merged by the same
+        ``_merge_topk`` the mesh path uses — identical ids by construction."""
+        q = len(qv)
+        all_i = np.full((self.n_shards, q, k), -1, np.int32)
+        all_d = np.full((self.n_shards, q, k), np.inf, np.float32)
+        for s, sub in enumerate(self.substrates):
+            slo, shi = clip_interval(lo, hi, s * self.per, self.per)
+            res = sub.run(SearchRequest(queries=qv, lo=slo, hi=shi,
+                                        k=k, ef=ef, strategy=plan))
+            all_i[s] = res.ids
+            all_d[s] = np.where(res.ids >= 0, res.dists, np.inf)
+        ids, dists = _merge_topk(jnp.asarray(all_i), jnp.asarray(all_d), k)
+        return np.asarray(ids), np.asarray(dists)
+
+    # ------------------------------------------------------------------
     def _search_fn(self, k: int, ef: int):
         body = partial(_shard_search, k=k, ef=ef)
-
-        if self.mesh is None:
-            def local(vecs, nbrs, attrs, rmq, dist_c, order, qv, ranges):
-                outs = [body(vecs[s:s + 1], nbrs[s:s + 1], attrs[s:s + 1],
-                             rmq[s:s + 1], dist_c[s:s + 1], order[s:s + 1],
-                             qv, ranges) for s in range(self.n_shards)]
-                ids = jnp.concatenate([o[0] for o in outs])
-                ds = jnp.concatenate([o[1] for o in outs])
-                return _merge_topk(ids, ds, k)
-            return jax.jit(local)
-
         ax = self.axis
 
-        def sharded(vecs, nbrs, attrs, rmq, dist_c, order, qv, ranges):
-            ids, ds = body(vecs, nbrs, attrs, rmq, dist_c, order, qv, ranges)
+        def sharded(vecs, nbrs, rmq, dist_c, order, rank0, qv, lo, hi):
+            ids, ds = body(vecs, nbrs, rmq, dist_c, order, rank0, qv, lo, hi)
             ids = jax.lax.all_gather(ids[0], ax)         # (S, Q, k)
             ds = jax.lax.all_gather(ds[0], ax)
             return _merge_topk(ids, ds, k)
@@ -117,26 +151,37 @@ class DistributedRFANN:
         rep = P()
         fn = jax.shard_map(
             sharded, mesh=self.mesh,
-            in_specs=(shard_spec,) * 6 + (rep, rep),
+            in_specs=(shard_spec,) * 6 + (rep, rep, rep),
             out_specs=(rep, rep), check_vma=False)
         return jax.jit(fn)
 
     def search(self, queries: np.ndarray, attr_ranges: np.ndarray, *,
-               k: int = 10, ef: int = 64) -> Tuple[np.ndarray, np.ndarray]:
-        fn = self._search_fn(k, max(ef, k))
-        ids, dists = fn(self.vecs, self.nbrs, self.attrs, self.rmq,
-                        self.dist_c, self.order,
-                        jnp.asarray(queries, jnp.float32),
-                        jnp.asarray(attr_ranges, jnp.float32))
+               k: int = 10, ef: int = 64,
+               plan: str = "graph") -> Tuple[np.ndarray, np.ndarray]:
+        qv = np.asarray(queries, np.float32)
+        lo, hi = rank_interval(self.attrs_sorted,
+                               np.asarray(attr_ranges, np.float32))
+        ef = max(ef, k)
+        if self.mesh is None:
+            return self._search_local(qv, lo, hi, k=k, ef=ef, plan=plan)
+        if plan != "graph":
+            raise ValueError("mesh execution traces the per-shard body; the "
+                             "host-side cost router needs mesh=None "
+                             "(plan='graph' only on a mesh)")
+        fn = self._search_fn(k, ef)
+        ids, dists = fn(self.vecs, self.nbrs, self.rmq, self.dist_c,
+                        self.order, self.rank0, jnp.asarray(qv),
+                        jnp.asarray(lo), jnp.asarray(hi))
         return np.asarray(ids), np.asarray(dists)
 
     # ------------------------------------------------------------------
     def lower_for_dryrun(self, nq: int, d: int, k: int = 10, ef: int = 64):
         """Compile-only proof that the sharded search lowers on a real mesh."""
         fn = self._search_fn(k, ef)
-        args = (self.vecs, self.nbrs, self.attrs, self.rmq, self.dist_c,
-                self.order,
+        args = (self.vecs, self.nbrs, self.rmq, self.dist_c, self.order,
+                self.rank0,
                 jax.ShapeDtypeStruct((nq, d), jnp.float32),
-                jax.ShapeDtypeStruct((nq, 2), jnp.float32))
+                jax.ShapeDtypeStruct((nq,), jnp.int32),
+                jax.ShapeDtypeStruct((nq,), jnp.int32))
         sds = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in args[:6]]
         return jax.jit(fn).lower(*sds, *args[6:])

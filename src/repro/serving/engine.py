@@ -1,20 +1,26 @@
 """Batched RFANN serving engine: dynamic batching over a request queue.
 
 Requests (query vector + attribute range) are coalesced into batches of up to
-``max_batch`` or ``max_wait_ms``, planned by the adaptive query planner (each
-dynamic batch is partitioned into fused range-scan and beam-search dispatches
-by selectivity — see ``repro.planner``), and resolved through per-request
-futures.  This is the paper's system in its deployment form.
+``max_batch`` or ``max_wait_ms``, executed through the unified search
+substrate (``index.search`` returns a ``SearchResult``; under ``plan="auto"``
+each dynamic batch is partitioned into fused range-scan and beam-search
+dispatches by selectivity — see ``repro.planner``), and resolved through
+per-request futures, each carrying its own per-request ``SearchResult``.
+
+If ``calibration_path`` is given, the planner's online-calibrated cost model
+is restored from it at startup and persisted at ``close()`` — a restarted
+server starts from steady-state routing instead of the prior.
 """
 from __future__ import annotations
 
+import os
 import queue
 import random
 import threading
 import time
 from concurrent.futures import Future
 from dataclasses import dataclass, field
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -55,12 +61,22 @@ class EngineStats:
 class RFANNEngine:
     def __init__(self, index, *, k: int = 10, ef: int = 64,
                  max_batch: int = 64, max_wait_ms: float = 2.0,
-                 plan: str = "auto"):
+                 plan: str = "auto",
+                 calibration_path: Optional[str] = None):
         self.index = index
         self.k, self.ef = k, ef
         self.plan = plan
         self.max_batch = max_batch
         self.max_wait = max_wait_ms / 1000.0
+        self.calibration_path = calibration_path
+        if calibration_path and os.path.exists(calibration_path):
+            planner = getattr(index, "planner", None)
+            if planner is not None:
+                try:
+                    planner.load_calibration(calibration_path)
+                except ValueError as e:     # stale schema / wrong corpus:
+                    import warnings         # serve from the prior instead
+                    warnings.warn(f"ignoring calibration: {e}")
         self._q: queue.Queue = queue.Queue()
         self._stop = threading.Event()
         self.stats = EngineStats()
@@ -92,19 +108,23 @@ class RFANNEngine:
                     break
             qv = np.stack([b[0] for b in batch])
             rg = np.stack([b[1] for b in batch])
-            ids, dists, st = self.index.search(qv, rg, k=self.k, ef=self.ef,
-                                               plan=self.plan)
-            if "strategy" in st:
-                from repro.planner.planner import SCAN
+            res = self.index.search(qv, rg, k=self.k, ef=self.ef,
+                                    plan=self.plan)
+            if "strategy" in res.stats:
+                from repro.planner import SCAN
                 self.stats.scan_routed += int(
-                    (np.asarray(st["strategy"]) == SCAN).sum())
+                    (np.asarray(res.stats["strategy"]) == SCAN).sum())
             now = time.perf_counter()
             for i, (_, _, t0, fut) in enumerate(batch):
                 self.stats.record_latency((now - t0) * 1e3)
-                fut.set_result((ids[i], dists[i]))
+                fut.set_result(res.row(i))
             self.stats.served += len(batch)
             self.stats.batches += 1
 
     def close(self):
         self._stop.set()
         self._thread.join(timeout=2.0)
+        if self.calibration_path:
+            planner = getattr(self.index, "planner", None)
+            if planner is not None:
+                planner.save_calibration(self.calibration_path)

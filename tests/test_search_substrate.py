@@ -1,0 +1,212 @@
+"""Unified search substrate: single-source resolve, strategy parity across
+every execution path, empty-partition guards, beam early-out, calibration
+persistence."""
+import json
+import re
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.beam import beam_search_batch
+from repro.core.rfann import RNSGIndex
+from repro.data.ann import make_attrs, make_vectors, selectivity_ranges
+from repro.planner import QueryPlanner
+from repro.planner.planner import Partition
+from repro.search import SearchRequest, SearchResult, select_entry
+from repro.serving.distributed import DistributedRFANN
+
+SRC = Path(__file__).resolve().parent.parent / "src" / "repro"
+
+
+# ------------------------------------------------------- single-source resolve
+def test_resolve_is_single_source():
+    """Acceptance: exactly one implementation of rank-interval mapping and
+    RMQ entry selection under src/repro — searchsorted / rmq_query_jax are
+    *called* only from the substrate's resolve module."""
+    call = re.compile(r"\b(?:np|jnp)\.searchsorted\s*\(|rmq_query_jax\s*\(")
+    offenders = []
+    for py in SRC.rglob("*.py"):
+        rel = py.relative_to(SRC).as_posix()
+        if rel == "search/resolve.py":          # the one allowed home
+            continue
+        for ln, line in enumerate(py.read_text().splitlines(), 1):
+            if line.lstrip().startswith("#"):
+                continue
+            if rel == "core/entry.py" and line.lstrip().startswith(
+                    "def rmq_query_jax"):       # the definition itself
+                continue
+            if call.search(line):
+                offenders.append(f"{rel}:{ln}: {line.strip()}")
+    assert not offenders, "\n".join(offenders)
+
+
+# ------------------------------------------------------------- strategy parity
+def _corpus(n=256, d=16, seed=0):
+    vecs = make_vectors(n, d, seed=seed)
+    attrs = make_attrs(n, seed=seed)
+    return vecs, attrs
+
+
+def _degenerate_ranges(attrs, nq, seed):
+    """Random selectivities plus the degenerate rows the paper's API must
+    handle: empty, single-point, full-span."""
+    s = np.sort(attrs)
+    rngs = [selectivity_ranges(attrs, nq - 3, 0.2, seed=seed)]
+    rngs.append(np.asarray([
+        [s[5] + 1e-7, s[5] + 2e-7],     # empty
+        [s[17], s[17]],                 # single point
+        [s[0], s[-1]],                  # full span
+    ], np.float32))
+    return np.concatenate(rngs)
+
+
+def test_strategy_parity_all_paths():
+    """With ef >= n every strategy is exact, so plan=graph/auto/scan/beam and
+    the sharded DistributedRFANN (graph and per-shard-planned) must return
+    identical id sets — including degenerate ranges."""
+    n, d, nq, k = 256, 16, 15, 8
+    vecs, attrs = _corpus(n, d)
+    idx = RNSGIndex.build(vecs, attrs, m=16, ef_spatial=16, ef_attribute=24)
+    dist = DistributedRFANN(vecs, attrs, n_shards=4, m=16, ef_spatial=16,
+                            ef_attribute=24)
+    qv = make_vectors(nq, d, seed=7)
+    ranges = _degenerate_ranges(attrs, nq, seed=11)
+
+    runs = {plan: idx.search(qv, ranges, k=k, ef=n, plan=plan).ids
+            for plan in ("graph", "auto", "scan", "beam")}
+    runs["dist_graph"] = dist.search(qv, ranges, k=k, ef=n, plan="graph")[0]
+    runs["dist_auto"] = dist.search(qv, ranges, k=k, ef=n, plan="auto")[0]
+
+    base = runs.pop("graph")
+    for q in range(nq):
+        want = set(base[q][base[q] >= 0].tolist())
+        for name, ids in runs.items():
+            got = set(ids[q][ids[q] >= 0].tolist())
+            assert got == want, (name, q, sorted(got), sorted(want))
+    # degenerate rows behave as specified
+    assert (base[nq - 3] == -1).all()                       # empty
+    assert base[nq - 2][0] >= 0 and (base[nq - 2][1:] == -1).all()  # single
+    assert (base[nq - 1] >= 0).all()                        # full span
+
+
+def test_search_result_is_tuple_compatible():
+    vecs, attrs = _corpus(128, 8)
+    idx = RNSGIndex.build(vecs, attrs, m=8, ef_spatial=8, ef_attribute=12)
+    qv = make_vectors(4, 8, seed=1)
+    rg = selectivity_ranges(attrs, 4, 0.3, seed=2)
+    res = idx.search(qv, rg, k=3, ef=16)
+    assert isinstance(res, SearchResult)
+    ids, dists, stats = res                     # legacy unpacking
+    assert np.array_equal(ids, res[0]) and np.array_equal(dists, res[1])
+    assert stats is res.stats and len(res) == 3
+    row = res.row(2)
+    assert row.ids.shape == (3,) and row.stats["hops"].shape == ()
+
+
+# ------------------------------------------------------ empty-partition guard
+def test_plan_never_emits_empty_partitions():
+    pl = QueryPlanner(n=10_000, mean_degree=16.0)
+    rng = np.random.default_rng(0)
+    for mode in ("auto", "scan", "beam"):
+        for q in (0, 1, 7, 33):
+            lo = rng.integers(0, 10_000, q)
+            hi = lo + rng.integers(-5, 5_000, q)     # includes empty ranges
+            plan = pl.plan_batch(lo, hi, k=10, ef=64, mode=mode)
+            assert all(len(p.indices) > 0 for p in plan.partitions)
+            covered = (np.concatenate([p.indices for p in plan.partitions])
+                       if plan.partitions else np.zeros(0, np.int64))
+            assert sorted(covered.tolist()) == list(range(q))
+
+
+def test_empty_partition_and_empty_batch_do_not_crash():
+    """Regression: dispatching a zero-query partition used to die on
+    ``idx[-1:]``; the substrate now guards it and zero-query requests."""
+    vecs, attrs = _corpus(128, 8)
+    idx = RNSGIndex.build(vecs, attrs, m=8, ef_spatial=8, ef_attribute=12)
+    sub = idx.substrate
+    ids, d, st = sub._run_beam(np.zeros((0, 8), np.float32),
+                               np.zeros(0, np.int64), np.zeros(0, np.int64),
+                               np.zeros(0, np.int64), 16, 8, 5,
+                               calibrate=False)
+    assert ids.shape == (0, 5) and st["hops"].shape == (0,)
+    for plan in ("graph", "auto", "scan", "beam"):
+        res = sub.run(SearchRequest(queries=np.zeros((0, 8), np.float32),
+                                    lo=np.zeros(0, np.int64),
+                                    hi=np.zeros(0, np.int64),
+                                    k=5, ef=16, strategy=plan))
+        assert res.ids.shape == (0, 5)
+
+
+# ------------------------------------------------------------- beam early-out
+def test_beam_early_out_same_results_fewer_hops():
+    """Narrow range (in-range count << ef): the pool never fills, so the
+    legacy condition burns steps_cap; the early-out must return identical
+    results in far fewer hops."""
+    n, d, ef = 512, 16, 64
+    vecs, attrs = _corpus(n, d, seed=3)
+    idx = RNSGIndex.build(vecs, attrs, m=16, ef_spatial=16, ef_attribute=24)
+    g = idx.g
+    nq = 8
+    qv = jnp.asarray(make_vectors(nq, d, seed=9))
+    lo = jnp.asarray(np.full(nq, 100, np.int32))
+    hi = jnp.asarray(np.full(nq, 115, np.int32))     # 16 in-range nodes < ef
+    entry = select_entry(jnp.asarray(g.rmq), jnp.asarray(g.dist_c), lo, hi, n)
+    args = (jnp.asarray(g.vecs), jnp.asarray(g.nbrs), qv, lo, hi, entry)
+    i_new, d_new, st_new = beam_search_batch(*args, k=5, ef=ef,
+                                             early_stop=True)
+    i_old, d_old, st_old = beam_search_batch(*args, k=5, ef=ef,
+                                             early_stop=False)
+    assert np.array_equal(np.asarray(i_new), np.asarray(i_old))
+    assert np.allclose(np.asarray(d_new), np.asarray(d_old), equal_nan=True)
+    steps_cap = 8 * ef + 64
+    assert (np.asarray(st_old["hops"]) == steps_cap).all()   # the old burn
+    assert (np.asarray(st_new["hops"]) < 64).all()           # early exit
+
+
+# ------------------------------------------------- calibration persistence
+def test_calibration_save_load_roundtrip(tmp_path):
+    vecs, attrs = _corpus(512, 16, seed=1)
+    idx = RNSGIndex.build(vecs, attrs, m=16, ef_spatial=16, ef_attribute=24)
+    qv = make_vectors(16, 16, seed=2)
+    rg = np.concatenate([selectivity_ranges(attrs, 8, 0.01, seed=1),
+                         selectivity_ranges(attrs, 8, 0.8, seed=2)])
+    for _ in range(3):                       # calibrate (incl. warm calls)
+        idx.search(qv, rg, k=5, ef=64, plan="auto")
+    p = str(tmp_path / "calib.json")
+    idx.planner.save_calibration(p)
+    state = json.load(open(p))
+    assert state["version"] == 1 and state["cost"]["beam_obs"] >= 1
+
+    fresh = QueryPlanner(n=idx.g.n, mean_degree=16.0)
+    assert fresh.cost.state_dict() != idx.planner.cost.state_dict()
+    fresh.load_calibration(p)
+    assert fresh.cost.state_dict() == idx.planner.cost.state_dict()
+
+    # calibration is per-index: a corpus-size mismatch must not load
+    wrong = QueryPlanner(n=idx.g.n + 1, mean_degree=16.0)
+    with pytest.raises(ValueError, match="corpus"):
+        wrong.load_calibration(p)
+
+
+def test_engine_wires_calibration(tmp_path):
+    from repro.serving.engine import RFANNEngine
+    vecs, attrs = _corpus(512, 16, seed=4)
+    idx = RNSGIndex.build(vecs, attrs, m=16, ef_spatial=16, ef_attribute=24)
+    p = str(tmp_path / "engine_calib.json")
+    eng = RFANNEngine(idx, k=5, ef=32, max_batch=8, max_wait_ms=5,
+                      plan="auto", calibration_path=p)
+    qv = make_vectors(16, 16, seed=5)
+    rg = selectivity_ranges(attrs, 16, 0.5, seed=6)
+    futs = [eng.submit(qv[i], rg[i]) for i in range(16)]
+    for f in futs:
+        assert f.result(timeout=120).ids.shape == (5,)
+    eng.close()                                  # persists on shutdown
+    saved = json.load(open(p))["cost"]
+
+    idx2 = RNSGIndex(idx.g)                      # fresh substrate + planner
+    eng2 = RFANNEngine(idx2, k=5, ef=32, plan="auto", calibration_path=p)
+    eng2.close()
+    # startup restored the persisted state exactly (JSON floats round-trip)
+    assert idx2.planner.cost.state_dict() == saved
