@@ -1,8 +1,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-fast verify lint bench-quick bench-planner bench-substrate \
-        bench-full quickstart
+.PHONY: test test-fast verify lint docs-check bench-quick bench-planner \
+        bench-substrate bench-mesh bench-full quickstart
 
 # tier-1 verify (the command CI runs)
 test:
@@ -20,6 +20,10 @@ lint:
 	  $(PY) -m compileall -q src tests benchmarks examples; \
 	fi
 
+# fail on broken intra-repo links in README.md / docs/*.md
+docs-check:
+	$(PY) tools/docs_check.py
+
 # skip the slow multidevice subprocess tests
 test-fast:
 	$(PY) -m pytest -x -q --ignore=tests/test_multidevice.py
@@ -32,6 +36,10 @@ bench-planner:
 
 bench-substrate:
 	$(PY) -m benchmarks.run --only search_substrate
+
+# mesh-path strategy routing (re-execs itself with 8 forced host devices)
+bench-mesh:
+	$(PY) -m benchmarks.run --only mesh_auto
 
 bench-full:
 	$(PY) -m benchmarks.run --full

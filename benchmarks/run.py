@@ -8,7 +8,12 @@ land in results/bench/*.csv).
 from __future__ import annotations
 
 import argparse
+import csv
+import os
+import subprocess
+import sys
 import time
+from pathlib import Path
 
 import numpy as np
 
@@ -210,6 +215,69 @@ def bench_search_substrate(n, d, nq, quick):
     return rows
 
 
+def bench_mesh_auto(n, d, nq, quick):
+    """Mesh-path strategy routing: ``DistributedRFANN(plan="auto")`` vs the
+    graph-only mesh path on a shard_map mesh across selectivity regimes.
+
+    Needs a multi-device mesh; with a single local device the bench re-execs
+    itself under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the
+    flag must be set before jax initializes its backends) and returns the
+    rows the child wrote to results/bench/mesh_auto.csv."""
+    import jax
+
+    root = Path(__file__).resolve().parent.parent
+    if jax.device_count() == 1 and not os.environ.get("RNSG_MESH_BENCH"):
+        env = dict(os.environ,
+                   XLA_FLAGS="--xla_force_host_platform_device_count=8",
+                   RNSG_MESH_BENCH="1",
+                   PYTHONPATH=os.pathsep.join(
+                       [str(root / "src"),
+                        os.environ.get("PYTHONPATH", "")]).rstrip(os.pathsep))
+        r = subprocess.run(
+            [sys.executable, "-m", "benchmarks.run", "--only", "mesh_auto",
+             "--n", str(n)] + ([] if quick else ["--full"]),
+            env=env, cwd=str(root), capture_output=True, text=True,
+            timeout=3600)
+        if r.returncode != 0:
+            raise RuntimeError(f"mesh_auto subprocess failed:\n{r.stdout}\n"
+                               f"{r.stderr}")
+        with open(root / "results" / "bench" / "mesh_auto.csv") as f:
+            return list(csv.DictReader(f))
+
+    from repro.data.ann import selectivity_ranges
+    from repro.search import rank_interval
+    from repro.serving.distributed import DistributedRFANN
+
+    devices = jax.device_count()
+    shards = devices
+    n -= n % shards                       # corpus must be a shard multiple
+    vecs, attrs = dataset(n, d)
+    m = 16 if quick else 32
+    mesh = jax.make_mesh((devices,), ("data",))
+    dist = DistributedRFANN(vecs, attrs, n_shards=shards, mesh=mesh,
+                            m=m, ef_spatial=m, ef_attribute=2 * m)
+    k, ef = 10, 64
+    wls = {"narrow_1pct": 0.01, "medium_10pct": 0.10, "wide_50pct": 0.50}
+    rows = []
+    for wname, frac in wls.items():
+        ranges = selectivity_ranges(attrs, nq, frac, seed=29)
+        qv = dataset(nq, d, seed=91)[0]
+        gt = gt_for(vecs, attrs, qv, ranges, k)
+        lo, hi = rank_interval(dist.attrs_sorted, ranges)
+        strat, _ = dist.mesh_substrate.plan_strategies(lo, hi, k=k, ef=ef,
+                                                       mode="auto")
+        scan_frac = round(float((strat == 0).mean()), 3)
+        for plan in ("graph", "auto"):
+            (ids, _), qps = timed_search(dist, qv, ranges, k, ef, plan=plan)
+            rows.append(dict(method=f"mesh_{plan}", workload=wname, ef=ef,
+                             recall=round(recall_at_k(np.asarray(ids), gt), 4),
+                             qps=round(qps, 1),
+                             scan_frac=scan_frac if plan == "auto" else "",
+                             devices=devices, shards=shards))
+    emit("mesh_auto", rows, quiet=True)
+    return rows
+
+
 def bench_kernels(quick):
     """Kernel microbench (interpret mode on CPU: correctness + derived
     roofline terms; wall numbers are *not* TPU times)."""
@@ -250,7 +318,8 @@ def bench_kernels(quick):
 
 
 ALL = ["qps_recall", "construction_time", "index_size", "param_sensitivity",
-       "vary_k", "scalability", "planner", "search_substrate", "kernels"]
+       "vary_k", "scalability", "planner", "search_substrate", "mesh_auto",
+       "kernels"]
 
 
 def main() -> None:
@@ -321,6 +390,21 @@ def main() -> None:
         print(f"search_substrate,{1e6/post['qps']:.1f},"
               f"narrow_beam_early_out_speedup={post['qps']/max(pre['qps'],1e-9):.2f}x"
               f"_recall={post['recall']}vs{pre['recall']}")
+    if "mesh_auto" in only:
+        rows = bench_mesh_auto(n, d, nq, quick)
+        print("method,workload,ef,recall,qps,scan_frac,devices,shards")
+        for r in rows:
+            print(f"{r['method']},{r['workload']},{r['ef']},{r['recall']},"
+                  f"{r['qps']},{r['scan_frac']},{r['devices']},{r['shards']}")
+        na = next(r for r in rows if r["method"] == "mesh_auto"
+                  and r["workload"] == "narrow_1pct")
+        ng = next(r for r in rows if r["method"] == "mesh_graph"
+                  and r["workload"] == "narrow_1pct")
+        print(f"mesh_auto,{1e6/float(na['qps']):.1f},"
+              f"narrow_speedup_vs_mesh_graph="
+              f"{float(na['qps'])/max(float(ng['qps']),1e-9):.2f}x"
+              f"_narrow_recall={na['recall']}vs{ng['recall']}"
+              f"_narrow_scan_frac={na['scan_frac']}")
     if "kernels" in only:
         rows = bench_kernels(quick)
         for r in rows:

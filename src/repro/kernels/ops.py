@@ -28,7 +28,9 @@ def gather_dist(x: jax.Array, ids: jax.Array, q: jax.Array) -> jax.Array:
 
 
 def range_scan(x: jax.Array, starts: jax.Array, lens: jax.Array,
-               q: jax.Array, *, bucket: int, k: int):
-    """Per-query masked scan + top-k over contiguous rank slices of x."""
+               q: jax.Array, *, bucket: int, k: int, n_valid: int = 0):
+    """Per-query masked scan + top-k over contiguous rank slices of x.
+    ``n_valid`` masks the zero rows padding x to a row-tile multiple
+    (0 = trust the window contract, i.e. all of x is real)."""
     return range_scan_pallas(x, starts, lens, q, bucket=bucket, k=k,
-                             interpret=_interpret())
+                             n_valid=n_valid, interpret=_interpret())

@@ -41,7 +41,7 @@ def window_rows(bucket: int, tb: int = 128) -> int:
 
 
 def _kernel(starts_ref, lens_ref, x_ref, q_ref, od_ref, oi_ref, acc_ref,
-            *, nd: int, tb: int, k: int):
+            *, nd: int, tb: int, k: int, n_valid: int):
     i = pl.program_id(0)          # query
     j = pl.program_id(1)          # row block within the window
     kd = pl.program_id(2)         # d-chunk
@@ -69,7 +69,7 @@ def _kernel(starts_ref, lens_ref, x_ref, q_ref, od_ref, oi_ref, acc_ref,
         ln = lens_ref[i]
         base = (start // tb) * tb
         rank = base + j * tb + jax.lax.broadcasted_iota(jnp.int32, (1, tb), 1)
-        valid = (rank >= start) & (rank < start + ln)
+        valid = (rank >= start) & (rank < start + ln) & (rank < n_valid)
         d_blk = jnp.where(valid, jnp.maximum(acc_ref[...], 0.0), jnp.inf)
         # union of the running top-k and this block; blocks arrive in
         # ascending-rank order and the running half comes first, so the
@@ -93,20 +93,30 @@ def _kernel(starts_ref, lens_ref, x_ref, q_ref, od_ref, oi_ref, acc_ref,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("bucket", "k", "tb", "td", "interpret"))
+                   static_argnames=("bucket", "k", "tb", "td", "interpret",
+                                    "n_valid"))
 def range_scan_pallas(x: jax.Array, starts: jax.Array, lens: jax.Array,
                       q: jax.Array, *, bucket: int, k: int, tb: int = 128,
-                      td: int = 512, interpret: bool = False):
+                      td: int = 512, interpret: bool = False,
+                      n_valid: int = 0):
     """x:(n_pad,d_pad) f32 rank-ordered, n_pad % tb == 0, d_pad % 128 == 0;
     starts/lens:(Q,) i32 per-query rank windows (len ≤ bucket); q:(Q,d_pad).
-    Returns (ids:(Q,k) i32 absolute ranks (-1 pad), dists:(Q,k) f32)."""
+    Returns (ids:(Q,k) i32 absolute ranks (-1 pad), dists:(Q,k) f32).
+
+    ``n_valid`` (0 = n_pad): ranks ≥ n_valid never enter the top-k, even when
+    a window nominally covers them.  Shard-local dispatch (the mesh substrate
+    traces this kernel per shard with windows clipped to the shard's rank
+    slice) passes the shard's true row count so the zero rows padding the
+    corpus to a row-tile multiple can never win."""
     n_pad, d_pad = x.shape
     Q = q.shape[0]
+    n_valid = int(n_valid) or n_pad
     if k > tb:
         # running top-k lives in one tb-lane register row; beyond that fall
         # back to the materializing oracle (rare: k > 128)
         from repro.kernels.ref import range_scan_ref
-        return range_scan_ref(x, starts, lens, q, bucket=bucket, k=k, tb=tb)
+        return range_scan_ref(x, starts, lens, q, bucket=bucket, k=k, tb=tb,
+                              n_valid=n_valid)
     td = d_pad if d_pad <= td else 128
     nd = d_pad // td
     w = window_rows(bucket, tb)
@@ -131,7 +141,7 @@ def range_scan_pallas(x: jax.Array, starts: jax.Array, lens: jax.Array,
         scratch_shapes=[pltpu.VMEM((1, tb), jnp.float32)],
     )
     dists, ids = pl.pallas_call(
-        functools.partial(_kernel, nd=nd, tb=tb, k=k),
+        functools.partial(_kernel, nd=nd, tb=tb, k=k, n_valid=n_valid),
         grid_spec=grid_spec,
         out_shape=(jax.ShapeDtypeStruct((Q, tb), jnp.float32),
                    jax.ShapeDtypeStruct((Q, tb), jnp.int32)),

@@ -22,18 +22,21 @@ def gather_dist_ref(x: jax.Array, ids: jax.Array, q: jax.Array) -> jax.Array:
 
 
 def range_scan_ref(x: jax.Array, starts: jax.Array, lens: jax.Array,
-                   q: jax.Array, *, bucket: int, k: int, tb: int = 128):
-    """Oracle for ``range_scan_pallas``: same window/alignment contract.
-    x:(n_pad,d); starts/lens:(Q,); q:(Q,d) -> (ids:(Q,k), dists:(Q,k))."""
+                   q: jax.Array, *, bucket: int, k: int, tb: int = 128,
+                   n_valid: int = 0):
+    """Oracle for ``range_scan_pallas``: same window/alignment/n_valid
+    contract.  x:(n_pad,d); starts/lens:(Q,); q:(Q,d) -> (ids, dists)."""
     from repro.kernels.range_scan import window_rows
     n_pad = x.shape[0]
+    n_valid = int(n_valid) or n_pad
     w = window_rows(bucket, tb)
     base = (starts.astype(jnp.int32) // tb) * tb
     rank = base[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]   # (Q, w)
     rows = x[jnp.clip(rank, 0, n_pad - 1)].astype(jnp.float32)       # (Q, w, d)
     diff = rows - q.astype(jnp.float32)[:, None, :]
     d2 = jnp.sum(diff * diff, axis=-1)
-    valid = (rank >= starts[:, None]) & (rank < (starts + lens)[:, None])
+    valid = ((rank >= starts[:, None]) & (rank < (starts + lens)[:, None])
+             & (rank < n_valid))
     d2 = jnp.where(valid, d2, jnp.inf)
     neg, idx = jax.lax.top_k(-d2, k)
     ids = jnp.where(jnp.isfinite(neg), base[:, None] + idx, -1)

@@ -183,8 +183,8 @@ def run_rnsg_cell(multi_pod: bool, variant: str = "base", save: bool = True):
     the query batch over the 'model' axis (every model rank serves its own
     1/16 slice — 16× throughput at identical per-query work)."""
     from repro.core.beam import beam_search_batch
-    from repro.search import (rank_interval_jax, remap_ids_jax, select_entry)
-    from repro.serving.distributed import _merge_topk
+    from repro.search import (merge_topk, rank_interval_jax, remap_ids_jax,
+                              select_entry)
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
@@ -204,13 +204,14 @@ def run_rnsg_cell(multi_pod: bool, variant: str = "base", save: bool = True):
         orig = remap_ids_jax(order, ids)
         ids_g = jax.lax.all_gather(orig, "data")
         d_g = jax.lax.all_gather(jnp.where(ids >= 0, dists, jnp.inf), "data")
-        return _merge_topk(ids_g, d_g, k)
+        return merge_topk(ids_g, d_g, k)
 
     shard = P(("pod", "data") if multi_pod else "data")
     q_spec = P("model") if qshard else P()
-    fn = jax.shard_map(body, mesh=mesh,
-                       in_specs=(shard,) * 6 + (q_spec, q_spec),
-                       out_specs=(q_spec, q_spec), check_vma=False)
+    from repro.parallel.sharding import shard_map_compat
+    fn = shard_map_compat(body, mesh,
+                          in_specs=(shard,) * 6 + (q_spec, q_spec),
+                          out_specs=(q_spec, q_spec))
     S = data_sz
     args = (jax.ShapeDtypeStruct((S, ns, d), jnp.float32),
             jax.ShapeDtypeStruct((S, ns, m), jnp.int32),

@@ -82,6 +82,32 @@ def abstract_mesh(axis_sizes: Sequence[int], axis_names: Sequence[str]):
         return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
 
 
+def shard_map_compat(f, mesh: Mesh, *, in_specs, out_specs):
+    """Version-portable ``shard_map``: jax ≥ 0.5 exposes ``jax.shard_map``
+    (replication checking via ``check_vma``), jax 0.4.x ships it as
+    ``jax.experimental.shard_map.shard_map`` (``check_rep``).  Replication
+    checking is disabled on both — callers (the RFANN mesh substrate, the
+    pipeline) end their bodies in explicitly replicated ``all_gather``
+    merges, which the static checker cannot always prove."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm_old
+        return sm_old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+    err = None
+    for kw in ({"check_vma": False}, {"check_rep": False}):
+        try:
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
+        except TypeError as e:                  # other flag spelling
+            err = e
+    # no flagless fallback: it would silently re-enable the replication
+    # check this wrapper exists to disable — fail loudly instead
+    raise TypeError("jax.shard_map accepts neither check_vma nor "
+                    "check_rep; extend shard_map_compat for this jax "
+                    "version") from err
+
+
 def _alternatives(entry) -> Tuple[Tuple[str, ...], ...]:
     if not entry:
         return ()

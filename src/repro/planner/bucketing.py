@@ -45,3 +45,22 @@ def buckets_np(lens: np.ndarray, *, min_bucket: int = 64,
     ln = np.maximum(lens.astype(np.int64), 1)
     b = 1 << np.ceil(np.log2(ln)).astype(np.int64)
     return np.clip(b, min_bucket, max_bucket).astype(np.int64)
+
+
+def next_pow2_np(x: np.ndarray) -> np.ndarray:
+    """Vectorized next_pow2 (floor 1, like the scalar)."""
+    ln = np.maximum(np.asarray(x, np.int64), 1)
+    return (1 << np.ceil(np.log2(ln)).astype(np.int64)).astype(np.int64)
+
+
+def ef_bucket_np(lens: np.ndarray, k: int, ef: int) -> np.ndarray:
+    """Vectorized ef_bucket (same cap/floor/quantize contract)."""
+    cap = next_pow2_np(lens)
+    return np.maximum(np.minimum(next_pow2(int(ef)), cap),
+                      next_pow2(int(k))).astype(np.int64)
+
+
+def window_rows_np(buckets: np.ndarray, tb: int = ROW_TILE) -> np.ndarray:
+    """Vectorized window_rows (kernel-owned contract: ceil(b/tb)+1 blocks)."""
+    b = np.asarray(buckets, np.int64)
+    return ((-(-b // tb) + 1) * tb).astype(np.int64)

@@ -18,13 +18,15 @@ as one fixed-shape jit call regardless of batch mix.
 from __future__ import annotations
 
 import json
+import os
 from dataclasses import dataclass, field
 from typing import List, Tuple
 
 import numpy as np
 
-from repro.planner.bucketing import (ROW_TILE, buckets_np, ef_bucket,
-                                     next_pow2, pad_pow2, window_rows)
+from repro.planner.bucketing import (buckets_np, bucket_for_len, ef_bucket,
+                                     ef_bucket_np, next_pow2, pad_pow2,
+                                     window_rows, window_rows_np)
 from repro.planner.cost import CostModel
 
 SCAN, BEAM = 0, 1
@@ -66,6 +68,43 @@ class QueryPlanner:
                                 int(max_scan_frac * self.n))
         self.max_bucket = next_pow2(self.n)
 
+    # ----------------------------------------------------- routing decision
+    def choose_strategy(self, length: int, *, k: int, ef: int) -> int:
+        """Per-query cost-based routing for one rank-interval length.
+
+        Scalar reference semantics for ``choose_strategy_batch`` (the unit
+        tests hold the two in lockstep): empty and ``len ≤ k`` slices always
+        scan (exact and ~free), slices above the selectivity ceiling always
+        beam, and in between the calibrated cost model decides."""
+        ln = int(length)
+        if ln <= 0 or ln <= k:
+            return SCAN
+        if ln > self.max_scan_len:
+            return BEAM
+        bucket = bucket_for_len(ln, min_bucket=self.min_bucket,
+                                max_bucket=self.max_bucket)
+        scan_cost = self.cost.predict_scan_units(window_rows(bucket))
+        beam_cost = self.cost.predict_beam_units(ef_bucket(ln, k, ef))
+        return SCAN if scan_cost <= beam_cost else BEAM
+
+    def choose_strategy_batch(self, lens: np.ndarray, *, k: int,
+                              ef: int) -> np.ndarray:
+        """Vectorized ``choose_strategy``: (Q,) lengths -> (Q,) int8 strategy
+        vector (``SCAN``/``BEAM``).  Pure numpy over the whole batch — this
+        is the host-side half of mesh dispatch, where the strategy vector is
+        computed once and passed into ``shard_map`` as a replicated operand."""
+        lens = np.asarray(lens, np.int64)
+        buckets = buckets_np(lens, min_bucket=self.min_bucket,
+                             max_bucket=self.max_bucket)
+        scan_cost = (self.cost.predict_scan_units(1) *
+                     window_rows_np(buckets).astype(np.float64))
+        beam_cost = (self.cost.beam_unit * self.cost.ndist_per_ef *
+                     ef_bucket_np(lens, k, ef).astype(np.float64))
+        eligible = lens <= self.max_scan_len
+        use_scan = (eligible & (scan_cost <= beam_cost)) | (lens <= 0) \
+            | (lens <= k)                  # tiny slices: scan is exact & free
+        return np.where(use_scan, SCAN, BEAM).astype(np.int8)
+
     # ------------------------------------------------------------------
     def plan_batch(self, lo: np.ndarray, hi: np.ndarray, *, k: int, ef: int,
                    mode: str = "auto") -> Plan:
@@ -82,16 +121,7 @@ class QueryPlanner:
         elif mode == "beam":
             use_scan = lens <= 0           # beam cannot express empty ranges
         else:
-            scan_cost = self.cost.predict_scan_units(1) * np.asarray(
-                [window_rows(int(b)) for b in buckets], np.float64)
-            ef_effs = np.asarray([ef_bucket(int(l), k, ef) for l in lens],
-                                 np.int64)
-            beam_cost = np.asarray(
-                [self.cost.predict_beam_units(int(e)) for e in ef_effs],
-                np.float64)
-            eligible = lens <= self.max_scan_len
-            use_scan = (eligible & (scan_cost <= beam_cost)) | (lens <= 0) \
-                | (lens <= k)              # tiny slices: scan is exact & free
+            use_scan = self.choose_strategy_batch(lens, k=k, ef=ef) == SCAN
         strategy = np.where(use_scan, SCAN, BEAM).astype(np.int8)
 
         partitions: List[Partition] = []
@@ -116,10 +146,22 @@ class QueryPlanner:
     # ------------------------------------------------------------------
     def save_calibration(self, path: str) -> None:
         """Persist the online-calibrated cost model (JSON) so a restarted
-        server starts from steady-state routing instead of the prior."""
+        server starts from steady-state routing instead of the prior.
+
+        Atomic: the state is written to a sibling temp file, fsynced, and
+        renamed over ``path`` — a crash mid-shutdown can never leave a
+        truncated file for the next startup's ``load_calibration``."""
         state = dict(version=1, n=self.n, cost=self.cost.state_dict())
-        with open(path, "w") as f:
-            json.dump(state, f, indent=2, sort_keys=True)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        try:
+            with open(tmp, "w") as f:
+                json.dump(state, f, indent=2, sort_keys=True)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.remove(tmp)
 
     def load_calibration(self, path: str) -> None:
         """Raises ValueError on a schema or corpus mismatch — calibration

@@ -2,7 +2,8 @@
 
 Every query path in the repo — single-node ``RNSGIndex``, the adaptive
 planner, the dynamic-batching engine, and range-partitioned distributed
-serving — flows through this package:
+serving (both its local and ``shard_map`` mesh paths) — flows through this
+package:
 
     SearchRequest (queries, rank intervals, k/ef, strategy)
         -> resolve   (rank-interval mapping + RMQ entry selection)
@@ -10,14 +11,28 @@ serving — flows through this package:
         -> stitch    (request-order stats, rank -> original id remap)
         -> SearchResult
 
-See docs/architecture.md for the layer diagram.
+Two execution substrates implement dispatch + stitch over the same resolve
+primitives:
+
+* ``SearchSubstrate`` — one attribute-sorted corpus slice on the host
+  (single node, or one shard of the distributed local path); the planner
+  partitions each batch into fixed-shape jit dispatches and calibrates the
+  cost model from observed wall times.
+* ``MeshSubstrate`` — all shards at once under ``shard_map``; the planner
+  runs host-side over shard-clipped global intervals and the traced
+  per-device body executes a branchless scan+beam select, restitched in
+  request order before the cross-shard ``merge_topk``.
+
+See docs/architecture.md for the layer diagram and docs/distributed.md for
+the mesh dispatch flow.
 """
 from repro.search.request import STRATEGIES, SearchRequest, SearchResult
 from repro.search.resolve import (clip_interval, clip_interval_jax,
                                   rank_interval, rank_interval_jax,
                                   remap_ids, remap_ids_jax, select_entry)
-from repro.search.substrate import SearchSubstrate
+from repro.search.substrate import MeshSubstrate, SearchSubstrate, merge_topk
 
 __all__ = ["STRATEGIES", "SearchRequest", "SearchResult", "SearchSubstrate",
+           "MeshSubstrate", "merge_topk",
            "rank_interval", "rank_interval_jax", "select_entry",
            "remap_ids", "remap_ids_jax", "clip_interval", "clip_interval_jax"]

@@ -18,24 +18,49 @@ by duplicating the last real query (a duplicate lane adds no extra
 substrate feeds the cost model: observed ``ndist`` from beam stats and
 warm-call wall times per work unit (the first call of each jit signature is
 excluded so compile time never enters calibration).
+
+``MeshSubstrate`` is the ``shard_map`` twin for multi-device serving: the
+planner runs **host-side** over the globally resolved rank intervals (clipped
+per shard), and the resulting strategy vector partitions the batch into
+scan/beam sub-batches that enter the traced per-device body as replicated
+operands — a branchless select in which each shard executes the ``range_scan``
+kernel and the beam search at most once per call, scatters both groups back
+into request order, and finishes with the cross-shard ``all_gather`` + top-k
+merge.  See docs/distributed.md.
 """
 from __future__ import annotations
 
 import time
+from functools import partial
 from typing import Dict, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.core.beam import beam_search_batch
 from repro.kernels.ops import range_scan
-from repro.planner.bucketing import ROW_TILE, window_rows
-from repro.planner.planner import QueryPlanner, SCAN
+from repro.parallel.sharding import shard_map_compat
+from repro.planner.bucketing import (ROW_TILE, bucket_for_len, next_pow2,
+                                     pad_pow2, window_rows)
+from repro.planner.planner import BEAM, QueryPlanner, SCAN
 from repro.search import resolve
 from repro.search.request import SearchRequest, SearchResult
 
 INF = np.float32(np.inf)
+
+
+def merge_topk(ids: jax.Array, dists: jax.Array, k: int):
+    """(S,Q,k) per-shard results -> (Q,k) global top-k.  Shared by the local
+    path, the mesh bodies, and the dry-run — identical merges by
+    construction (same flatten order, same ``lax.top_k`` tie-breaking)."""
+    s, q, kk = ids.shape
+    flat_i = jnp.moveaxis(ids, 0, 1).reshape(q, s * kk)
+    flat_d = jnp.moveaxis(dists, 0, 1).reshape(q, s * kk)
+    nd, sel = jax.lax.top_k(-flat_d, k)
+    out_i = jnp.take_along_axis(flat_i, sel, axis=1)
+    return jnp.where(jnp.isfinite(-nd), out_i, -1), -nd
 
 
 class SearchSubstrate:
@@ -199,3 +224,257 @@ class SearchSubstrate:
                     "beam", max(float(st["ndist"].mean()), 1.0), dt, pad_q)
         self._warm.add(sig)
         return ids, d, st
+
+
+# ======================================================================
+# Mesh path: traced per-device bodies + the host-planned mesh substrate.
+# ======================================================================
+def _shard_graph(vecs, nbrs, rmq, dist_c, order, rank0, qv, lo, hi, *,
+                 k: int, ef: int, axis: str):
+    """Per-device graph body (the paper's mesh path): clip the replicated
+    global rank interval to this shard, one beam dispatch over the full
+    batch, then the cross-shard merge.  Leading shard dim of size 1."""
+    vecs, nbrs = vecs[0], nbrs[0]
+    rmq, dist_c, order = rmq[0], dist_c[0], order[0]
+    n = vecs.shape[0]
+    slo, shi = resolve.clip_interval_jax(lo, hi, rank0[0], n)
+    entry = resolve.select_entry(rmq, dist_c, slo, shi, n)
+    ids, dists, _ = beam_search_batch(vecs, nbrs, qv, slo, shi, entry,
+                                      k=k, ef=ef)
+    orig = resolve.remap_ids_jax(order, ids)
+    dists = jnp.where(ids >= 0, dists, jnp.inf)
+    ids_g = jax.lax.all_gather(orig, axis)               # (S, Q, k)
+    ds_g = jax.lax.all_gather(dists, axis)
+    return merge_topk(ids_g, ds_g, k)
+
+
+def _shard_planned(x_pad, vecs, nbrs, rmq, dist_c, order, rank0,
+                   scan_q, scan_lo, scan_hi, scan_dst,
+                   beam_q, beam_lo, beam_hi, beam_dst, *,
+                   k: int, ef: int, bucket: int, nq: int,
+                   has_beam: bool, axis: str):
+    """Per-device planned body: branchless strategy dispatch.
+
+    The host already split the batch into scan/beam sub-batches (replicated
+    operands, padded to pow2 with empty windows), so the trace runs the
+    ``range_scan`` kernel and the beam search **at most once each** — no
+    ``lax.cond`` on traced values, no per-query branching.  Each group's
+    results scatter into an ``(nq+1, k)`` buffer at its original request
+    positions (pads land in the sink row ``nq``, dropped before the merge),
+    restoring request order *before* the cross-shard top-k merge so the merge
+    is identical to the graph body's.
+
+    The scan group is always non-empty here — uniform-beam batches dispatch
+    the graph body instead (``MeshSubstrate.run`` fast path)."""
+    x_pad, vecs, nbrs = x_pad[0], vecs[0], nbrs[0]
+    rmq, dist_c, order = rmq[0], dist_c[0], order[0]
+    n = vecs.shape[0]
+    out_i = jnp.full((nq + 1, k), -1, jnp.int32)
+    out_d = jnp.full((nq + 1, k), jnp.inf, jnp.float32)
+    slo, shi = resolve.clip_interval_jax(scan_lo, scan_hi, rank0[0], n)
+    lens = jnp.clip(shi - slo + 1, 0, bucket)            # shard-local window
+    starts = jnp.clip(slo, 0, n - 1)                     # (len 0 when empty)
+    ids_s, d_s = range_scan(x_pad, starts, lens, scan_q,
+                            bucket=bucket, k=k, n_valid=n)
+    d_s = jnp.where(ids_s >= 0, d_s, jnp.inf)
+    out_i = out_i.at[scan_dst].set(resolve.remap_ids_jax(order, ids_s))
+    out_d = out_d.at[scan_dst].set(d_s)
+    if has_beam:
+        slo, shi = resolve.clip_interval_jax(beam_lo, beam_hi, rank0[0], n)
+        entry = resolve.select_entry(rmq, dist_c, slo, shi, n)
+        ids_b, d_b, _ = beam_search_batch(vecs, nbrs, beam_q, slo, shi,
+                                          entry, k=k, ef=ef)
+        d_b = jnp.where(ids_b >= 0, d_b, jnp.inf)
+        out_i = out_i.at[beam_dst].set(resolve.remap_ids_jax(order, ids_b))
+        out_d = out_d.at[beam_dst].set(d_b)
+    ids_g = jax.lax.all_gather(out_i[:nq], axis)         # (S, Q, k)
+    ds_g = jax.lax.all_gather(out_d[:nq], axis)
+    return merge_topk(ids_g, ds_g, k)
+
+
+class MeshSubstrate:
+    """Mesh-path twin of ``SearchSubstrate``: host planning, traced dispatch.
+
+    The cost router is host-side policy and cannot run inside a traced
+    ``shard_map`` body, so the strategy split happens **before** tracing:
+
+    * plan     — ``QueryPlanner.choose_strategy_batch`` over each query's
+                 widest shard-local clip of the globally resolved rank
+                 interval (one replicated decision per query — every shard
+                 must agree so the traced shapes stay uniform);
+    * dispatch — the strategy vector partitions the batch host-side into a
+                 scan sub-batch (one shared pow2 ``bucket``) and a beam
+                 sub-batch, entering ``shard_map`` as replicated operands;
+                 ``_shard_planned`` runs each kernel at most once per shard;
+    * stitch   — in-trace scatter back to request order, ``all_gather`` +
+                 ``merge_topk`` across shards, replicated result.
+
+    Compiled signatures are bounded the same way as the local planner's:
+    ``(k, ef, bucket, pad_pow2(|scan|), pad_pow2(|beam|), Q)``.
+    """
+
+    def __init__(self, mesh, axis: str, vecs, nbrs, rmq, dist_c, order,
+                 rank0, *, planner: Optional[QueryPlanner] = None):
+        self.mesh, self.axis = mesh, axis
+        self._vecs = jnp.asarray(vecs, jnp.float32)      # (S, per, d)
+        self._nbrs = jnp.asarray(nbrs)
+        self._rmq = jnp.asarray(rmq)
+        self._dist_c = jnp.asarray(dist_c)
+        self._order = jnp.asarray(order)
+        self._rank0 = jnp.asarray(rank0)                 # (S, 1) int32
+        s, per, d = self._vecs.shape
+        self.n_shards, self.per, self.d = s, per, d
+        self.tb = ROW_TILE
+        self.d_pad = -(-d // 128) * 128
+        if planner is None:
+            deg = float((np.asarray(nbrs) >= 0).sum(-1).mean()) if per else 1.0
+            planner = QueryPlanner(max(per, 1), deg)
+        self.planner = planner
+        self._x_pad = None          # padded scan corpus, built on first scan
+        self._fns: Dict[Tuple, object] = {}
+
+    @property
+    def index_bytes(self) -> int:
+        return self._nbrs.nbytes + self._rmq.nbytes + self._dist_c.nbytes
+
+    # ------------------------------------------------------------- planning
+    def plan_strategies(self, lo: np.ndarray, hi: np.ndarray, *, k: int,
+                        ef: int, mode: str) -> Tuple[np.ndarray, np.ndarray]:
+        """Host half of mesh dispatch: (strategy (Q,) int8, lens_eff (Q,)).
+
+        ``lens_eff`` is each query's **widest shard-local clip** of its
+        global rank interval — the decision must be one replicated scalar
+        per query, and the widest shard is the one whose scan cost the
+        traced dispatch actually pays (shards execute in lockstep)."""
+        lo = np.asarray(lo, np.int64)
+        hi = np.asarray(hi, np.int64)
+        lens_eff = np.zeros(len(lo), np.int64)
+        for s in range(self.n_shards):
+            slo, shi = resolve.clip_interval(lo, hi, s * self.per, self.per)
+            lens_eff = np.maximum(lens_eff, np.clip(
+                shi.astype(np.int64) - slo + 1, 0, None))
+        if mode == "scan":
+            return np.full(len(lo), SCAN, np.int8), lens_eff
+        if mode == "beam":
+            return np.full(len(lo), BEAM, np.int8), lens_eff
+        return (self.planner.choose_strategy_batch(lens_eff, k=k, ef=ef),
+                lens_eff)
+
+    # ---------------------------------------------------------------- run
+    def run(self, req: SearchRequest) -> SearchResult:
+        """Dispatch one request on the mesh; result ids are original corpus
+        ids, already merged across shards (replicated)."""
+        qv = np.asarray(req.queries, np.float32)
+        lo = np.asarray(req.lo, np.int64)
+        hi = np.asarray(req.hi, np.int64)
+        k, ef = int(req.k), max(int(req.ef), int(req.k))
+        nq = len(qv)
+        if nq == 0:
+            return SearchResult(np.zeros((0, k), np.int32),
+                                np.zeros((0, k), np.float32),
+                                {"strategy": np.zeros(0, np.int8),
+                                 "scan_frac": 0.0})
+        if req.strategy == "graph":
+            fn = self.graph_fn(k, ef)
+            ids, dists = fn(self._vecs, self._nbrs, self._rmq, self._dist_c,
+                            self._order, self._rank0, jnp.asarray(qv),
+                            jnp.asarray(lo.astype(np.int32)),
+                            jnp.asarray(hi.astype(np.int32)))
+            return SearchResult(np.asarray(ids), np.asarray(dists),
+                                {"strategy": np.ones(nq, np.int8),
+                                 "scan_frac": 0.0})
+        strategy, lens_eff = self.plan_strategies(lo, hi, k=k, ef=ef,
+                                                  mode=req.strategy)
+        scan_idx = np.flatnonzero(strategy == SCAN)
+        beam_idx = np.flatnonzero(strategy == BEAM)
+        if len(scan_idx) == 0:
+            # uniform-beam batch: the planned body would degenerate to the
+            # graph body plus pow2 padding and a scatter — dispatch the graph
+            # fn directly (same ef, same merge, bit-identical results)
+            fn = self.graph_fn(k, ef)
+            ids, dists = fn(self._vecs, self._nbrs, self._rmq, self._dist_c,
+                            self._order, self._rank0, jnp.asarray(qv),
+                            jnp.asarray(lo.astype(np.int32)),
+                            jnp.asarray(hi.astype(np.int32)))
+            return SearchResult(np.asarray(ids), np.asarray(dists),
+                                {"strategy": strategy, "scan_frac": 0.0})
+        # scan_idx is non-empty past the fast path; one shared bucket covers
+        # every scan query's widest shard-local clip (never truncates)
+        cap = next_pow2(self.per)
+        bucket = max(bucket_for_len(
+            int(ln), min_bucket=self.planner.min_bucket, max_bucket=cap)
+            for ln in lens_eff[scan_idx])
+        pad_s = pad_pow2(len(scan_idx))
+        pad_b = pad_pow2(len(beam_idx)) if len(beam_idx) else 0
+        fn = self._planned_fn(k=k, ef=ef, bucket=bucket, pad_s=pad_s,
+                              pad_b=pad_b, nq=nq)
+        scan_ops = self._group_operands(qv, lo, hi, scan_idx, pad_s, nq,
+                                        lane_pad=True)
+        beam_ops = self._group_operands(qv, lo, hi, beam_idx, pad_b, nq,
+                                        lane_pad=False)
+        ids, dists = fn(self._scan_corpus(), self._vecs, self._nbrs, self._rmq,
+                        self._dist_c, self._order, self._rank0,
+                        *scan_ops, *beam_ops)
+        scan_frac = len(scan_idx) / nq
+        return SearchResult(np.asarray(ids), np.asarray(dists),
+                            {"strategy": strategy, "scan_frac": scan_frac})
+
+    # ------------------------------------------------------------ operands
+    def _group_operands(self, qv, lo, hi, idx, pad: int, nq: int, *,
+                        lane_pad: bool):
+        """One strategy group's replicated operands: queries (pow2-padded),
+        global rank interval, and scatter destinations.  Pads carry empty
+        windows (lo=1 > hi=0 — masked in scan, immediate exit in beam) and
+        scatter into the sink row ``nq``."""
+        m = len(idx)
+        qd = self.d_pad if lane_pad else self.d
+        g_q = np.zeros((pad, qd), np.float32)
+        g_lo = np.ones(pad, np.int32)
+        g_hi = np.zeros(pad, np.int32)
+        dst = np.full(pad, nq, np.int32)
+        if m:
+            g_q[:m, :self.d] = qv[idx]
+            g_lo[:m] = lo[idx]
+            g_hi[:m] = hi[idx]
+            dst[:m] = idx
+        return (jnp.asarray(g_q), jnp.asarray(g_lo), jnp.asarray(g_hi),
+                jnp.asarray(dst))
+
+    def _scan_corpus(self):
+        """Row/lane-padded per-shard corpus for the scan kernel (lazy: a
+        mesh that never routes to scan skips the duplicate)."""
+        if self._x_pad is None:
+            per_pad = -(-self.per // self.tb) * self.tb
+            self._x_pad = jnp.pad(
+                self._vecs, ((0, 0), (0, per_pad - self.per),
+                             (0, self.d_pad - self.d)))
+        return self._x_pad
+
+    # ---------------------------------------------------------- traced fns
+    def graph_fn(self, k: int, ef: int):
+        """Jitted graph-strategy mesh fn (also the dry-run lowering target)."""
+        key = ("graph", k, max(ef, k))
+        fn = self._fns.get(key)
+        if fn is None:
+            body = partial(_shard_graph, k=k, ef=max(ef, k), axis=self.axis)
+            shard, rep = P(self.axis), P()
+            fn = jax.jit(shard_map_compat(
+                body, self.mesh,
+                in_specs=(shard,) * 6 + (rep, rep, rep),
+                out_specs=(rep, rep)))
+            self._fns[key] = fn
+        return fn
+
+    def _planned_fn(self, *, k, ef, bucket, pad_s, pad_b, nq):
+        key = ("planned", k, ef, bucket, pad_s, pad_b, nq)
+        fn = self._fns.get(key)
+        if fn is None:
+            body = partial(_shard_planned, k=k, ef=ef, bucket=bucket, nq=nq,
+                           has_beam=pad_b > 0, axis=self.axis)
+            shard, rep = P(self.axis), P()
+            fn = jax.jit(shard_map_compat(
+                body, self.mesh,
+                in_specs=(shard,) * 7 + (rep,) * 8,
+                out_specs=(rep, rep)))
+            self._fns[key] = fn
+        return fn

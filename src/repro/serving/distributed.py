@@ -13,61 +13,30 @@ shard, so
 Resolution happens **once**, globally: the query's attribute range maps to a
 global rank interval (``repro.search.resolve``), which each shard *clips* to
 its contiguous rank slice — no per-shard ``searchsorted``.  Execution then
-routes through the unified search substrate:
+routes through the unified search substrate, and ``plan="auto"`` works on
+**both** paths:
 
   * local path (``mesh=None``): one ``SearchSubstrate`` per shard, so each
-    shard runs the full strategy router — ``plan="auto"`` composes the fused
-    range-scan strategy across shards (shard-local rank slices stay
-    contiguous) — followed by a host top-k merge;
-  * mesh path: one shard per device along the ``data`` axis; the traced
-    per-device body uses the substrate's resolve primitives (clip, RMQ entry,
-    id remap) around the shared beam search, and an ``all_gather`` + top-k
-    merge produces replicated results.  (The cost-model router is host-side
-    policy and is not traced, so the mesh path always runs the graph
-    strategy.)
+    shard runs the full strategy router (fused range-scan | beam per query,
+    with online cost calibration), followed by a host top-k merge;
+  * mesh path: one shard per device along the ``data`` axis via
+    ``MeshSubstrate`` — the strategy vector is planned host-side from the
+    shard-clipped global intervals and the traced per-device body executes a
+    branchless scan+beam select (each kernel at most once per shard),
+    restitched in request order before the cross-shard ``all_gather`` +
+    top-k merge.  See docs/distributed.md for the full dispatch flow.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
-from repro.core.beam import beam_search_batch
 from repro.core.construction import build_rnsg
-from repro.search import (SearchRequest, SearchSubstrate, clip_interval,
-                          clip_interval_jax, rank_interval, remap_ids_jax,
-                          select_entry)
-
-
-def _shard_search(vecs, nbrs, rmq, dist_c, order, rank0, qv, lo, hi, *,
-                  k: int, ef: int):
-    """Per-device body. Leading shard dim of size 1 (shard_map slice).
-    lo/hi are *global* rank intervals (replicated); rank0 is this shard's
-    first global rank."""
-    vecs, nbrs = vecs[0], nbrs[0]
-    rmq, dist_c, order = rmq[0], dist_c[0], order[0]
-    n = vecs.shape[0]
-    slo, shi = clip_interval_jax(lo, hi, rank0[0], n)
-    entry = select_entry(rmq, dist_c, slo, shi, n)
-    ids, dists, _ = beam_search_batch(vecs, nbrs, qv, slo, shi, entry,
-                                      k=k, ef=ef)
-    orig = remap_ids_jax(order, ids)
-    dists = jnp.where(ids >= 0, dists, jnp.inf)
-    return orig[None], dists[None]                       # (1, Q, k)
-
-
-def _merge_topk(ids, dists, k: int):
-    """(S,Q,k) -> (Q,k) global top-k."""
-    s, q, kk = ids.shape
-    flat_i = jnp.moveaxis(ids, 0, 1).reshape(q, s * kk)
-    flat_d = jnp.moveaxis(dists, 0, 1).reshape(q, s * kk)
-    nd, sel = jax.lax.top_k(-flat_d, k)
-    out_i = jnp.take_along_axis(flat_i, sel, axis=1)
-    return jnp.where(jnp.isfinite(-nd), out_i, -1), -nd
+from repro.search import (MeshSubstrate, SearchRequest, SearchSubstrate,
+                          clip_interval, merge_topk, rank_interval)
 
 
 class DistributedRFANN:
@@ -104,6 +73,7 @@ class DistributedRFANN:
             np.arange(n_shards, dtype=np.int32)[:, None] * per)   # (S, 1)
         self.build_seconds = sum(g.build_seconds for g, _ in graphs)
         self._subs: Optional[list] = None
+        self._mesh_sub: Optional[MeshSubstrate] = None
 
     @property
     def index_bytes(self) -> int:
@@ -121,9 +91,19 @@ class DistributedRFANN:
                 for s in range(self.n_shards)]
         return self._subs
 
+    @property
+    def mesh_substrate(self) -> MeshSubstrate:
+        """The shard_map execution path (lazy; requires ``mesh``)."""
+        if self._mesh_sub is None:
+            assert self.mesh is not None, "mesh execution needs mesh="
+            self._mesh_sub = MeshSubstrate(
+                self.mesh, self.axis, self.vecs, self.nbrs, self.rmq,
+                self.dist_c, self.order, self.rank0)
+        return self._mesh_sub
+
     def _search_local(self, qv, lo, hi, *, k: int, ef: int, plan: str):
         """Sequential per-shard substrate dispatch, merged by the same
-        ``_merge_topk`` the mesh path uses — identical ids by construction."""
+        ``merge_topk`` the mesh path uses — identical ids by construction."""
         q = len(qv)
         all_i = np.full((self.n_shards, q, k), -1, np.int32)
         all_d = np.full((self.n_shards, q, k), np.inf, np.float32)
@@ -133,28 +113,10 @@ class DistributedRFANN:
                                         k=k, ef=ef, strategy=plan))
             all_i[s] = res.ids
             all_d[s] = np.where(res.ids >= 0, res.dists, np.inf)
-        ids, dists = _merge_topk(jnp.asarray(all_i), jnp.asarray(all_d), k)
+        ids, dists = merge_topk(jnp.asarray(all_i), jnp.asarray(all_d), k)
         return np.asarray(ids), np.asarray(dists)
 
     # ------------------------------------------------------------------
-    def _search_fn(self, k: int, ef: int):
-        body = partial(_shard_search, k=k, ef=ef)
-        ax = self.axis
-
-        def sharded(vecs, nbrs, rmq, dist_c, order, rank0, qv, lo, hi):
-            ids, ds = body(vecs, nbrs, rmq, dist_c, order, rank0, qv, lo, hi)
-            ids = jax.lax.all_gather(ids[0], ax)         # (S, Q, k)
-            ds = jax.lax.all_gather(ds[0], ax)
-            return _merge_topk(ids, ds, k)
-
-        shard_spec = P(ax)
-        rep = P()
-        fn = jax.shard_map(
-            sharded, mesh=self.mesh,
-            in_specs=(shard_spec,) * 6 + (rep, rep, rep),
-            out_specs=(rep, rep), check_vma=False)
-        return jax.jit(fn)
-
     def search(self, queries: np.ndarray, attr_ranges: np.ndarray, *,
                k: int = 10, ef: int = 64,
                plan: str = "graph") -> Tuple[np.ndarray, np.ndarray]:
@@ -164,20 +126,14 @@ class DistributedRFANN:
         ef = max(ef, k)
         if self.mesh is None:
             return self._search_local(qv, lo, hi, k=k, ef=ef, plan=plan)
-        if plan != "graph":
-            raise ValueError("mesh execution traces the per-shard body; the "
-                             "host-side cost router needs mesh=None "
-                             "(plan='graph' only on a mesh)")
-        fn = self._search_fn(k, ef)
-        ids, dists = fn(self.vecs, self.nbrs, self.rmq, self.dist_c,
-                        self.order, self.rank0, jnp.asarray(qv),
-                        jnp.asarray(lo), jnp.asarray(hi))
-        return np.asarray(ids), np.asarray(dists)
+        res = self.mesh_substrate.run(SearchRequest(
+            queries=qv, lo=lo, hi=hi, k=k, ef=ef, strategy=plan))
+        return res.ids, res.dists
 
     # ------------------------------------------------------------------
     def lower_for_dryrun(self, nq: int, d: int, k: int = 10, ef: int = 64):
         """Compile-only proof that the sharded search lowers on a real mesh."""
-        fn = self._search_fn(k, ef)
+        fn = self.mesh_substrate.graph_fn(k, ef)
         args = (self.vecs, self.nbrs, self.rmq, self.dist_c, self.order,
                 self.rank0,
                 jax.ShapeDtypeStruct((nq, d), jnp.float32),

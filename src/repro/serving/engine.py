@@ -8,8 +8,10 @@ dispatches by selectivity — see ``repro.planner``), and resolved through
 per-request futures, each carrying its own per-request ``SearchResult``.
 
 If ``calibration_path`` is given, the planner's online-calibrated cost model
-is restored from it at startup and persisted at ``close()`` — a restarted
-server starts from steady-state routing instead of the prior.
+is restored from it at startup and persisted (atomically: temp file +
+rename) at ``close()`` — a restarted server starts from steady-state
+routing instead of the prior, and a crash mid-shutdown can never leave a
+truncated file behind.
 """
 from __future__ import annotations
 

@@ -128,6 +128,35 @@ def test_planner_forced_modes():
     assert (pl.plan_batch(lo, hi, k=10, ef=64, mode="beam").strategy == 1).all()
 
 
+def test_choose_strategy_batch_matches_scalar():
+    """The vectorized routing decision (the host half of mesh dispatch) must
+    agree element-wise with the scalar reference across the whole regime
+    spectrum — empty, tiny, boundary, ceiling, full — before and after
+    calibration shifts the cost model."""
+    pl = QueryPlanner(n=100_000, mean_degree=24.0)
+    rng = np.random.default_rng(5)
+    lens = np.concatenate([
+        np.asarray([0, 1, 5, 10, 11, 64, 65, 12_500, 12_501, 100_000]),
+        rng.integers(0, 100_000, 200),
+        2 ** rng.integers(0, 17, 50),              # pow2 boundaries
+    ])
+    for k, ef in ((10, 64), (1, 16), (50, 256)):
+        batch = pl.choose_strategy_batch(lens, k=k, ef=ef)
+        scalar = np.asarray([pl.choose_strategy(int(ln), k=k, ef=ef)
+                             for ln in lens], np.int8)
+        assert np.array_equal(batch, scalar), (k, ef)
+    # calibration moves the crossover; the two implementations move together
+    pl.cost.update_beam(ndist_mean=2000.0, ef=64)
+    batch = pl.choose_strategy_batch(lens, k=10, ef=64)
+    scalar = np.asarray([pl.choose_strategy(int(ln), k=10, ef=64)
+                         for ln in lens], np.int8)
+    assert np.array_equal(batch, scalar)
+    # and plan_batch routes with the same decisions (lo/hi -> lens)
+    lo = np.zeros(len(lens), np.int64)
+    plan = pl.plan_batch(lo, lo + lens - 1, k=10, ef=64)
+    assert np.array_equal(plan.strategy, batch)
+
+
 # ------------------------------------------------------------------ end to end
 def _small_index(n=512, d=16, seed=0):
     vecs = make_vectors(n, d, seed=seed)

@@ -1,8 +1,12 @@
 """Unified search substrate: single-source resolve, strategy parity across
-every execution path, empty-partition guards, beam early-out, calibration
-persistence."""
+every execution path (including the shard_map mesh-auto path), empty-partition
+guards, beam early-out, calibration persistence."""
 import json
+import os
 import re
+import subprocess
+import sys
+import textwrap
 from pathlib import Path
 
 import jax.numpy as jnp
@@ -105,6 +109,97 @@ def test_search_result_is_tuple_compatible():
     assert row.ids.shape == (3,) and row.stats["hops"].shape == ()
 
 
+# ------------------------------------------------------- mesh strategy parity
+def test_mesh_auto_parity_single_device():
+    """The mesh-auto machinery (host plan -> replicated strategy vector ->
+    branchless per-shard select -> restitch -> merge) on a 1-device mesh:
+    every mesh plan must match the mesh graph path's id sets, with both
+    strategies exercised in one shard_map call."""
+    import jax
+
+    from repro.planner.planner import BEAM, SCAN
+    from repro.search import rank_interval
+
+    n, d, nq, k = 256, 16, 15, 8
+    vecs, attrs = _corpus(n, d)
+    mesh = jax.make_mesh((1,), ("data",))
+    dist = DistributedRFANN(vecs, attrs, n_shards=1, mesh=mesh, m=16,
+                            ef_spatial=16, ef_attribute=24)
+    qv = make_vectors(nq, d, seed=7)
+    ranges = _degenerate_ranges(attrs, nq, seed=11)
+
+    lo, hi = rank_interval(dist.attrs_sorted, ranges)
+    strat, _ = dist.mesh_substrate.plan_strategies(lo, hi, k=k, ef=64,
+                                                   mode="auto")
+    assert (strat == SCAN).any() and (strat == BEAM).any()   # mixed batch
+
+    base, _ = dist.search(qv, ranges, k=k, ef=n, plan="graph")
+    for plan in ("auto", "scan", "beam"):
+        ids, dists = dist.search(qv, ranges, k=k, ef=n, plan=plan)
+        for q in range(nq):
+            want = set(base[q][base[q] >= 0].tolist())
+            got = set(ids[q][ids[q] >= 0].tolist())
+            assert got == want, (plan, q, sorted(got), sorted(want))
+    # degenerate rows behave as specified on the mesh too
+    assert (base[nq - 3] == -1).all()                        # empty
+    assert base[nq - 2][0] >= 0 and (base[nq - 2][1:] == -1).all()
+    assert (base[nq - 1] >= 0).all()                         # full span
+    # zero-query mesh request: no dispatch, well-shaped empty result
+    e_ids, e_d = dist.search(qv[:0], ranges[:0], k=k, ef=n, plan="auto")
+    assert e_ids.shape == (0, k) and e_d.shape == (0, k)
+
+
+@pytest.mark.slow
+def test_mesh_auto_parity_multidevice():
+    """Acceptance (subprocess: XLA_FLAGS must precede jax import): on an
+    8-device mesh, plan='auto' routes a mixed narrow/wide batch to BOTH
+    strategies inside one shard_map call and returns id sets identical to
+    the graph-only mesh path — including intervals empty on most shards
+    (clipped to a single shard) and globally empty intervals."""
+    root = Path(__file__).resolve().parent.parent
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=str(root / "src"))
+    code = textwrap.dedent("""
+        import numpy as np, jax
+        from repro.data.ann import make_vectors, make_attrs, selectivity_ranges
+        from repro.planner.planner import BEAM, SCAN
+        from repro.search import rank_interval
+        from repro.serving.distributed import DistributedRFANN
+
+        vecs = make_vectors(1024, 16, seed=0)
+        attrs = make_attrs(1024, seed=0)
+        mesh = jax.make_mesh((8,), ("data",))
+        qv = make_vectors(24, 16, seed=7)
+        s = np.sort(attrs)
+        rg = np.concatenate([
+            selectivity_ranges(attrs, 10, 0.01, seed=3),     # narrow -> scan
+            selectivity_ranges(attrs, 10, 0.5, seed=4),      # wide -> beam
+            np.asarray([[s[5] + 1e-7, s[5] + 2e-7],          # globally empty
+                        [s[17], s[17]],                      # single point
+                        [s[3], s[40]],                       # shard 0 only:
+                        [s[0], s[-1]]], np.float32)])        #  7 empty clips
+        dist = DistributedRFANN(vecs, attrs, n_shards=8, mesh=mesh, m=16,
+                                ef_spatial=16, ef_attribute=24)
+        lo, hi = rank_interval(dist.attrs_sorted, rg)
+        strat, _ = dist.mesh_substrate.plan_strategies(lo, hi, k=8, ef=64,
+                                                       mode='auto')
+        assert (strat == SCAN).any() and (strat == BEAM).any(), strat
+        base, _ = dist.search(qv, rg, k=8, ef=1024, plan='graph')
+        ids, _ = dist.search(qv, rg, k=8, ef=1024, plan='auto')
+        for q in range(len(rg)):
+            want = set(base[q][base[q] >= 0].tolist())
+            got = set(ids[q][ids[q] >= 0].tolist())
+            assert got == want, (q, sorted(got), sorted(want))
+        assert (base[20] == -1).all()                        # empty row
+        print('OK', strat.tolist())
+    """)
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    assert "OK" in r.stdout
+
+
 # ------------------------------------------------------ empty-partition guard
 def test_plan_never_emits_empty_partitions():
     pl = QueryPlanner(n=10_000, mean_degree=16.0)
@@ -178,6 +273,11 @@ def test_calibration_save_load_roundtrip(tmp_path):
     idx.planner.save_calibration(p)
     state = json.load(open(p))
     assert state["version"] == 1 and state["cost"]["beam_obs"] >= 1
+    # atomic write: the rename left no temp file, and re-saving over an
+    # existing path replaces it wholesale (never truncates in place)
+    assert [f.name for f in tmp_path.iterdir()] == ["calib.json"]
+    idx.planner.save_calibration(p)
+    assert json.load(open(p)) == state
 
     fresh = QueryPlanner(n=idx.g.n, mean_degree=16.0)
     assert fresh.cost.state_dict() != idx.planner.cost.state_dict()

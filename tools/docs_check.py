@@ -1,0 +1,69 @@
+"""Intra-repo link checker for the markdown docs (``make docs-check``).
+
+Scans README.md and docs/*.md for inline markdown links ``[text](target)``
+and fails (exit 1) when a relative target — optionally carrying a
+``#anchor`` — does not resolve to an existing file or directory.  External
+schemes (http/https/mailto) and pure in-page anchors are skipped; image
+links (``![alt](target)``) are checked the same way.
+
+  PYTHONPATH=src python tools/docs_check.py [root]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def doc_files(root: Path):
+    yield from sorted(root.glob("*.md"))
+    yield from sorted((root / "docs").glob("*.md"))
+
+
+def check_file(path: Path, root: Path):
+    """Yields (line_number, target) for every broken relative link."""
+    in_fence = False
+    for ln, line in enumerate(path.read_text().splitlines(), 1):
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:                      # code blocks aren't hyperlinks
+            continue
+        for m in LINK.finditer(line):
+            target = m.group(1)
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = (path.parent / rel).resolve()
+            try:                          # links must stay inside the repo
+                resolved.relative_to(root.resolve())
+            except ValueError:
+                yield ln, target
+                continue
+            if not resolved.exists():
+                yield ln, target
+
+
+def main() -> int:
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else \
+        Path(__file__).resolve().parent.parent
+    broken = []
+    checked = 0
+    for md in doc_files(root):
+        checked += 1
+        for ln, target in check_file(md, root):
+            broken.append(f"{md.relative_to(root)}:{ln}: broken link -> "
+                          f"{target}")
+    for b in broken:
+        print(b)
+    print(f"[docs-check] {checked} files, {len(broken)} broken links")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
