@@ -2,7 +2,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test test-fast verify lint docs-check bench-quick bench-planner \
-        bench-substrate bench-mesh bench-full quickstart
+        bench-substrate bench-mesh bench-cache bench-full quickstart
 
 # tier-1 verify (the command CI runs)
 test:
@@ -40,6 +40,10 @@ bench-substrate:
 # mesh-path strategy routing (re-execs itself with 8 forced host devices)
 bench-mesh:
 	$(PY) -m benchmarks.run --only mesh_auto
+
+# result cache + async local-path dispatch (results/bench/async_cache.csv)
+bench-cache:
+	$(PY) -m benchmarks.run --only async_cache
 
 bench-full:
 	$(PY) -m benchmarks.run --full

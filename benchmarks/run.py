@@ -278,6 +278,80 @@ def bench_mesh_auto(n, d, nq, quick):
     return rows
 
 
+def bench_async_cache(n, d, nq, quick):
+    """Async + cached search substrate:
+
+    * cache rows — repeat-query QPS with the ``SearchCache`` installed
+      (second pass: every row a hit, zero device work) vs the uncached
+      substrate, per plan, asserting bit-identical results;
+    * async rows — the 8-shard ``DistributedRFANN`` local path with async
+      per-shard dispatch (enqueue all shards, block at the merge) vs the
+      sequential dispatch+block baseline, asserting identical merged top-k.
+    """
+    from repro.search import SearchCache
+    from repro.serving.distributed import DistributedRFANN
+
+    vecs, attrs = dataset(n, d)
+    m = 24 if quick else 48
+    ix = RNSGIndex.build(vecs, attrs, m=m, ef_spatial=m, ef_attribute=2 * m)
+    qv = dataset(nq, d, seed=91)[0]
+    from repro.data.ann import mixed_workload
+    ranges, _ = mixed_workload(attrs, nq, seed=1)
+    k, ef = 10, 64
+    rows = []
+    for plan in ("graph", "auto"):
+        ix.install_cache(None)
+        (u_ids, u_d, _), u_qps = timed_search(ix, qv, ranges, k, ef,
+                                              warmups=2, plan=plan)
+        cache = SearchCache(max_bytes=64 << 20)
+        ix.install_cache(cache)
+        fill = ix.search(qv, ranges, k=k, ef=ef, plan=plan)   # populate
+        # timed repeats are all-hit passes (timed_search warms once first)
+        (c_ids, c_d, c_st), c_qps = timed_search(ix, qv, ranges, k, ef,
+                                                 plan=plan)
+        ix.install_cache(None)
+        # the cache contract: hits are bit-identical to the dispatch that
+        # POPULATED them (fill vs cached).  u_ids is not part of the flag —
+        # under plan="auto" online recalibration between the uncached and
+        # fill passes can legitimately flip a boundary query's routing
+        identical = bool(np.array_equal(fill.ids, c_ids)
+                         and np.array_equal(fill.dists, c_d))
+        rows.append(dict(method="cache_repeat", plan=plan,
+                         qps_base=round(u_qps, 1), qps_new=round(c_qps, 1),
+                         speedup=round(c_qps / max(u_qps, 1e-9), 2),
+                         identical=identical,
+                         detail=f"hits={c_st['cache_hits']}"))
+    n8 = n - n % 8
+    dist = DistributedRFANN(vecs[:n8], attrs[:n8], n_shards=8, m=m,
+                            ef_spatial=m, ef_attribute=2 * m)
+    # paired best-of-8: the seq/async gap on CPU is a few percent (the
+    # device queue serializes shard kernels either way; async only overlaps
+    # host-side prep with device compute), smaller than machine-load drift
+    # across separate measurement windows — so each repeat times both modes
+    # back to back and the bests come from the same windows
+    for plan in ("graph", "auto"):
+        results, best = {}, {False: np.inf, True: np.inf}
+        for mode in (False, True):              # warm both jit paths first
+            dist.async_dispatch = mode
+            dist.search(qv, ranges, k=k, ef=ef, plan=plan)
+        for _ in range(8):
+            for mode in (False, True):
+                dist.async_dispatch = mode
+                t0 = time.perf_counter()
+                results[mode] = dist.search(qv, ranges, k=k, ef=ef, plan=plan)
+                best[mode] = min(best[mode], time.perf_counter() - t0)
+        (s_ids, s_d), (a_ids, a_d) = results[False], results[True]
+        s_qps, a_qps = nq / best[False], nq / best[True]
+        identical = bool(np.array_equal(s_ids, a_ids)
+                         and np.array_equal(s_d, a_d))
+        rows.append(dict(method="async_local_8shard", plan=plan,
+                         qps_base=round(s_qps, 1), qps_new=round(a_qps, 1),
+                         speedup=round(a_qps / max(s_qps, 1e-9), 2),
+                         identical=identical, detail="seq->async"))
+    emit("async_cache", rows, quiet=True)
+    return rows
+
+
 def bench_kernels(quick):
     """Kernel microbench (interpret mode on CPU: correctness + derived
     roofline terms; wall numbers are *not* TPU times)."""
@@ -319,7 +393,7 @@ def bench_kernels(quick):
 
 ALL = ["qps_recall", "construction_time", "index_size", "param_sensitivity",
        "vary_k", "scalability", "planner", "search_substrate", "mesh_auto",
-       "kernels"]
+       "async_cache", "kernels"]
 
 
 def main() -> None:
@@ -405,6 +479,20 @@ def main() -> None:
               f"{float(na['qps'])/max(float(ng['qps']),1e-9):.2f}x"
               f"_narrow_recall={na['recall']}vs{ng['recall']}"
               f"_narrow_scan_frac={na['scan_frac']}")
+    if "async_cache" in only:
+        rows = bench_async_cache(n, d, nq, quick)
+        print("method,plan,qps_base,qps_new,speedup,identical,detail")
+        for r in rows:
+            print(f"{r['method']},{r['plan']},{r['qps_base']},{r['qps_new']},"
+                  f"{r['speedup']},{r['identical']},{r['detail']}")
+        cg = next(r for r in rows if r["method"] == "cache_repeat"
+                  and r["plan"] == "graph")
+        ag = next(r for r in rows if r["method"] == "async_local_8shard"
+                  and r["plan"] == "auto")
+        print(f"async_cache,{1e6/float(cg['qps_new']):.1f},"
+              f"cache_repeat_speedup={cg['speedup']}x"
+              f"_identical={cg['identical']}"
+              f"_async_vs_seq={ag['speedup']}x")
     if "kernels" in only:
         rows = bench_kernels(quick)
         for r in rows:

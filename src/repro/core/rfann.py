@@ -47,6 +47,11 @@ class RNSGIndex:
     def planner(self):
         return self.substrate.planner
 
+    def install_cache(self, cache) -> None:
+        """Install (or remove, with ``None``) a ``SearchCache`` at the
+        substrate choke point — see ``repro.search.cache``."""
+        self.substrate.cache = cache
+
     def rank_range(self, attr_ranges: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         """[a_l, a_r] (inclusive) -> rank interval [L, R] (inclusive).
         Pure host-side resolve — does not force the substrate's device

@@ -31,8 +31,8 @@ from repro.launch.specs import input_specs
 from repro.models.lm import Model
 from repro.models.params import ShardPlan, logical_axes
 from repro.parallel.sharding import (batch_logical, cache_logical,
-                                     make_act_sharder, spec_for_logical,
-                                     tree_shardings)
+                                     make_act_sharder, set_mesh_compat,
+                                     spec_for_logical, tree_shardings)
 from repro.training.train_step import build_train_step, train_state_shapes
 
 RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
@@ -222,7 +222,7 @@ def run_rnsg_cell(multi_pod: bool, variant: str = "base", save: bool = True):
             jax.ShapeDtypeStruct((nq, d), jnp.float32),
             jax.ShapeDtypeStruct((nq, 2), jnp.float32))
     t0 = time.perf_counter()
-    with jax.set_mesh(mesh):
+    with set_mesh_compat(mesh):
         lowered = jax.jit(fn).lower(*args)
         compiled = lowered.compile()
     t_compile = time.perf_counter() - t0
@@ -281,7 +281,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, variant: str = "base",
         fn, args, meta, cfg, shape = build_cell(arch, shape_name, mesh, variant,
                                                 analysis=analysis,
                                                 depth_groups=depth_groups)
-        with jax.set_mesh(mesh):
+        with set_mesh_compat(mesh):
             lowered = fn.lower(*args)
             t_lower = time.perf_counter() - t0
             compiled = lowered.compile()

@@ -4,14 +4,15 @@ from __future__ import annotations
 
 import jax
 
+from repro.parallel.sharding import make_mesh_compat
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: 16×16 = 256 chips (data, model).
     Multi-pod: 2×16×16 = 512 chips (pod, data, model)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    from jax.sharding import AxisType
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_mesh_for(devices: int, model_parallel: int = 1):

@@ -41,7 +41,8 @@ def serve_rfann(args):
 
     engine = RFANNEngine(idx, k=args.k, ef=args.ef, plan=args.plan,
                          max_batch=args.max_batch, max_wait_ms=2.0,
-                         calibration_path=args.calibration or None)
+                         calibration_path=args.calibration or None,
+                         cache_bytes=args.cache_mb << 20)
     rng = np.random.default_rng(0)
     futs = []
     t0 = time.perf_counter()
@@ -52,6 +53,8 @@ def serve_rfann(args):
     results = np.stack([f.result().ids for f in futs])      # per-request SearchResult
     dt = time.perf_counter() - t0
     engine.close()
+    if engine.cache is not None:
+        print(f"[serve] result cache: {engine.cache.snapshot()}")
     if args.calibration:
         print(f"[serve] cost-model calibration persisted to {args.calibration}")
 
@@ -106,6 +109,8 @@ def main(argv=None):
     ap.add_argument("--calibration", default="",
                     help="JSON path: load cost-model calibration at startup, "
                          "persist it on shutdown")
+    ap.add_argument("--cache-mb", type=int, default=0,
+                    help="result-cache byte budget in MiB (0 = no cache)")
     ap.add_argument("--new-tokens", type=int, default=16)
     args = ap.parse_args(argv)
     if args.mode == "rfann":

@@ -28,6 +28,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ArchConfig
 from repro.models.layers import norm
 from repro.models.params import ModelDims
+from repro.parallel.sharding import shard_map_compat
 
 
 def _route(xt: jax.Array, router: jax.Array, k: int):
@@ -132,11 +133,10 @@ def moe_ffn(x: jax.Array, p: Dict, cfg: ArchConfig, dm: ModelDims,
     body = partial(_moe_local, k=cfg.moe_top_k, cf=cfg.capacity_factor,
                    axis_names=names, tp_axis="model" if ep else None,
                    e_total=dm.e)
-    y, aux = jax.shard_map(
-        body, mesh=mesh,
+    y, aux = shard_map_compat(
+        body, mesh,
         in_specs=(tok_spec, P(None, None), w_spec, w_spec,
                   P("model", None, None) if ep else P(None, None, None)),
         out_specs=(tok_spec, P()),
-        check_vma=False,
     )(xt, p["router"], p["w_in"], p["w_gate"], p["w_out"])
     return y.reshape(b, s, d), aux

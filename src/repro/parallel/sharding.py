@@ -72,6 +72,31 @@ REPLICA_RULES: Dict[Optional[str], Tuple] = {
 STRATEGIES = {"tp": DEFAULT_RULES, "fsdp": FSDP_RULES, "replica": REPLICA_RULES}
 
 
+def make_mesh_compat(shape: Sequence[int], axis_names: Sequence[str]) -> Mesh:
+    """Version-portable device-mesh builder: jax ≥ 0.5 accepts
+    ``axis_types=(AxisType.Auto, ...)`` (and some versions require it for the
+    implicit-mesh machinery), jax 0.4.x has neither ``AxisType`` nor the
+    kwarg.  Auto axis types match 0.4.x semantics exactly, so behavior is
+    identical on both sides."""
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(tuple(shape), tuple(axis_names),
+                             axis_types=(AxisType.Auto,) * len(axis_names))
+    except (ImportError, TypeError):
+        return jax.make_mesh(tuple(shape), tuple(axis_names))
+
+
+def set_mesh_compat(mesh: Mesh):
+    """Version-portable ``with jax.set_mesh(mesh): ...`` context: jax ≥ 0.6
+    exposes ``jax.set_mesh`` (usable as a context manager), jax 0.4.x spells
+    the same thing as entering the ``Mesh`` itself (the resource-env context
+    ``with mesh:``).  Callers must use this as a context manager only."""
+    sm = getattr(jax, "set_mesh", None)
+    if sm is not None:
+        return sm(mesh)
+    return mesh                     # Mesh is a context manager on jax 0.4.x
+
+
 def abstract_mesh(axis_sizes: Sequence[int], axis_names: Sequence[str]):
     """Version-portable AbstractMesh: jax ≤ 0.4.x takes one tuple of
     (name, size) pairs, jax ≥ 0.5 takes (axis_sizes, axis_names)."""

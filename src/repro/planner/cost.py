@@ -64,6 +64,30 @@ class CostModel:
             # re-anchor the relative per-unit weight on real hardware timings
             self.scan_unit = self._scan_us / self._beam_us
 
+    def observe_wall_mixed(self, scan_units_total: float,
+                           beam_units_total: float, seconds: float,
+                           n_scan: int, n_beam: int) -> None:
+        """Feed one **fused** dispatch that executed a scan group and a beam
+        group in a single traced call (the mesh path's branchless body) —
+        the wall time cannot be measured per group, so it is attributed
+        proportionally to each group's *predicted* unit cost and fed through
+        ``observe_wall``.  The split self-corrects: if e.g. scan is really
+        cheaper than predicted, its attributed share shrinks on the next
+        update as ``scan_unit`` re-anchors."""
+        if seconds <= 0:
+            return
+        su = self.scan_unit * float(scan_units_total)
+        bu = self.beam_unit * float(beam_units_total)
+        tot = su + bu
+        if tot <= 0:
+            return
+        if scan_units_total > 0 and n_scan > 0:
+            self.observe_wall("scan", scan_units_total / n_scan,
+                              seconds * su / tot, n_scan)
+        if beam_units_total > 0 and n_beam > 0:
+            self.observe_wall("beam", beam_units_total / n_beam,
+                              seconds * bu / tot, n_beam)
+
     def snapshot(self) -> dict:
         return dict(scan_unit=round(self.scan_unit, 5),
                     ndist_per_ef=round(self.ndist_per_ef, 2),

@@ -7,7 +7,9 @@ package:
 
     SearchRequest (queries, rank intervals, k/ef, strategy)
         -> resolve   (rank-interval mapping + RMQ entry selection)
-        -> dispatch  (range-scan kernel | graph beam | planned mix)
+        -> cache     (optional SearchCache: hit rows skip dispatch entirely)
+        -> dispatch  (range-scan kernel | graph beam | planned mix;
+                      async at the substrate boundary — PendingSearch)
         -> stitch    (request-order stats, rank -> original id remap)
         -> SearchResult
 
@@ -26,13 +28,16 @@ primitives:
 See docs/architecture.md for the layer diagram and docs/distributed.md for
 the mesh dispatch flow.
 """
+from repro.search.cache import SearchCache, query_key
 from repro.search.request import STRATEGIES, SearchRequest, SearchResult
 from repro.search.resolve import (clip_interval, clip_interval_jax,
                                   rank_interval, rank_interval_jax,
                                   remap_ids, remap_ids_jax, select_entry)
-from repro.search.substrate import MeshSubstrate, SearchSubstrate, merge_topk
+from repro.search.substrate import (MeshSubstrate, PendingSearch,
+                                    SearchSubstrate, merge_topk)
 
 __all__ = ["STRATEGIES", "SearchRequest", "SearchResult", "SearchSubstrate",
-           "MeshSubstrate", "merge_topk",
+           "MeshSubstrate", "PendingSearch", "SearchCache", "query_key",
+           "merge_topk",
            "rank_interval", "rank_interval_jax", "select_entry",
            "remap_ids", "remap_ids_jax", "clip_interval", "clip_interval_jax"]

@@ -1,0 +1,232 @@
+"""Result cache in front of the substrate dispatch stage.
+
+``SearchCache`` memoizes **finished per-query results** (original corpus
+ids + distances + scalar stats) keyed on everything that determines them:
+
+    (blake2b(query vector), lo, hi, k, ef, strategy, use_kernel)
+
+The rank interval — not the raw attribute range — is part of the key, so
+two different attribute ranges that resolve to the same ranks share one
+entry.  Substrates that share a cache (the distributed local path's shard
+substrates, the mesh substrate) additionally key a **namespace** (shard
+index / ``"mesh"``): different shards routinely see identical
+(query, clipped interval) pairs over different vectors, which must never
+collide.
+
+Eviction is LRU under an explicit **byte budget** (ids/dists row bytes +
+per-entry overhead), so a long-running server holds a bounded working set
+regardless of query-stream cardinality.  ``invalidate()`` empties the cache
+wholesale — required whenever the index contents or the calibration that
+results were computed under change (``RFANNEngine.swap_index`` wires this).
+
+The cache is installed at the single substrate choke point: both
+``SearchSubstrate.dispatch`` and ``MeshSubstrate.run`` split each request
+into hit/miss rows via :meth:`SearchCache.split`, execute only the misses,
+then :meth:`SearchCache.assemble` stitches the batch back in request order.
+Hits therefore skip resolve-entry selection, kernel dispatch, *and* the
+rank→id remap — a repeat-query batch performs no device work at all.
+
+Results returned from a hit are the stored bytes verbatim, so a cached
+batch is bit-identical to the dispatch that populated it (asserted by the
+parity tests).  Under ``strategy="auto"`` a stored row reflects the routing
+decision at store time; online calibration may route a later identical
+query differently, but both executions are valid results for the same
+(query, range, k, ef) contract.
+"""
+from __future__ import annotations
+
+import hashlib
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.search.request import SearchResult
+
+#: rough per-entry bookkeeping cost (key tuple, digest, dict slot) charged
+#: against the byte budget on top of the payload arrays.
+ENTRY_OVERHEAD = 128
+
+
+def hash_query(q: np.ndarray) -> bytes:
+    """Content hash of one query vector.  Callers fanning a batch out to
+    several substrates (the distributed local path) hash each row **once**
+    and pass the digests through — the key differs per shard only in
+    ``ns``/``lo``/``hi``, so re-hashing per shard would be S-fold waste."""
+    return hashlib.blake2b(np.ascontiguousarray(q, np.float32).tobytes(),
+                           digest_size=16).digest()
+
+
+def query_key(q: np.ndarray, lo: int, hi: int, k: int, ef: int,
+              strategy: str, use_kernel: bool = False, ns=None,
+              digest: Optional[bytes] = None) -> Tuple:
+    """Cache key for one query row: content hash of the vector plus every
+    request parameter that changes the result.
+
+    ``ns`` namespaces the key to one corpus slice.  It is required whenever
+    several substrates share a cache: two shards routinely see the *same*
+    (query, shard-local interval, k, ef) — e.g. a full-span query clips to
+    ``(0, per-1)`` on every shard — but search different vectors, so without
+    the namespace their entries would collide and serve wrong rows."""
+    h = digest if digest is not None else hash_query(q)
+    return (ns, h, int(lo), int(hi), int(k), int(ef), strategy,
+            bool(use_kernel))
+
+
+@dataclass
+class CacheEntry:
+    """One finished per-query result (original corpus ids, -1 padded)."""
+    ids: np.ndarray                 # (k,) int32
+    dists: np.ndarray               # (k,) float32
+    stats: Dict[str, np.generic]    # scalar per-query stats (hops/ndist/...)
+
+    @property
+    def nbytes(self) -> int:
+        return (self.ids.nbytes + self.dists.nbytes +
+                16 * len(self.stats) + ENTRY_OVERHEAD)
+
+
+class SearchCache:
+    """LRU result cache with a byte budget and explicit invalidation.
+
+    Thread-safe: the engine's dispatch thread and ``swap_index`` callers may
+    touch it concurrently (one short lock around every structural op)."""
+
+    def __init__(self, max_bytes: int = 64 << 20):
+        self.max_bytes = int(max_bytes)
+        self._d: "OrderedDict[Tuple, CacheEntry]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.bytes = 0
+        self.epoch = 0          # bumped by invalidate(); fences late stores
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.invalidations = 0
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    # ------------------------------------------------------------ core ops
+    def lookup(self, key: Tuple) -> Optional[CacheEntry]:
+        with self._lock:
+            e = self._d.get(key)
+            if e is None:
+                self.misses += 1
+                return None
+            self._d.move_to_end(key)
+            self.hits += 1
+            return e
+
+    def store(self, key: Tuple, entry: CacheEntry,
+              epoch: Optional[int] = None) -> None:
+        """Insert one entry.  ``epoch`` (captured at lookup/split time)
+        fences stores against a concurrent ``invalidate``: a dispatch that
+        was in flight when the cache was invalidated — e.g. a batch still
+        executing on a just-swapped-out index — must not repopulate the
+        cache with rows of the old corpus.  The check runs under the same
+        lock ``invalidate`` takes, so no stale store can slip through."""
+        with self._lock:
+            if epoch is not None and epoch != self.epoch:
+                return
+            old = self._d.pop(key, None)
+            if old is not None:
+                self.bytes -= old.nbytes
+            if entry.nbytes > self.max_bytes:
+                return                      # larger than the whole budget
+            self._d[key] = entry
+            self.bytes += entry.nbytes
+            while self.bytes > self.max_bytes and self._d:
+                _, ev = self._d.popitem(last=False)
+                self.bytes -= ev.nbytes
+                self.evictions += 1
+
+    def invalidate(self) -> None:
+        """Drop everything and bump the epoch.  Must be called when the
+        index contents change (cached rows reference the old corpus) — see
+        ``swap_index``.  In-flight dispatches that split before the bump
+        carry the old epoch and their late ``store_batch`` is dropped."""
+        with self._lock:
+            self._d.clear()
+            self.bytes = 0
+            self.epoch += 1
+            self.invalidations += 1
+
+    def snapshot(self) -> dict:
+        return dict(entries=len(self._d), bytes=self.bytes,
+                    max_bytes=self.max_bytes, hits=self.hits,
+                    misses=self.misses, evictions=self.evictions,
+                    invalidations=self.invalidations)
+
+    # ------------------------------------------------- batch split / stitch
+    def split(self, qv: np.ndarray, lo: np.ndarray, hi: np.ndarray, k: int,
+              ef: int, strategy: str, use_kernel: bool = False, ns=None,
+              digests: Optional[List[bytes]] = None):
+        """Partition one batch into cache hits and misses.
+
+        Returns ``(keys, hit_rows, miss_idx)``: per-row keys, a dict
+        ``{row -> CacheEntry}`` for the hits, and the miss positions (the
+        only rows the substrate has to execute).  ``digests`` are optional
+        precomputed ``hash_query`` values (one per row) so multi-substrate
+        callers hash each query once, not once per shard."""
+        keys = [query_key(qv[i], lo[i], hi[i], k, ef, strategy, use_kernel,
+                          ns=ns,
+                          digest=digests[i] if digests is not None else None)
+                for i in range(len(qv))]
+        hit_rows: Dict[int, CacheEntry] = {}
+        miss: List[int] = []
+        for i, key in enumerate(keys):
+            e = self.lookup(key)
+            if e is None:
+                miss.append(i)
+            else:
+                hit_rows[i] = e
+        return keys, hit_rows, np.asarray(miss, np.int64)
+
+    def store_batch(self, keys: List[Tuple], res: SearchResult,
+                    epoch: Optional[int] = None) -> None:
+        """Store every row of a finished miss-batch result (rows are copied
+        so the cache never pins the batch arrays).  Pass the ``epoch``
+        captured at split time — see :meth:`store`."""
+        q = len(res.ids)
+        per_row = [(n, v) for n, v in res.stats.items()
+                   if isinstance(v, np.ndarray) and v.ndim >= 1 and len(v) == q]
+        for j, key in enumerate(keys):
+            self.store(key, CacheEntry(
+                np.array(res.ids[j]), np.array(res.dists[j]),
+                {n: v[j] for n, v in per_row}), epoch=epoch)
+
+    def assemble(self, q: int, k: int, hit_rows: Dict[int, CacheEntry],
+                 miss_res: Optional[SearchResult],
+                 miss_idx: np.ndarray) -> SearchResult:
+        """Stitch hits + executed misses back into request order."""
+        ids = np.full((q, k), -1, np.int32)
+        dists = np.full((q, k), np.inf, np.float32)
+        per_row: Dict[str, Dict[int, np.generic]] = {}
+        for i, e in hit_rows.items():
+            ids[i] = e.ids
+            dists[i] = e.dists
+            for name, v in e.stats.items():
+                per_row.setdefault(name, {})[i] = v
+        if miss_res is not None and len(miss_idx):
+            ids[miss_idx] = miss_res.ids
+            dists[miss_idx] = miss_res.dists
+            for name, v in miss_res.stats.items():
+                if isinstance(v, np.ndarray) and v.ndim >= 1 \
+                        and len(v) == len(miss_idx):
+                    d = per_row.setdefault(name, {})
+                    for j, i in enumerate(miss_idx):
+                        d[int(i)] = v[j]
+        stats: Dict[str, object] = {}
+        for name, vals in per_row.items():
+            sample = np.asarray(next(iter(vals.values())))
+            arr = np.zeros(q, dtype=sample.dtype)
+            for i, v in vals.items():
+                arr[i] = v
+            stats[name] = arr
+        if "strategy" in stats:
+            from repro.planner.planner import SCAN
+            stats["scan_frac"] = float((stats["strategy"] == SCAN).mean())
+        stats["cache_hits"] = len(hit_rows)
+        return SearchResult(ids, dists, stats)

@@ -4,6 +4,9 @@
 corpus slice (a whole index, or one shard of a distributed one):
 
 * ``resolve``  — attribute ranges -> rank intervals (``repro.search.resolve``);
+* cache        — when a ``SearchCache`` is installed, each request is split
+                 into hit rows (served from memory, no device work) and miss
+                 rows (executed), stitched back in request order;
 * dispatch     — ``graph`` runs the paper's beam search over the full batch;
                  ``auto``/``scan``/``beam`` go through the adaptive planner,
                  which partitions the batch into fixed-shape jit dispatches
@@ -12,12 +15,21 @@ corpus slice (a whole index, or one shard of a distributed one):
                  remapped to original corpus ids, and per-query stats
                  (hops / ndist / strategy) are assembled.
 
+Dispatch is **asynchronous at the substrate boundary**: ``dispatch(req)``
+enqueues all device work (jax async dispatch) and returns a
+``PendingSearch`` whose ``result()`` blocks and stitches.  ``run`` is the
+synchronous spelling (``dispatch(..., defer=False).result()``); the
+distributed local path dispatches every shard before blocking any of them,
+overlapping the per-shard device queues.  Deferred dispatches skip
+wall-time calibration (their block time includes sibling shards' work),
+while ndist-based beam calibration still applies.
+
 Scan partitions pad with empty windows (masked, ~free); beam partitions pad
 by duplicating the last real query (a duplicate lane adds no extra
-``while_loop`` iterations under vmap).  After every planned dispatch the
-substrate feeds the cost model: observed ``ndist`` from beam stats and
-warm-call wall times per work unit (the first call of each jit signature is
-excluded so compile time never enters calibration).
+``while_loop`` iterations under vmap).  After every planned synchronous
+dispatch the substrate feeds the cost model: observed ``ndist`` from beam
+stats and warm-call wall times per work unit (the first call of each jit
+signature is excluded so compile time never enters calibration).
 
 ``MeshSubstrate`` is the ``shard_map`` twin for multi-device serving: the
 planner runs **host-side** over the globally resolved rank intervals (clipped
@@ -26,13 +38,17 @@ scan/beam sub-batches that enter the traced per-device body as replicated
 operands — a branchless select in which each shard executes the ``range_scan``
 kernel and the beam search at most once per call, scatters both groups back
 into request order, and finishes with the cross-shard ``all_gather`` + top-k
-merge.  See docs/distributed.md.
+merge.  Warm-call wall times of the traced dispatches feed the cost model
+(mixed scan+beam calls are attributed proportionally to predicted unit
+costs — ``CostModel.observe_wall_mixed``), so mesh routing converges to
+measured hardware ratios instead of serving from the prior forever.  See
+docs/distributed.md.
 """
 from __future__ import annotations
 
 import time
 from functools import partial
-from typing import Dict, Optional, Set, Tuple
+from typing import Callable, Dict, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +62,7 @@ from repro.planner.bucketing import (ROW_TILE, bucket_for_len, next_pow2,
                                      pad_pow2, window_rows)
 from repro.planner.planner import BEAM, QueryPlanner, SCAN
 from repro.search import resolve
+from repro.search.cache import SearchCache
 from repro.search.request import SearchRequest, SearchResult
 
 INF = np.float32(np.inf)
@@ -63,10 +80,32 @@ def merge_topk(ids: jax.Array, dists: jax.Array, k: int):
     return jnp.where(jnp.isfinite(-nd), out_i, -1), -nd
 
 
+class PendingSearch:
+    """Handle for an in-flight substrate dispatch.
+
+    The device work is already enqueued when this object exists (jax async
+    dispatch); ``result()`` blocks on the outputs, stitches, feeds the cost
+    model, and returns the ``SearchResult``.  Idempotent — repeated calls
+    return the same object."""
+    __slots__ = ("_finalize", "_result")
+
+    def __init__(self, finalize: Callable[[], SearchResult]):
+        self._finalize: Optional[Callable[[], SearchResult]] = finalize
+        self._result: Optional[SearchResult] = None
+
+    def result(self) -> SearchResult:
+        if self._finalize is not None:
+            self._result = self._finalize()
+            self._finalize = None
+        return self._result
+
+
 class SearchSubstrate:
     def __init__(self, vecs, nbrs, rmq, dist_c, order, attrs, *,
                  planner: Optional[QueryPlanner] = None,
-                 use_kernel: bool = False):
+                 use_kernel: bool = False,
+                 cache: Optional[SearchCache] = None,
+                 cache_ns=None):
         self._vecs = jnp.asarray(vecs, jnp.float32)
         self._nbrs = jnp.asarray(nbrs)
         self._rmq = jnp.asarray(rmq)
@@ -74,6 +113,8 @@ class SearchSubstrate:
         self.order = np.asarray(order)
         self.attrs = np.asarray(attrs)
         self.use_kernel = use_kernel
+        self.cache = cache
+        self.cache_ns = cache_ns    # distinguishes shards sharing one cache
         n, d = self._vecs.shape
         self.n, self.d = n, d
         self.tb = ROW_TILE          # must match the range_scan kernel tile
@@ -97,21 +138,68 @@ class SearchSubstrate:
 
     # ---------------------------------------------------------------- run
     def run(self, req: SearchRequest) -> SearchResult:
-        """Dispatch one request and stitch the result (original ids)."""
+        """Dispatch one request synchronously and stitch the result."""
+        return self.dispatch(req, defer=False).result()
+
+    def dispatch(self, req: SearchRequest, *, defer: bool = True,
+                 q_digests=None) -> PendingSearch:
+        """Enqueue one request's device work and return a ``PendingSearch``.
+
+        ``defer=True`` (the async path) enqueues every partition before any
+        block and skips wall-time calibration; ``defer=False`` reproduces
+        the synchronous per-partition dispatch+block loop, whose wall times
+        are clean enough to calibrate on.  Cache hits are resolved here —
+        a fully-hit request performs no device work at all.  ``q_digests``
+        are optional precomputed ``hash_query`` values (the distributed
+        local path hashes each query once, not once per shard)."""
         qv = np.asarray(req.queries, np.float32)
         lo = np.asarray(req.lo, np.int64)
         hi = np.asarray(req.hi, np.int64)
         k, ef = int(req.k), int(req.ef)
-        if req.strategy == "graph":
-            ids, dists, stats = self._run_graph(qv, lo, hi, k, ef,
-                                                req.use_kernel)
+        cache = self.cache
+        if cache is None or len(qv) == 0:
+            fin = self._dispatch_all(qv, lo, hi, k, ef, req.strategy,
+                                     req.use_kernel, defer)
+            return PendingSearch(fin)
+        epoch = cache.epoch             # fences stores vs invalidate()
+        keys, hit_rows, miss = cache.split(qv, lo, hi, k, ef, req.strategy,
+                                           req.use_kernel, ns=self.cache_ns,
+                                           digests=q_digests)
+        if len(miss) == 0:
+            return PendingSearch(
+                lambda: cache.assemble(len(qv), k, hit_rows, None, miss))
+        fin = self._dispatch_all(qv[miss], lo[miss], hi[miss], k, ef,
+                                 req.strategy, req.use_kernel, defer)
+        miss_keys = [keys[i] for i in miss]
+
+        def finalize() -> SearchResult:
+            miss_res = fin()
+            cache.store_batch(miss_keys, miss_res, epoch=epoch)
+            if not hit_rows:
+                miss_res.stats["cache_hits"] = 0
+                return miss_res
+            return cache.assemble(len(qv), k, hit_rows, miss_res, miss)
+        return PendingSearch(finalize)
+
+    # ----------------------------------------------------------- dispatch
+    def _dispatch_all(self, qv, lo, hi, k, ef, strategy, use_kernel,
+                      defer: bool) -> Callable[[], SearchResult]:
+        """Enqueue the uncached work for one (sub-)batch; the returned
+        closure blocks, stitches, and remaps rank ids to original ids."""
+        if strategy == "graph":
+            fin = self._dispatch_graph(qv, lo, hi, k, ef, use_kernel)
         else:
-            ids, dists, stats = self._run_planned(qv, lo, hi, k, ef,
-                                                  req.strategy, req.use_kernel)
-        return SearchResult(resolve.remap_ids(self.order, ids), dists, stats)
+            fin = self._dispatch_planned(qv, lo, hi, k, ef, strategy,
+                                         use_kernel, defer)
+
+        def finalize() -> SearchResult:
+            ids, dists, stats = fin()
+            return SearchResult(resolve.remap_ids(self.order, ids), dists,
+                                stats)
+        return finalize
 
     # ------------------------------------------------------ graph strategy
-    def _run_graph(self, qv, lo, hi, k, ef, use_kernel):
+    def _dispatch_graph(self, qv, lo, hi, k, ef, use_kernel):
         """The paper's path: one beam-search dispatch over the full batch."""
         qj = jnp.asarray(qv, jnp.float32)
         lo_j = jnp.asarray(lo)
@@ -121,41 +209,61 @@ class SearchSubstrate:
         ids, dists, st = beam_search_batch(
             self._vecs, self._nbrs, qj, lo_j, hi_j, entry,
             k=k, ef=max(ef, k), use_kernel=use_kernel)
-        st = jax.tree.map(np.asarray, st)
-        st["strategy"] = np.ones(len(qv), np.int8)          # all graph/beam
-        st["scan_frac"] = 0.0
-        return np.asarray(ids), np.asarray(dists), st
+
+        def finalize():
+            st_h = jax.tree.map(np.asarray, st)
+            st_h["strategy"] = np.ones(len(qv), np.int8)     # all graph/beam
+            st_h["scan_frac"] = 0.0
+            return np.asarray(ids), np.asarray(dists), st_h
+        return finalize
 
     # ---------------------------------------------------- planned strategies
-    def _run_planned(self, qv, lo, hi, k, ef, mode, use_kernel):
+    def _dispatch_planned(self, qv, lo, hi, k, ef, mode, use_kernel,
+                          defer: bool):
         """Routing policy: plan the batch, dispatch each fixed-shape
-        partition, stitch back in request order."""
+        partition, stitch back in request order.  ``defer=False`` blocks
+        each partition before dispatching the next (today's calibrated
+        loop); ``defer=True`` enqueues them all and blocks only in the
+        returned closure."""
         q = len(qv)
         plan = self.planner.plan_batch(lo, hi, k=k, ef=ef, mode=mode)
-        out_ids = np.full((q, k), -1, np.int32)
-        out_d = np.full((q, k), INF, np.float32)
-        hops = np.zeros(q, np.int32)
-        ndist = np.zeros(q, np.int32)
-
+        fins = []
         for part in plan.partitions:
-            idx = part.indices      # never empty (guarded at plan time)
             if part.kind == "scan":
-                ids_p, d_p, units = self._run_scan(qv, lo, hi, idx,
-                                                   part.param, part.pad_q, k)
-                ndist[idx] = units
+                fin = self._dispatch_scan(qv, lo, hi, part.indices,
+                                          part.param, part.pad_q, k,
+                                          calibrate_wall=not defer)
             else:
-                ids_p, d_p, st = self._run_beam(qv, lo, hi, idx,
-                                                part.param, part.pad_q, k,
-                                                calibrate=(mode == "auto"),
-                                                use_kernel=use_kernel)
-                hops[idx] = st["hops"]
-                ndist[idx] = st["ndist"]
-            out_ids[idx] = ids_p
-            out_d[idx] = d_p
+                fin = self._dispatch_beam(qv, lo, hi, part.indices,
+                                          part.param, part.pad_q, k,
+                                          calibrate=(mode == "auto"),
+                                          calibrate_wall=not defer,
+                                          use_kernel=use_kernel)
+            if not defer:
+                val = fin()
+                fin = (lambda v: lambda: v)(val)
+            fins.append(fin)
 
-        stats = {"hops": hops, "ndist": ndist,
-                 "strategy": plan.strategy, "scan_frac": plan.scan_frac}
-        return out_ids, out_d, stats
+        def finalize():
+            out_ids = np.full((q, k), -1, np.int32)
+            out_d = np.full((q, k), INF, np.float32)
+            hops = np.zeros(q, np.int32)
+            ndist = np.zeros(q, np.int32)
+            for part, fin in zip(plan.partitions, fins):
+                idx = part.indices  # never empty (guarded at plan time)
+                if part.kind == "scan":
+                    ids_p, d_p, units = fin()
+                    ndist[idx] = units
+                else:
+                    ids_p, d_p, st = fin()
+                    hops[idx] = st["hops"]
+                    ndist[idx] = st["ndist"]
+                out_ids[idx] = ids_p
+                out_d[idx] = d_p
+            stats = {"hops": hops, "ndist": ndist,
+                     "strategy": plan.strategy, "scan_frac": plan.scan_frac}
+            return out_ids, out_d, stats
+        return finalize
 
     # ------------------------------------------------------------------
     def _scan_corpus(self):
@@ -167,7 +275,8 @@ class SearchSubstrate:
                 self._vecs, ((0, n_pad - self.n), (0, self.d_pad - self.d)))
         return self._x_pad
 
-    def _run_scan(self, qv, lo, hi, idx, bucket: int, pad_q: int, k: int):
+    def _dispatch_scan(self, qv, lo, hi, idx, bucket: int, pad_q: int, k: int,
+                       *, calibrate_wall: bool):
         nq = len(idx)
         starts = np.zeros(pad_q, np.int32)
         lens = np.zeros(pad_q, np.int32)
@@ -176,28 +285,35 @@ class SearchSubstrate:
         qp = np.zeros((pad_q, self.d_pad), np.float32)
         qp[:nq, :self.d] = qv[idx]
         sig = ("scan", bucket, pad_q, k)
+        warm = sig in self._warm
+        self._warm.add(sig)
         t0 = time.perf_counter()
         ids, d = range_scan(self._scan_corpus(), jnp.asarray(starts),
                             jnp.asarray(lens), jnp.asarray(qp),
                             bucket=bucket, k=k)
-        ids = np.asarray(ids)[:nq]
-        d = np.asarray(d)[:nq]
-        dt = time.perf_counter() - t0
         units = window_rows(bucket, self.tb)
-        if sig in self._warm:
-            # the dispatch did pad_q windows of work, not nq: normalize by
-            # pad_q so calibration measures the kernel, not the padding ratio
-            self.planner.cost.observe_wall("scan", units, dt, pad_q)
-        self._warm.add(sig)
-        return ids, d, units
 
-    def _run_beam(self, qv, lo, hi, idx, ef: int, pad_q: int, k: int, *,
-                  calibrate: bool, use_kernel: bool = False):
+        def finalize():
+            ids_h = np.asarray(ids)[:nq]
+            d_h = np.asarray(d)[:nq]
+            dt = time.perf_counter() - t0
+            if calibrate_wall and warm:
+                # the dispatch did pad_q windows of work, not nq: normalize
+                # by pad_q so calibration measures the kernel, not the
+                # padding ratio
+                self.planner.cost.observe_wall("scan", units, dt, pad_q)
+            return ids_h, d_h, units
+        return finalize
+
+    def _dispatch_beam(self, qv, lo, hi, idx, ef: int, pad_q: int, k: int, *,
+                       calibrate: bool, calibrate_wall: bool = True,
+                       use_kernel: bool = False):
         nq = len(idx)
         if nq == 0:                 # empty partition: nothing to dispatch
             empty = np.zeros(0, np.int32)
-            return (np.zeros((0, k), np.int32), np.zeros((0, k), np.float32),
-                    {"hops": empty, "ndist": empty})
+            return lambda: (np.zeros((0, k), np.int32),
+                            np.zeros((0, k), np.float32),
+                            {"hops": empty, "ndist": empty})
         pad = np.concatenate([idx, np.repeat(idx[-1:], pad_q - nq)])
         lo_j = jnp.asarray(np.clip(lo[pad], 0, self.n - 1).astype(np.int32))
         hi_j = jnp.asarray(np.clip(hi[pad], 0, self.n - 1).astype(np.int32))
@@ -205,25 +321,39 @@ class SearchSubstrate:
                                      self.n)
         qp = jnp.asarray(qv[pad])
         sig = ("beam", ef, pad_q, k)
+        warm = sig in self._warm
+        self._warm.add(sig)
         t0 = time.perf_counter()
         ids, d, st = beam_search_batch(
             self._vecs, self._nbrs, qp,
             jnp.asarray(lo[pad].astype(np.int32)),
             jnp.asarray(hi[pad].astype(np.int32)),
             entry, k=k, ef=max(ef, k), use_kernel=use_kernel)
-        ids = np.asarray(ids)[:nq]
-        d = np.asarray(d)[:nq]
-        st = {kk: np.asarray(vv)[:nq] for kk, vv in st.items()}
-        dt = time.perf_counter() - t0
-        if calibrate:
-            self.planner.cost.update_beam(float(st["ndist"].mean()), ef)
-            if sig in self._warm:
-                # pad lanes duplicate the last real query, so pad_q lanes of
-                # ~ndist work each were executed — normalize by pad_q
-                self.planner.cost.observe_wall(
-                    "beam", max(float(st["ndist"].mean()), 1.0), dt, pad_q)
-        self._warm.add(sig)
-        return ids, d, st
+
+        def finalize():
+            ids_h = np.asarray(ids)[:nq]
+            d_h = np.asarray(d)[:nq]
+            st_h = {kk: np.asarray(vv)[:nq] for kk, vv in st.items()}
+            dt = time.perf_counter() - t0
+            if calibrate:
+                self.planner.cost.update_beam(float(st_h["ndist"].mean()), ef)
+                if calibrate_wall and warm:
+                    # pad lanes duplicate the last real query, so pad_q lanes
+                    # of ~ndist work each were executed — normalize by pad_q
+                    self.planner.cost.observe_wall(
+                        "beam", max(float(st_h["ndist"].mean()), 1.0), dt,
+                        pad_q)
+            return ids_h, d_h, st_h
+        return finalize
+
+    # ------------------------------------------------- legacy sync wrapper
+    def _run_beam(self, qv, lo, hi, idx, ef: int, pad_q: int, k: int, *,
+                  calibrate: bool, use_kernel: bool = False):
+        """Synchronous beam partition dispatch (kept for the empty-partition
+        regression test and any external caller of the pre-async API)."""
+        return self._dispatch_beam(qv, lo, hi, np.asarray(idx, np.int64),
+                                   ef, pad_q, k, calibrate=calibrate,
+                                   use_kernel=use_kernel)()
 
 
 # ======================================================================
@@ -311,10 +441,21 @@ class MeshSubstrate:
 
     Compiled signatures are bounded the same way as the local planner's:
     ``(k, ef, bucket, pad_pow2(|scan|), pad_pow2(|beam|), Q)``.
+
+    Calibration feedback: routed dispatches (``auto``/``scan``/``beam``)
+    whose jit signature is already warm feed their wall time back into the
+    planner's cost model — pure-beam calls observe the beam unit cost
+    (work per lane ≈ ``ndist_per_ef · ef``; the traced bodies return no
+    stats, so the ndist EMA itself only moves via the local path or a
+    loaded calibration file), and mixed scan+beam calls are attributed
+    proportionally to predicted unit costs (``observe_wall_mixed``).
+    ``req.strategy == "graph"`` — the paper's pure path — never calibrates.
     """
 
     def __init__(self, mesh, axis: str, vecs, nbrs, rmq, dist_c, order,
-                 rank0, *, planner: Optional[QueryPlanner] = None):
+                 rank0, *, planner: Optional[QueryPlanner] = None,
+                 cache: Optional[SearchCache] = None,
+                 calibrate: bool = True):
         self.mesh, self.axis = mesh, axis
         self._vecs = jnp.asarray(vecs, jnp.float32)      # (S, per, d)
         self._nbrs = jnp.asarray(nbrs)
@@ -330,6 +471,8 @@ class MeshSubstrate:
             deg = float((np.asarray(nbrs) >= 0).sum(-1).mean()) if per else 1.0
             planner = QueryPlanner(max(per, 1), deg)
         self.planner = planner
+        self.cache = cache
+        self.calibrate = calibrate
         self._x_pad = None          # padded scan corpus, built on first scan
         self._fns: Dict[Tuple, object] = {}
 
@@ -363,7 +506,8 @@ class MeshSubstrate:
     # ---------------------------------------------------------------- run
     def run(self, req: SearchRequest) -> SearchResult:
         """Dispatch one request on the mesh; result ids are original corpus
-        ids, already merged across shards (replicated)."""
+        ids, already merged across shards (replicated).  With a cache
+        installed, hit rows skip the mesh dispatch entirely."""
         qv = np.asarray(req.queries, np.float32)
         lo = np.asarray(req.lo, np.int64)
         hi = np.asarray(req.hi, np.int64)
@@ -374,29 +518,41 @@ class MeshSubstrate:
                                 np.zeros((0, k), np.float32),
                                 {"strategy": np.zeros(0, np.int8),
                                  "scan_frac": 0.0})
-        if req.strategy == "graph":
-            fn = self.graph_fn(k, ef)
-            ids, dists = fn(self._vecs, self._nbrs, self._rmq, self._dist_c,
-                            self._order, self._rank0, jnp.asarray(qv),
-                            jnp.asarray(lo.astype(np.int32)),
-                            jnp.asarray(hi.astype(np.int32)))
-            return SearchResult(np.asarray(ids), np.asarray(dists),
+        cache = self.cache
+        if cache is None:
+            return self._run_uncached(qv, lo, hi, k, ef, req.strategy)
+        epoch = cache.epoch             # fences stores vs invalidate()
+        keys, hit_rows, miss = cache.split(qv, lo, hi, k, ef, req.strategy,
+                                           ns="mesh")
+        if len(miss) == 0:
+            return cache.assemble(nq, k, hit_rows, None, miss)
+        miss_res = self._run_uncached(qv[miss], lo[miss], hi[miss], k, ef,
+                                      req.strategy)
+        cache.store_batch([keys[i] for i in miss], miss_res, epoch=epoch)
+        if not hit_rows:
+            miss_res.stats["cache_hits"] = 0
+            return miss_res
+        return cache.assemble(nq, k, hit_rows, miss_res, miss)
+
+    def _run_uncached(self, qv, lo, hi, k: int, ef: int,
+                      mode: str) -> SearchResult:
+        nq = len(qv)
+        if mode == "graph":
+            ids, dists = self._call_graph(qv, lo, hi, k, ef, calibrate=False)
+            return SearchResult(ids, dists,
                                 {"strategy": np.ones(nq, np.int8),
                                  "scan_frac": 0.0})
         strategy, lens_eff = self.plan_strategies(lo, hi, k=k, ef=ef,
-                                                  mode=req.strategy)
+                                                  mode=mode)
         scan_idx = np.flatnonzero(strategy == SCAN)
         beam_idx = np.flatnonzero(strategy == BEAM)
         if len(scan_idx) == 0:
             # uniform-beam batch: the planned body would degenerate to the
             # graph body plus pow2 padding and a scatter — dispatch the graph
             # fn directly (same ef, same merge, bit-identical results)
-            fn = self.graph_fn(k, ef)
-            ids, dists = fn(self._vecs, self._nbrs, self._rmq, self._dist_c,
-                            self._order, self._rank0, jnp.asarray(qv),
-                            jnp.asarray(lo.astype(np.int32)),
-                            jnp.asarray(hi.astype(np.int32)))
-            return SearchResult(np.asarray(ids), np.asarray(dists),
+            ids, dists = self._call_graph(qv, lo, hi, k, ef,
+                                          calibrate=self.calibrate)
+            return SearchResult(ids, dists,
                                 {"strategy": strategy, "scan_frac": 0.0})
         # scan_idx is non-empty past the fast path; one shared bucket covers
         # every scan query's widest shard-local clip (never truncates)
@@ -406,18 +562,51 @@ class MeshSubstrate:
             for ln in lens_eff[scan_idx])
         pad_s = pad_pow2(len(scan_idx))
         pad_b = pad_pow2(len(beam_idx)) if len(beam_idx) else 0
+        key = ("planned", k, ef, bucket, pad_s, pad_b, nq)
+        warm = key in self._fns
         fn = self._planned_fn(k=k, ef=ef, bucket=bucket, pad_s=pad_s,
                               pad_b=pad_b, nq=nq)
         scan_ops = self._group_operands(qv, lo, hi, scan_idx, pad_s, nq,
                                         lane_pad=True)
         beam_ops = self._group_operands(qv, lo, hi, beam_idx, pad_b, nq,
                                         lane_pad=False)
+        t0 = time.perf_counter()
         ids, dists = fn(self._scan_corpus(), self._vecs, self._nbrs, self._rmq,
                         self._dist_c, self._order, self._rank0,
                         *scan_ops, *beam_ops)
+        ids = np.asarray(ids)
+        dists = np.asarray(dists)
+        if self.calibrate and warm:
+            # one fused traced step: attribute the wall time across the two
+            # groups proportionally to their predicted unit costs (per-shard
+            # lane counts include the pow2 padding, which did real work)
+            dt = time.perf_counter() - t0
+            self.planner.cost.observe_wall_mixed(
+                window_rows(bucket, self.tb) * pad_s,
+                self.planner.cost.ndist_per_ef * ef * pad_b,
+                dt, pad_s, pad_b)
         scan_frac = len(scan_idx) / nq
-        return SearchResult(np.asarray(ids), np.asarray(dists),
+        return SearchResult(ids, dists,
                             {"strategy": strategy, "scan_frac": scan_frac})
+
+    def _call_graph(self, qv, lo, hi, k: int, ef: int, *, calibrate: bool):
+        """One graph-body mesh dispatch (+ optional warm-call beam-wall
+        calibration for routed uniform-beam batches)."""
+        warm = ("graph", k, ef) in self._fns
+        fn = self.graph_fn(k, ef)
+        t0 = time.perf_counter()
+        ids, dists = fn(self._vecs, self._nbrs, self._rmq, self._dist_c,
+                        self._order, self._rank0, jnp.asarray(qv),
+                        jnp.asarray(np.asarray(lo).astype(np.int32)),
+                        jnp.asarray(np.asarray(hi).astype(np.int32)))
+        ids = np.asarray(ids)
+        dists = np.asarray(dists)
+        if calibrate and warm:
+            dt = time.perf_counter() - t0
+            self.planner.cost.observe_wall(
+                "beam", max(self.planner.cost.ndist_per_ef * ef, 1.0), dt,
+                len(qv))
+        return ids, dists
 
     # ------------------------------------------------------------ operands
     def _group_operands(self, qv, lo, hi, idx, pad: int, nq: int, *,

@@ -18,7 +18,14 @@ routes through the unified search substrate, and ``plan="auto"`` works on
 
   * local path (``mesh=None``): one ``SearchSubstrate`` per shard, so each
     shard runs the full strategy router (fused range-scan | beam per query,
-    with online cost calibration), followed by a host top-k merge;
+    with online cost calibration), followed by a host top-k merge.  By
+    default the per-shard dispatches are **asynchronous**: every shard's
+    device work is enqueued (``SearchSubstrate.dispatch``, jax async
+    dispatch) before any shard's result is blocked on, so shard N+1's
+    planning and upload overlap shard N's kernels; ``async_dispatch=False``
+    restores the sequential dispatch+block loop (whose per-shard wall
+    times feed wall-clock calibration — the async loop skips it, since a
+    shard's block time includes its siblings' queued work);
   * mesh path: one shard per device along the ``data`` axis via
     ``MeshSubstrate`` — the strategy vector is planned host-side from the
     shard-clipped global intervals and the traced per-device body executes a
@@ -35,15 +42,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.construction import build_rnsg
-from repro.search import (MeshSubstrate, SearchRequest, SearchSubstrate,
-                          clip_interval, merge_topk, rank_interval)
+from repro.search import (MeshSubstrate, SearchCache, SearchRequest,
+                          SearchResult, SearchSubstrate, clip_interval,
+                          merge_topk, rank_interval)
 
 
 class DistributedRFANN:
     """Attribute-range-partitioned RNSG serving across the 'data' mesh axis."""
 
     def __init__(self, vectors: np.ndarray, attrs: np.ndarray, *,
-                 n_shards: int, mesh=None, axis: str = "data", **build_kw):
+                 n_shards: int, mesh=None, axis: str = "data",
+                 async_dispatch: bool = True, **build_kw):
         order = np.argsort(attrs, kind="stable")
         vs = np.asarray(vectors, np.float32)[order]
         as_ = np.asarray(attrs, np.float32)[order]
@@ -72,8 +81,10 @@ class DistributedRFANN:
         self.rank0 = jnp.asarray(
             np.arange(n_shards, dtype=np.int32)[:, None] * per)   # (S, 1)
         self.build_seconds = sum(g.build_seconds for g, _ in graphs)
+        self.async_dispatch = async_dispatch
         self._subs: Optional[list] = None
         self._mesh_sub: Optional[MeshSubstrate] = None
+        self._cache: Optional[SearchCache] = None
 
     @property
     def index_bytes(self) -> int:
@@ -87,7 +98,8 @@ class DistributedRFANN:
             self._subs = [
                 SearchSubstrate(self.vecs[s], self.nbrs[s], self.rmq[s],
                                 self.dist_c[s], np.asarray(self.order[s]),
-                                np.asarray(self.attrs[s]))
+                                np.asarray(self.attrs[s]),
+                                cache=self._cache, cache_ns=s)
                 for s in range(self.n_shards)]
         return self._subs
 
@@ -98,36 +110,91 @@ class DistributedRFANN:
             assert self.mesh is not None, "mesh execution needs mesh="
             self._mesh_sub = MeshSubstrate(
                 self.mesh, self.axis, self.vecs, self.nbrs, self.rmq,
-                self.dist_c, self.order, self.rank0)
+                self.dist_c, self.order, self.rank0, cache=self._cache)
         return self._mesh_sub
 
+    def install_cache(self, cache: Optional[SearchCache]) -> None:
+        """Install one shared result cache on every execution path.  On the
+        local path each shard substrate keys its own shard-clipped interval,
+        so shards share the byte budget without colliding."""
+        self._cache = cache
+        if self._subs is not None:
+            for sub in self._subs:
+                sub.cache = cache
+        if self._mesh_sub is not None:
+            self._mesh_sub.cache = cache
+
     def _search_local(self, qv, lo, hi, *, k: int, ef: int, plan: str):
-        """Sequential per-shard substrate dispatch, merged by the same
-        ``merge_topk`` the mesh path uses — identical ids by construction."""
+        """Per-shard substrate dispatch, merged by the same ``merge_topk``
+        the mesh path uses — identical ids by construction.  With
+        ``async_dispatch`` every shard's work is enqueued before any block
+        (the merge is the single synchronization point); otherwise shards
+        run the sequential dispatch+block loop with wall calibration.
+
+        Returns ``(ids, dists, stats)`` — stats aggregate the per-shard
+        substrate stats: ``cache_hits`` is total shard hits normalized by
+        the shard count (≈ fully-cached queries), ``scan_frac`` the mean
+        routed scan fraction across shards."""
         q = len(qv)
         all_i = np.full((self.n_shards, q, k), -1, np.int32)
         all_d = np.full((self.n_shards, q, k), np.inf, np.float32)
+        digests = None
+        if self._cache is not None and q:       # hash each query ONCE, not
+            from repro.search.cache import hash_query     # once per shard
+            digests = [hash_query(qv[i]) for i in range(q)]
+        pending = []
         for s, sub in enumerate(self.substrates):
             slo, shi = clip_interval(lo, hi, s * self.per, self.per)
-            res = sub.run(SearchRequest(queries=qv, lo=slo, hi=shi,
-                                        k=k, ef=ef, strategy=plan))
+            req = SearchRequest(queries=qv, lo=slo, hi=shi,
+                                k=k, ef=ef, strategy=plan)
+            p = sub.dispatch(req, defer=self.async_dispatch,
+                             q_digests=digests)
+            if not self.async_dispatch:
+                p.result()              # block before the next shard starts
+            pending.append(p)
+        hits = 0
+        scan_fracs = []
+        for s, p in enumerate(pending):
+            res = p.result()
             all_i[s] = res.ids
             all_d[s] = np.where(res.ids >= 0, res.dists, np.inf)
+            hits += int(res.stats.get("cache_hits", 0))
+            if "scan_frac" in res.stats:
+                scan_fracs.append(float(res.stats["scan_frac"]))
         ids, dists = merge_topk(jnp.asarray(all_i), jnp.asarray(all_d), k)
-        return np.asarray(ids), np.asarray(dists)
+        stats = {}
+        if scan_fracs:
+            stats["scan_frac"] = float(np.mean(scan_fracs))
+        if self._cache is not None:
+            stats["cache_hits"] = int(round(hits / self.n_shards))
+        return np.asarray(ids), np.asarray(dists), stats
 
     # ------------------------------------------------------------------
+    def rank_range(self, attr_ranges: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """[a_l, a_r] (inclusive) -> *global* rank interval [L, R] over the
+        attribute-sorted corpus (host-side resolve; the engine's pipelined
+        resolver stage calls this while the previous batch executes)."""
+        return rank_interval(self.attrs_sorted,
+                             np.asarray(attr_ranges, np.float32))
+
+    def search_ranks(self, queries, lo, hi, *, k: int = 10, ef: int = 64,
+                     plan: str = "graph") -> SearchResult:
+        """Rank-space entry point (resolve already done): dispatch on the
+        mesh path when a mesh is attached, else the (async) local path."""
+        qv = np.asarray(queries, np.float32)
+        ef = max(ef, k)
+        if self.mesh is None:
+            ids, dists, stats = self._search_local(qv, lo, hi, k=k, ef=ef,
+                                                   plan=plan)
+            return SearchResult(ids, dists, stats)
+        return self.mesh_substrate.run(SearchRequest(
+            queries=qv, lo=lo, hi=hi, k=k, ef=ef, strategy=plan))
+
     def search(self, queries: np.ndarray, attr_ranges: np.ndarray, *,
                k: int = 10, ef: int = 64,
                plan: str = "graph") -> Tuple[np.ndarray, np.ndarray]:
-        qv = np.asarray(queries, np.float32)
-        lo, hi = rank_interval(self.attrs_sorted,
-                               np.asarray(attr_ranges, np.float32))
-        ef = max(ef, k)
-        if self.mesh is None:
-            return self._search_local(qv, lo, hi, k=k, ef=ef, plan=plan)
-        res = self.mesh_substrate.run(SearchRequest(
-            queries=qv, lo=lo, hi=hi, k=k, ef=ef, strategy=plan))
+        lo, hi = self.rank_range(attr_ranges)
+        res = self.search_ranks(queries, lo, hi, k=k, ef=ef, plan=plan)
         return res.ids, res.dists
 
     # ------------------------------------------------------------------

@@ -1,11 +1,27 @@
-"""Batched RFANN serving engine: dynamic batching over a request queue.
+"""Batched RFANN serving engine: dynamic batching over a request queue,
+with a pipelined resolve/dispatch pair and an optional shared result cache.
 
 Requests (query vector + attribute range) are coalesced into batches of up to
-``max_batch`` or ``max_wait_ms``, executed through the unified search
-substrate (``index.search`` returns a ``SearchResult``; under ``plan="auto"``
-each dynamic batch is partitioned into fused range-scan and beam-search
-dispatches by selectivity — see ``repro.planner``), and resolved through
-per-request futures, each carrying its own per-request ``SearchResult``.
+``max_batch`` or ``max_wait_ms`` and flow through a **two-stage pipeline**:
+
+* resolver stage — forms the dynamic batch and runs the host-side resolve
+  (attribute ranges -> global rank intervals, a ``searchsorted`` over the
+  sorted attribute array) on its own thread;
+* dispatch stage — executes the resolved batch through the unified search
+  substrate (``index.search_ranks``; under ``plan="auto"`` each batch is
+  partitioned into fused range-scan and beam-search dispatches by
+  selectivity — see ``repro.planner``) and resolves the per-request futures.
+
+The stages overlap: while batch N occupies the device, batch N+1 is already
+batched and resolved, so resolve latency is off the critical path under
+load.  A bounded hand-off queue provides backpressure (the resolver stalls
+rather than racing ahead of the device).
+
+``cache_bytes > 0`` installs a shared ``SearchCache`` at the substrate choke
+point: repeat (query, range, k, ef, strategy) rows are served from memory
+with no device work.  ``swap_index`` hot-swaps the served index and
+invalidates the cache in the same lock — cached rows reference the old
+corpus and must never survive a swap.
 
 If ``calibration_path`` is given, the planner's online-calibrated cost model
 is restored from it at startup and persisted (atomically: temp file +
@@ -35,6 +51,7 @@ class EngineStats:
     served: int = 0
     batches: int = 0
     scan_routed: int = 0
+    cache_hits: int = 0
     reservoir_size: int = 4096
     latencies_ms: List[float] = field(default_factory=list)
     lat_seen: int = 0
@@ -55,6 +72,7 @@ class EngineStats:
         return dict(served=self.served, batches=self.batches,
                     mean_batch=self.served / max(self.batches, 1),
                     scan_frac=self.scan_routed / max(self.served, 1),
+                    cache_hit_frac=self.cache_hits / max(self.served, 1),
                     p50_ms=float(np.percentile(lat, 50)),
                     p95_ms=float(np.percentile(lat, 95)),
                     p99_ms=float(np.percentile(lat, 99)))
@@ -64,7 +82,9 @@ class RFANNEngine:
     def __init__(self, index, *, k: int = 10, ef: int = 64,
                  max_batch: int = 64, max_wait_ms: float = 2.0,
                  plan: str = "auto",
-                 calibration_path: Optional[str] = None):
+                 calibration_path: Optional[str] = None,
+                 cache_bytes: int = 0,
+                 pipeline_depth: int = 2):
         self.index = index
         self.k, self.ef = k, ef
         self.plan = plan
@@ -79,11 +99,25 @@ class RFANNEngine:
                 except ValueError as e:     # stale schema / wrong corpus:
                     import warnings         # serve from the prior instead
                     warnings.warn(f"ignoring calibration: {e}")
+        self.cache = None
+        if cache_bytes:
+            from repro.search import SearchCache
+            self.cache = SearchCache(max_bytes=cache_bytes)
+            if hasattr(index, "install_cache"):
+                index.install_cache(self.cache)
         self._q: queue.Queue = queue.Queue()
+        # bounded hand-off between the two stages: the resolver pre-resolves
+        # at most `pipeline_depth` batches ahead of the device
+        self._dq: queue.Queue = queue.Queue(maxsize=max(pipeline_depth, 1))
         self._stop = threading.Event()
+        self._index_lock = threading.Lock()
         self.stats = EngineStats()
-        self._thread = threading.Thread(target=self._loop, daemon=True)
-        self._thread.start()
+        self._resolver = threading.Thread(target=self._resolve_loop,
+                                          daemon=True)
+        self._dispatcher = threading.Thread(target=self._dispatch_loop,
+                                            daemon=True)
+        self._resolver.start()
+        self._dispatcher.start()
 
     # ------------------------------------------------------------------
     def submit(self, query: np.ndarray, attr_range: Tuple[float, float]) -> Future:
@@ -92,7 +126,26 @@ class RFANNEngine:
                      np.asarray(attr_range, np.float32), time.perf_counter(), fut))
         return fut
 
-    def _loop(self):
+    def swap_index(self, new_index) -> None:
+        """Hot-swap the served index.  The result cache is detached from the
+        old index, invalidated, and installed on the new one — cached rows
+        hold corpus ids of the *old* index and must never be served
+        afterwards.  A dispatch already in flight on the old index is fenced
+        by the cache's epoch (captured at its hit/miss split, checked under
+        the store lock), so its late stores are dropped rather than
+        repopulating the cache with old-corpus rows."""
+        with self._index_lock:
+            old = self.index
+            if self.cache is not None:
+                if hasattr(old, "install_cache"):
+                    old.install_cache(None)     # old index: cache off
+                self.cache.invalidate()
+            self.index = new_index
+            if self.cache is not None and hasattr(new_index, "install_cache"):
+                new_index.install_cache(self.cache)
+
+    # ------------------------------------------------------- stage 1: batch+resolve
+    def _resolve_loop(self):
         while not self._stop.is_set():
             try:
                 first = self._q.get(timeout=0.05)
@@ -110,12 +163,48 @@ class RFANNEngine:
                     break
             qv = np.stack([b[0] for b in batch])
             rg = np.stack([b[1] for b in batch])
-            res = self.index.search(qv, rg, k=self.k, ef=self.ef,
-                                    plan=self.plan)
+            with self._index_lock:          # only the reference needs the
+                index = self.index          # lock — never resolve under it,
+            # the dispatcher takes it per batch and would stall behind us
+            lo, hi = (index.rank_range(rg)
+                      if hasattr(index, "rank_range") else (None, None))
+            item = (batch, qv, rg, lo, hi, index)
+            enqueued = False
+            while not self._stop.is_set():  # bounded queue: backpressure
+                try:
+                    self._dq.put(item, timeout=0.05)
+                    enqueued = True
+                    break
+                except queue.Full:
+                    continue
+            if not enqueued:                # shutdown raced the hand-off:
+                self._fail_batch(batch)     # never leave futures hanging
+
+    # ------------------------------------------------------- stage 2: dispatch
+    def _dispatch_loop(self):
+        while not self._stop.is_set() or not self._dq.empty():
+            try:
+                batch, qv, rg, lo, hi, r_index = self._dq.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            with self._index_lock:
+                index = self.index
+            if index is not r_index or lo is None:
+                # swapped between the stages (or no rank-space entry point):
+                # re-resolve against the live index
+                res = index.search(qv, rg, k=self.k, ef=self.ef,
+                                   plan=self.plan)
+            else:
+                res = index.search_ranks(qv, lo, hi, k=self.k, ef=self.ef,
+                                         plan=self.plan)
+            if not hasattr(res, "row"):     # tuple-returning index
+                from repro.search import SearchResult
+                res = SearchResult(np.asarray(res[0]), np.asarray(res[1]), {})
             if "strategy" in res.stats:
                 from repro.planner import SCAN
                 self.stats.scan_routed += int(
                     (np.asarray(res.stats["strategy"]) == SCAN).sum())
+            self.stats.cache_hits += int(res.stats.get("cache_hits", 0))
             now = time.perf_counter()
             for i, (_, _, t0, fut) in enumerate(batch):
                 self.stats.record_latency((now - t0) * 1e3)
@@ -123,9 +212,31 @@ class RFANNEngine:
             self.stats.served += len(batch)
             self.stats.batches += 1
 
+    @staticmethod
+    def _fail_batch(batch) -> None:
+        for _, _, _, fut in batch:
+            if not fut.done():
+                fut.set_exception(RuntimeError("engine closed before "
+                                               "this request was served"))
+
     def close(self):
         self._stop.set()
-        self._thread.join(timeout=2.0)
+        self._resolver.join(timeout=2.0)
+        self._dispatcher.join(timeout=2.0)
+        # fail anything still queued (a blocked ``Future.result()`` with no
+        # timeout must never hang on a closed engine)
+        while True:
+            try:
+                batch, *_ = self._dq.get_nowait()
+            except queue.Empty:
+                break
+            self._fail_batch(batch)
+        while True:
+            try:
+                q_, rg_, t0_, fut = self._q.get_nowait()
+            except queue.Empty:
+                break
+            self._fail_batch([(q_, rg_, t0_, fut)])
         if self.calibration_path:
             planner = getattr(self.index, "planner", None)
             if planner is not None:

@@ -1,0 +1,212 @@
+"""Async + cached search substrate: cache hit/miss/eviction under the byte
+budget, invalidation on index swap, async local-path parity with the
+sequential baseline, and the engine's resolve/dispatch pipelining."""
+import numpy as np
+import pytest
+
+from repro.core.rfann import RNSGIndex
+from repro.data.ann import make_attrs, make_vectors, selectivity_ranges
+from repro.search import SearchCache, SearchRequest
+from repro.search.cache import CacheEntry, query_key
+from repro.serving.distributed import DistributedRFANN
+from repro.serving.engine import RFANNEngine
+
+
+def _corpus(n=256, d=16, seed=0):
+    return make_vectors(n, d, seed=seed), make_attrs(n, seed=seed)
+
+
+def _index(n=256, d=16, seed=0):
+    vecs, attrs = _corpus(n, d, seed)
+    return RNSGIndex.build(vecs, attrs, m=16, ef_spatial=16,
+                           ef_attribute=24), vecs, attrs
+
+
+# ------------------------------------------------------------ cache mechanics
+def test_cache_hit_miss_counters_through_search():
+    ix, vecs, attrs = _index()
+    cache = SearchCache(max_bytes=1 << 20)
+    ix.install_cache(cache)
+    qv = make_vectors(8, 16, seed=7)
+    rg = selectivity_ranges(attrs, 8, 0.2, seed=11)
+    r1 = ix.search(qv, rg, k=5, ef=64, plan="auto")
+    assert cache.misses == 8 and cache.hits == 0
+    assert r1.stats["cache_hits"] == 0
+    r2 = ix.search(qv, rg, k=5, ef=64, plan="auto")
+    assert cache.hits == 8 and r2.stats["cache_hits"] == 8
+    # hits are the stored bytes verbatim
+    assert np.array_equal(r1.ids, r2.ids)
+    assert np.array_equal(r1.dists, r2.dists)
+    # a different k misses (k is part of the key)
+    ix.search(qv, rg, k=3, ef=64, plan="auto")
+    assert cache.misses == 16
+    # partial-hit batch: old rows hit, new rows miss, request order kept
+    qv2 = np.concatenate([qv[:4], make_vectors(4, 16, seed=99)])
+    r3 = ix.search(qv2, rg, k=5, ef=64, plan="auto")
+    assert r3.stats["cache_hits"] == 4
+    assert np.array_equal(r3.ids[:4], r1.ids[:4])
+
+
+def test_cache_eviction_under_byte_budget():
+    k = 5
+    entry_bytes = CacheEntry(np.zeros(k, np.int32), np.zeros(k, np.float32),
+                             {"hops": 0, "ndist": 0, "strategy": 0}).nbytes
+    cache = SearchCache(max_bytes=2 * entry_bytes)      # room for exactly 2
+    q = np.arange(4, dtype=np.float32)
+
+    def key(i):
+        return query_key(q + i, 0, 10, k, 64, "auto")
+
+    def entry():
+        return CacheEntry(np.zeros(k, np.int32), np.zeros(k, np.float32),
+                          {"hops": 0, "ndist": 0, "strategy": 0})
+
+    cache.store(key(0), entry())
+    cache.store(key(1), entry())
+    assert len(cache) == 2 and cache.evictions == 0
+    cache.store(key(2), entry())                        # evicts LRU = key(0)
+    assert len(cache) == 2 and cache.evictions == 1
+    assert cache.bytes <= cache.max_bytes
+    assert cache.lookup(key(0)) is None                 # evicted
+    assert cache.lookup(key(1)) is not None
+    # lookup refreshed key(1): storing another entry now evicts key(2)
+    cache.store(key(3), entry())
+    assert cache.lookup(key(2)) is None
+    assert cache.lookup(key(1)) is not None
+    # an entry larger than the whole budget is refused, not thrashed
+    big = CacheEntry(np.zeros(4096, np.int32), np.zeros(4096, np.float32), {})
+    cache.store(key(4), big)
+    assert cache.lookup(key(4)) is None and len(cache) == 2
+
+
+def test_cache_invalidation_on_index_swap():
+    ix1, _, attrs = _index(seed=0)
+    ix2, _, _ = _index(seed=1)          # different corpus, same shapes
+    qv = make_vectors(6, 16, seed=7)
+    rg = selectivity_ranges(attrs, 6, 0.3, seed=11)
+    want2 = ix2.search(qv, rg, k=5, ef=64, plan="auto")     # uncached truth
+
+    eng = RFANNEngine(ix1, k=5, ef=64, max_batch=8, max_wait_ms=5,
+                      plan="auto", cache_bytes=1 << 20)
+    futs = [eng.submit(qv[i], rg[i]) for i in range(6)]
+    res1 = [f.result(timeout=120) for f in futs]
+    assert len(eng.cache) > 0
+    eng.swap_index(ix2)
+    assert eng.cache.invalidations == 1 and len(eng.cache) == 0
+    futs = [eng.submit(qv[i], rg[i]) for i in range(6)]
+    res2 = [f.result(timeout=120) for f in futs]
+    eng.close()
+    # post-swap answers come from ix2, not stale ix1 rows
+    for i, r in enumerate(res2):
+        assert np.array_equal(r.ids, want2.ids[i]), i
+    assert any(not np.array_equal(a.ids, b.ids)
+               for a, b in zip(res1, res2))    # the corpora really differ
+
+
+def test_invalidate_epoch_fences_in_flight_stores():
+    """A dispatch that split before invalidate() must not repopulate the
+    cache afterwards (the swap_index race): its stores carry the old epoch
+    and are dropped under the store lock."""
+    ix, vecs, attrs = _index()
+    cache = SearchCache(max_bytes=1 << 20)
+    ix.install_cache(cache)
+    qv = make_vectors(4, 16, seed=7)
+    rg = selectivity_ranges(attrs, 4, 0.2, seed=11)
+    lo, hi = ix.rank_range(rg)
+    # dispatch (split happens here, capturing the epoch) ...
+    p = ix.substrate.dispatch(SearchRequest(
+        queries=qv, lo=lo, hi=hi, k=5, ef=32, strategy="auto"))
+    # ... invalidate while the batch is "in flight" ...
+    cache.invalidate()
+    res = p.result()                    # finalize stores with the old epoch
+    assert res.ids.shape == (4, 5)      # the result itself is still served
+    assert len(cache) == 0              # but nothing repopulated the cache
+    # and direct late stores are fenced the same way
+    cache.store_batch([query_key(qv[i], lo[i], hi[i], 5, 32, "auto")
+                       for i in range(4)], res, epoch=cache.epoch - 1)
+    assert len(cache) == 0
+
+
+def test_distributed_local_stats_aggregate():
+    """The distributed local path must surface cache_hits / scan_frac in
+    its merged SearchResult (the engine's monitoring reads them)."""
+    vecs, attrs = _corpus(512, 16, seed=3)
+    dist = DistributedRFANN(vecs, attrs, n_shards=4, m=16, ef_spatial=16,
+                            ef_attribute=16)
+    cache = SearchCache(1 << 20)
+    dist.install_cache(cache)
+    qv = make_vectors(8, 16, seed=5)
+    rg = selectivity_ranges(attrs, 8, 0.3, seed=6)
+    lo, hi = dist.rank_range(rg)
+    r1 = dist.search_ranks(qv, lo, hi, k=5, ef=48, plan="auto")
+    assert r1.stats["cache_hits"] == 0 and "scan_frac" in r1.stats
+    r2 = dist.search_ranks(qv, lo, hi, k=5, ef=48, plan="auto")
+    # every shard hit every row -> normalized count = the full batch
+    assert r2.stats["cache_hits"] == 8
+    assert np.array_equal(r1.ids, r2.ids)
+
+
+# --------------------------------------------------------- async local path
+def test_async_local_matches_sequential_8_shards():
+    """The async local path (dispatch every shard before blocking any) must
+    produce the sequential loop's merged top-k exactly, for every plan."""
+    vecs, attrs = _corpus(512, 16, seed=3)
+    kw = dict(n_shards=8, m=16, ef_spatial=16, ef_attribute=16)
+    d_seq = DistributedRFANN(vecs, attrs, async_dispatch=False, **kw)
+    d_async = DistributedRFANN(vecs, attrs, async_dispatch=True, **kw)
+    qv = make_vectors(16, 16, seed=5)
+    s = np.sort(attrs)
+    rg = np.concatenate([
+        selectivity_ranges(attrs, 6, 0.01, seed=1),      # narrow
+        selectivity_ranges(attrs, 6, 0.5, seed=2),       # wide
+        np.asarray([[s[5] + 1e-7, s[5] + 2e-7],          # globally empty
+                    [s[17], s[17]],                      # single point
+                    [s[3], s[40]],                       # one-shard clip
+                    [s[0], s[-1]]], np.float32)])        # full span
+    for plan in ("graph", "auto", "scan", "beam"):
+        ia, da = d_seq.search(qv, rg, k=5, ef=48, plan=plan)
+        ib, db = d_async.search(qv, rg, k=5, ef=48, plan=plan)
+        assert np.array_equal(ia, ib), plan
+        assert np.array_equal(da, db), plan
+
+
+def test_pending_search_is_idempotent_and_lazy():
+    ix, vecs, attrs = _index()
+    qv = make_vectors(4, 16, seed=7)
+    rg = selectivity_ranges(attrs, 4, 0.2, seed=11)
+    lo, hi = ix.rank_range(rg)
+    p = ix.substrate.dispatch(SearchRequest(
+        queries=qv, lo=lo, hi=hi, k=5, ef=32, strategy="auto"))
+    r1 = p.result()
+    assert p.result() is r1                      # idempotent
+    want = ix.search(qv, rg, k=5, ef=32, plan="auto")
+    assert np.array_equal(r1.ids, want.ids)
+
+
+# ------------------------------------------------------- engine pipelining
+def test_engine_pipelining_smoke():
+    """Two-stage engine: many small batches flow through the resolver ->
+    dispatcher hand-off; every future resolves with the right shape and the
+    same answers a direct search gives; repeat submissions hit the cache."""
+    ix, vecs, attrs = _index(512, 16, seed=4)
+    eng = RFANNEngine(ix, k=5, ef=32, max_batch=8, max_wait_ms=2,
+                      plan="auto", cache_bytes=1 << 20, pipeline_depth=2)
+    qv = make_vectors(32, 16, seed=5)
+    rg = selectivity_ranges(attrs, 32, 0.4, seed=6)
+    futs = [eng.submit(qv[i], rg[i]) for i in range(32)]
+    rows = [f.result(timeout=120) for f in futs]
+    want = ix.search(qv, rg, k=5, ef=32, plan="auto")
+    for i, r in enumerate(rows):
+        assert r.ids.shape == (5,)
+        assert np.array_equal(r.ids, want.ids[i]), i
+    # second wave: served from the cache, still correct
+    futs = [eng.submit(qv[i], rg[i]) for i in range(32)]
+    rows2 = [f.result(timeout=120) for f in futs]
+    assert eng.stats.cache_hits >= 32
+    for a, b in zip(rows, rows2):
+        assert np.array_equal(a.ids, b.ids)
+        assert np.array_equal(a.dists, b.dists)
+    assert eng.stats.served == 64 and eng.stats.batches >= 2
+    summ = eng.stats.summary()
+    assert 0.0 < summ["cache_hit_frac"] <= 1.0
+    eng.close()

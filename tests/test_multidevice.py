@@ -28,7 +28,8 @@ def test_sharded_train_step_moe_ep():
         from repro.configs.registry import get_smoke_config
         from repro.models.lm import Model
         from repro.models.params import ShardPlan, logical_axes
-        from repro.parallel.sharding import (make_act_sharder, tree_shardings,
+        from repro.parallel.sharding import (make_act_sharder, set_mesh_compat,
+                                             tree_shardings,
                                              batch_logical, spec_for_logical)
         from repro.launch.specs import concrete_batch
         from repro.training.train_step import build_train_step, init_train_state
@@ -50,11 +51,11 @@ def test_sharded_train_step_moe_ep():
         bsh = {k: NamedSharding(mesh, spec_for_logical(blog[k], v.shape, mesh))
                for k, v in batch.items()}
         batch = jax.device_put(batch, bsh)
-        with jax.set_mesh(mesh):
+        with set_mesh_compat(mesh):
             state2, m = jax.jit(build_train_step(model))(state, batch)
         assert np.isfinite(float(m["loss"])), m
         # MoE EP path must actually emit an all-to-all
-        with jax.set_mesh(mesh):
+        with set_mesh_compat(mesh):
             txt = jax.jit(build_train_step(model)).lower(state, batch).compile().as_text()
         assert "all-to-all" in txt, "expected EP all-to-all in HLO"
         print("OK", float(m["loss"]))
@@ -70,6 +71,7 @@ def test_moe_ep_sharded_matches_local():
         from repro.models.lm import Model
         from repro.models.params import ShardPlan, resolve_dims
         from repro.models.moe import moe_ffn
+        from repro.parallel.sharding import set_mesh_compat
         cfg = dataclasses.replace(get_smoke_config("mixtral-8x7b"), dtype="float32")
         mesh = jax.make_mesh((2, 2), ("data", "model"))
         dm = resolve_dims(cfg, ShardPlan(tp=2, fsdp=2))
@@ -83,7 +85,7 @@ def test_moe_ep_sharded_matches_local():
              "w_out": jnp.asarray(rng.standard_normal((e, f, d)) * .1, jnp.float32),
              "norm": jnp.ones((d,), jnp.float32)}
         y_local, _ = moe_ffn(x, p, cfg, dm, mesh=None)
-        with jax.set_mesh(mesh):
+        with set_mesh_compat(mesh):
             y_shard, _ = jax.jit(lambda x, p: moe_ffn(x, p, cfg, dm, mesh=mesh))(x, p)
         err = float(jnp.max(jnp.abs(y_local - y_shard)))
         assert err < 1e-4, err
@@ -115,6 +117,52 @@ def test_distributed_rfann_shard_map_matches_local():
 
 
 @pytest.mark.slow
+def test_async_local_dispatch_matches_sequential_8_shards():
+    """Concurrency acceptance (subprocess, 8 forced host devices): the async
+    local path — every shard's substrate dispatch enqueued before any block
+    — must reproduce the sequential baseline's merged top-k exactly, on a
+    mixed narrow/wide/degenerate workload under every plan, with a shared
+    result cache giving bit-identical repeat batches on top.
+
+    In-process twin (tier-1, smaller corpus, no subprocess):
+    tests/test_async_cache.py::test_async_local_matches_sequential_8_shards.
+    This copy runs the full-size workload in a clean interpreter so async
+    scheduling is exercised without the rest of the suite's jit caches."""
+    out = _run("""
+        import numpy as np
+        from repro.data.ann import make_vectors, make_attrs, selectivity_ranges
+        from repro.search import SearchCache
+        from repro.serving.distributed import DistributedRFANN
+        vecs = make_vectors(1024, 16, seed=0); attrs = make_attrs(1024, seed=0)
+        qv = make_vectors(24, 16, seed=5)
+        s = np.sort(attrs)
+        rg = np.concatenate([
+            selectivity_ranges(attrs, 10, 0.01, seed=1),
+            selectivity_ranges(attrs, 10, 0.5, seed=2),
+            np.asarray([[s[5] + 1e-7, s[5] + 2e-7],      # globally empty
+                        [s[17], s[17]],                  # single point
+                        [s[3], s[40]],                   # one-shard clip
+                        [s[0], s[-1]]], np.float32)])    # full span
+        kw = dict(n_shards=8, m=16, ef_spatial=16, ef_attribute=16)
+        d_seq = DistributedRFANN(vecs, attrs, async_dispatch=False, **kw)
+        d_async = DistributedRFANN(vecs, attrs, async_dispatch=True, **kw)
+        for plan in ("graph", "auto", "scan", "beam"):
+            ia, da = d_seq.search(qv, rg, k=5, ef=48, plan=plan)
+            ib, db = d_async.search(qv, rg, k=5, ef=48, plan=plan)
+            assert np.array_equal(ia, ib), plan
+            assert np.array_equal(da, db), plan
+        cache = SearchCache(8 << 20)
+        d_async.install_cache(cache)
+        i1, d1 = d_async.search(qv, rg, k=5, ef=48, plan="auto")
+        i2, d2 = d_async.search(qv, rg, k=5, ef=48, plan="auto")
+        assert np.array_equal(i1, i2) and np.array_equal(d1, d2)
+        assert cache.hits == 8 * len(rg), cache.snapshot()
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
 def test_production_mesh_shapes():
     out = _run("""
         from repro.launch.mesh import make_production_mesh
@@ -132,6 +180,7 @@ def test_gpipe_pipeline_fwd_and_grad_parity():
     out = _run("""
         import numpy as np, jax, jax.numpy as jnp
         from repro.parallel.pipeline import gpipe
+        from repro.parallel.sharding import set_mesh_compat
         mesh = jax.make_mesh((4,), ("pp",))
         S, M, B, D = 4, 8, 2, 16
         rng = np.random.default_rng(0)
@@ -140,7 +189,7 @@ def test_gpipe_pipeline_fwd_and_grad_parity():
         x = jnp.asarray(rng.standard_normal((M, B, D)), jnp.float32)
         stage_fn = lambda p, h: jnp.tanh(h @ p["w"] + p["b"])
         pipe = gpipe(stage_fn, mesh, "pp", S, M)
-        with jax.set_mesh(mesh):
+        with set_mesh_compat(mesh):
             y = jax.jit(pipe)(params, x)
         ref = x
         for s in range(S):
@@ -152,7 +201,7 @@ def test_gpipe_pipeline_fwd_and_grad_parity():
             for s in range(S):
                 h = jnp.tanh(h @ p["w"][s] + p["b"][s])
             return jnp.sum(h ** 2)
-        with jax.set_mesh(mesh):
+        with set_mesh_compat(mesh):
             g1 = jax.jit(jax.grad(loss_pipe))(params)
         g2 = jax.grad(loss_ref)(params)
         err = max(float(jnp.max(jnp.abs(a - b)))

@@ -1,0 +1,145 @@
+"""Property-based tests for the resolve stage (``repro.search.resolve``).
+
+The resolve contract: a raw attribute range ``[a_l, a_r]`` over a sorted
+attribute array maps to the inclusive rank interval covering exactly the
+in-range positions (``lo > hi`` = empty), and a shard clip of a *global*
+interval covers exactly the in-range positions of the shard's slice
+(Theorem 4.7 heredity at the resolve layer).
+
+Hypothesis drives random sorted attribute arrays (with heavy duplicate
+pressure) × random ranges against a brute-force mask oracle; a deterministic
+seeded sweep covers the same ground when hypothesis is not installed
+(``tests/_hyp.py`` turns the ``@given`` tests into skips)."""
+import numpy as np
+from _hyp import given, settings, st
+
+from repro.search.resolve import (clip_interval, rank_interval,
+                                  rank_interval_jax)
+
+
+# --------------------------------------------------------------- the oracle
+def oracle_positions(attrs_sorted: np.ndarray, a_l: float, a_r: float):
+    """Brute force: the set of positions whose attribute lies in [a_l, a_r]."""
+    mask = (attrs_sorted >= a_l) & (attrs_sorted <= a_r)
+    return np.flatnonzero(mask)
+
+
+def interval_positions(lo: int, hi: int):
+    return np.arange(lo, hi + 1) if lo <= hi else np.zeros(0, np.int64)
+
+
+def check_against_oracle(attrs_sorted: np.ndarray, ranges: np.ndarray):
+    """rank_interval must cover exactly the oracle's in-range positions —
+    including empty, single-point, full-span, and duplicate-heavy inputs."""
+    lo, hi = rank_interval(attrs_sorted, ranges)
+    for q in range(len(ranges)):
+        want = oracle_positions(attrs_sorted, ranges[q, 0], ranges[q, 1])
+        got = interval_positions(int(lo[q]), int(hi[q]))
+        assert np.array_equal(got, want), (
+            q, ranges[q].tolist(), got.tolist(), want.tolist())
+    return lo, hi
+
+
+# ---------------------------------------------------------------- strategies
+# Integer-valued attributes keep float32 exact, so the oracle comparison is
+# never about rounding; duplicates are frequent by construction (small value
+# universe), which is exactly the edge searchsorted sides must get right.
+attr_arrays = st.lists(st.integers(min_value=-40, max_value=40),
+                       min_size=1, max_size=64).map(
+    lambda xs: np.sort(np.asarray(xs, np.float32)))
+
+range_pairs = st.tuples(st.integers(min_value=-45, max_value=45),
+                        st.integers(min_value=-45, max_value=45))
+
+
+@settings(max_examples=60, deadline=None)
+@given(attr_arrays, st.lists(range_pairs, min_size=1, max_size=12))
+def test_rank_interval_matches_oracle(attrs_sorted, pairs):
+    """Random sorted arrays × random ranges (inverted pairs included — an
+    inverted attribute range must resolve to an empty rank interval)."""
+    ranges = np.asarray(pairs, np.float32)
+    check_against_oracle(attrs_sorted, ranges)
+
+
+@settings(max_examples=40, deadline=None)
+@given(attr_arrays, st.integers(min_value=0, max_value=10_000))
+def test_rank_interval_degenerate_rows(attrs_sorted, seed):
+    """The rows the paper's API must handle: empty (between two adjacent
+    values), single point, full span, everything, and a duplicate value."""
+    rng = np.random.default_rng(seed)
+    i = int(rng.integers(len(attrs_sorted)))
+    v = float(attrs_sorted[i])
+    ranges = np.asarray([
+        [v + 0.25, v + 0.25],                        # between values: empty
+        [v, v],                                      # point (all duplicates)
+        [attrs_sorted[0], attrs_sorted[-1]],         # full span
+        [attrs_sorted[0] - 10, attrs_sorted[-1] + 10],   # superset
+        [attrs_sorted[-1] + 1, attrs_sorted[-1] + 2],    # beyond the end
+        [attrs_sorted[0] - 2, attrs_sorted[0] - 1],      # before the start
+    ], np.float32)
+    lo, hi = check_against_oracle(attrs_sorted, ranges)
+    assert lo[2] == 0 and hi[2] == len(attrs_sorted) - 1      # full span
+    assert lo[4] > hi[4] and lo[5] > hi[5]                    # both empty
+    # the point row covers every duplicate of v, not just position i
+    assert np.array_equal(interval_positions(int(lo[1]), int(hi[1])),
+                          np.flatnonzero(attrs_sorted == v))
+
+
+@settings(max_examples=40, deadline=None)
+@given(attr_arrays, st.lists(range_pairs, min_size=1, max_size=8),
+       st.integers(min_value=1, max_value=8))
+def test_clip_interval_matches_per_shard_oracle(attrs_sorted, pairs, n_shards):
+    """Heredity at the resolve layer: clipping the *global* rank interval to
+    a contiguous shard covers exactly the shard-local oracle positions —
+    i.e. ``clip_interval`` equals a per-shard ``searchsorted``."""
+    n = len(attrs_sorted)
+    n_shards = min(n_shards, n)
+    per = n // n_shards
+    if per == 0:
+        return
+    ranges = np.asarray(pairs, np.float32)
+    lo, hi = rank_interval(attrs_sorted, ranges)
+    for s in range(n_shards):
+        rank0 = s * per
+        shard = attrs_sorted[rank0:rank0 + per]
+        slo, shi = clip_interval(lo, hi, rank0, per)
+        for q in range(len(ranges)):
+            want = oracle_positions(shard, ranges[q, 0], ranges[q, 1])
+            got = interval_positions(int(slo[q]), int(shi[q]))
+            assert np.array_equal(got, want), (s, q, got, want)
+
+
+# ------------------------------------------------- no-hypothesis fallback
+def test_rank_interval_oracle_seeded_sweep():
+    """Deterministic sweep of the same properties (runs even when hypothesis
+    is absent and the ``@given`` tests skip): duplicate-heavy sorted arrays,
+    random + degenerate ranges, host/jax lockstep, shard-clip heredity."""
+    rng = np.random.default_rng(0)
+    for trial in range(25):
+        n = int(rng.integers(1, 96))
+        attrs = np.sort(rng.integers(-30, 30, n).astype(np.float32))
+        pairs = rng.integers(-35, 35, (10, 2)).astype(np.float32)
+        s = np.sort(attrs)
+        ranges = np.concatenate([pairs, np.asarray([
+            [s[0], s[-1]],                       # full span
+            [s[n // 2], s[n // 2]],              # point / duplicates
+            [s[-1] + 1, s[-1] + 2],              # empty past the end
+        ], np.float32)])
+        lo, hi = check_against_oracle(attrs, ranges)
+        # traced resolve agrees with the host resolve bit-for-bit
+        lo_j, hi_j = rank_interval_jax(attrs, ranges)
+        assert np.array_equal(np.asarray(lo_j), lo)
+        assert np.array_equal(np.asarray(hi_j), hi)
+        # shard-clip heredity on a random shard count dividing n
+        for n_shards in (1, 2, 4):
+            per = n // n_shards
+            if per == 0:
+                continue
+            for shard in range(n_shards):
+                rank0 = shard * per
+                slo, shi = clip_interval(lo, hi, rank0, per)
+                sl = attrs[rank0:rank0 + per]
+                for q in range(len(ranges)):
+                    want = oracle_positions(sl, ranges[q, 0], ranges[q, 1])
+                    got = interval_positions(int(slo[q]), int(shi[q]))
+                    assert np.array_equal(got, want), (trial, shard, q)

@@ -68,8 +68,13 @@ def _degenerate_ranges(attrs, nq, seed):
 
 def test_strategy_parity_all_paths():
     """With ef >= n every strategy is exact, so plan=graph/auto/scan/beam and
-    the sharded DistributedRFANN (graph and per-shard-planned) must return
-    identical id sets — including degenerate ranges."""
+    the sharded DistributedRFANN (graph and per-shard-planned, async and
+    sequential) must return identical id sets — including degenerate ranges.
+    Cached re-runs of every single-index strategy must additionally be
+    **bit-identical** (ids and dists) to the uncached run that populated
+    the cache."""
+    from repro.search import SearchCache
+
     n, d, nq, k = 256, 16, 15, 8
     vecs, attrs = _corpus(n, d)
     idx = RNSGIndex.build(vecs, attrs, m=16, ef_spatial=16, ef_attribute=24)
@@ -78,10 +83,25 @@ def test_strategy_parity_all_paths():
     qv = make_vectors(nq, d, seed=7)
     ranges = _degenerate_ranges(attrs, nq, seed=11)
 
-    runs = {plan: idx.search(qv, ranges, k=k, ef=n, plan=plan).ids
-            for plan in ("graph", "auto", "scan", "beam")}
+    runs = {}
+    for plan in ("graph", "auto", "scan", "beam"):
+        uncached = idx.search(qv, ranges, k=k, ef=n, plan=plan)
+        runs[plan] = uncached.ids
+        # cached parity: the populating (miss) pass and the all-hit pass
+        # must both be bit-identical to the uncached run
+        idx.install_cache(SearchCache(1 << 20))
+        fill = idx.search(qv, ranges, k=k, ef=n, plan=plan)
+        hit = idx.search(qv, ranges, k=k, ef=n, plan=plan)
+        idx.install_cache(None)
+        assert hit.stats["cache_hits"] == nq
+        for res in (fill, hit):
+            assert np.array_equal(res.ids, uncached.ids), plan
+            assert np.array_equal(res.dists, uncached.dists), plan
     runs["dist_graph"] = dist.search(qv, ranges, k=k, ef=n, plan="graph")[0]
     runs["dist_auto"] = dist.search(qv, ranges, k=k, ef=n, plan="auto")[0]
+    dist.async_dispatch = False
+    runs["dist_auto_seq"] = dist.search(qv, ranges, k=k, ef=n,
+                                        plan="auto")[0]
 
     base = runs.pop("graph")
     for q in range(nq):
