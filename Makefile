@@ -2,7 +2,8 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test test-fast verify lint docs-check bench-quick bench-planner \
-        bench-substrate bench-mesh bench-cache bench-full quickstart
+        bench-substrate bench-mesh bench-cache bench-beam bench-beam-smoke \
+        bench-full quickstart
 
 # tier-1 verify (the command CI runs)
 test:
@@ -44,6 +45,15 @@ bench-mesh:
 # result cache + async local-path dispatch (results/bench/async_cache.csv)
 bench-cache:
 	$(PY) -m benchmarks.run --only async_cache
+
+# batched beam expansion sweep (results/bench/beam_width.csv + BENCH_beam.json)
+bench-beam:
+	$(PY) -m benchmarks.run --only beam_width
+
+# tiny-scale CI smoke of the same sweep (interpret-mode kernels on CPU):
+# catches kernel/beam regressions fast without meaningful wall numbers
+bench-beam-smoke:
+	$(PY) -m benchmarks.run --only beam_width --n 1024
 
 bench-full:
 	$(PY) -m benchmarks.run --full

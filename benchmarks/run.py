@@ -352,6 +352,103 @@ def bench_async_cache(n, d, nq, quick):
     return rows
 
 
+def bench_beam_width(n, d, nq, quick):
+    """Kernel-fused batched beam expansion: ``beam_width ∈ {1, 2, 4, 8}`` ×
+    narrow (1%) / wide (50%) selectivities, direct ``beam_search_batch``
+    dispatches (no planner noise).  ``beam_width=1`` is the legacy
+    single-expansion path — the PR-4-era baseline every other row is
+    compared against.
+
+    Emits results/bench/beam_width.csv plus the machine-readable
+    results/bench/BENCH_beam.json trajectory (QPS / recall / ndist / hops
+    per point, baseline QPS, and the best narrow-range speedup at equal
+    recall)."""
+    import json
+
+    import jax.numpy as jnp
+
+    from repro.core.beam import beam_search_batch
+    from repro.search import remap_ids, select_entry
+
+    vecs, attrs = dataset(n, d)
+    m = 24 if quick else 48
+    ix = RNSGIndex.build(vecs, attrs, m=m, ef_spatial=m, ef_attribute=2 * m)
+    sub = ix.substrate
+    k, ef = 10, 64
+    wls = {"narrow_1pct": 0.01, "wide_50pct": 0.50}
+    widths = (1, 2, 4, 8)
+    rows = []
+    for wname, frac in wls.items():
+        from repro.data.ann import selectivity_ranges
+        ranges = selectivity_ranges(attrs, nq, frac, seed=17)
+        qv = dataset(nq, d, seed=91)[0]
+        gt = gt_for(vecs, attrs, qv, ranges, k)
+        lo, hi = ix.rank_range(ranges)
+        qj, loj, hij = jnp.asarray(qv), jnp.asarray(lo), jnp.asarray(hi)
+        entry = select_entry(sub._rmq, sub._dist_c, loj, hij, ix.g.n)
+        args = (sub._vecs, sub._nbrs, qj, loj, hij, entry)
+        ids_bw4 = None
+        for bw in widths:
+            np.asarray(beam_search_batch(*args, k=k, ef=ef,
+                                         beam_width=bw)[0])          # warm
+            best = np.inf
+            for _ in range(3 if quick else 5):
+                t0 = time.perf_counter()
+                ids, _, st = beam_search_batch(*args, k=k, ef=ef,
+                                               beam_width=bw)
+                ids = np.asarray(ids)
+                best = min(best, time.perf_counter() - t0)
+            if bw == 4:
+                ids_bw4 = ids
+            rec = recall_at_k(remap_ids(ix.g.order, ids), gt)
+            rows.append(dict(workload=wname, beam_width=bw, ef=ef,
+                             qps=round(nq / best, 1),
+                             recall=round(rec, 4),
+                             ndist=round(float(np.asarray(st["ndist"]).mean()), 1),
+                             hops=round(float(np.asarray(st["hops"]).mean()), 1)))
+        # kernel smoke: the blocked gather/top-k path (interpret mode on
+        # CPU, Mosaic on TPU) must reproduce the jnp path exactly — this is
+        # what makes the CI bench-beam-smoke step kernel-sensitive
+        nk = min(nq, 50)
+        ids_k = np.asarray(beam_search_batch(
+            args[0], args[1], args[2][:nk], args[3][:nk], args[4][:nk],
+            args[5][:nk], k=k, ef=ef, beam_width=4, use_kernel=True)[0])
+        if not np.array_equal(ids_k, ids_bw4[:nk]):
+            raise AssertionError(
+                f"{wname}: kernel-path beam (beam_width=4) diverged from "
+                f"the jnp path")
+    emit("beam_width", rows, quiet=True)
+    nb, best_narrow = _beam_width_best(rows)
+    summary = {
+        "n": n, "d": d, "nq": nq, "k": k, "ef": ef,
+        "widths": list(widths),
+        "baseline": {w: next(r for r in rows if r["workload"] == w
+                             and r["beam_width"] == 1) for w in wls},
+        "rows": rows,
+        "narrow_speedup_at_equal_recall": round(
+            best_narrow["qps"] / max(nb["qps"], 1e-9), 3) if best_narrow
+        else None,
+        "narrow_best_beam_width": best_narrow["beam_width"] if best_narrow
+        else None,
+    }
+    from benchmarks.common import RESULTS
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    with open(RESULTS / "BENCH_beam.json", "w") as f:
+        json.dump(summary, f, indent=2, sort_keys=True)
+    return rows
+
+
+def _beam_width_best(rows, tol: float = 0.001):
+    """(baseline bw=1 narrow row, best narrow row at >=baseline-tol recall
+    or None) — the single eligibility rule behind both BENCH_beam.json and
+    the console summary line."""
+    nb = next(r for r in rows if r["workload"] == "narrow_1pct"
+              and r["beam_width"] == 1)
+    eligible = [r for r in rows if r["workload"] == "narrow_1pct"
+                and r["beam_width"] > 1 and r["recall"] >= nb["recall"] - tol]
+    return nb, max(eligible, key=lambda r: r["qps"], default=None)
+
+
 def bench_kernels(quick):
     """Kernel microbench (interpret mode on CPU: correctness + derived
     roofline terms; wall numbers are *not* TPU times)."""
@@ -393,7 +490,7 @@ def bench_kernels(quick):
 
 ALL = ["qps_recall", "construction_time", "index_size", "param_sensitivity",
        "vary_k", "scalability", "planner", "search_substrate", "mesh_auto",
-       "async_cache", "kernels"]
+       "async_cache", "beam_width", "kernels"]
 
 
 def main() -> None:
@@ -493,6 +590,22 @@ def main() -> None:
               f"cache_repeat_speedup={cg['speedup']}x"
               f"_identical={cg['identical']}"
               f"_async_vs_seq={ag['speedup']}x")
+    if "beam_width" in only:
+        rows = bench_beam_width(n, d, nq, quick)
+        print("workload,beam_width,ef,qps,recall,ndist,hops")
+        for r in rows:
+            print(f"{r['workload']},{r['beam_width']},{r['ef']},{r['qps']},"
+                  f"{r['recall']},{r['ndist']},{r['hops']}")
+        nb, bb = _beam_width_best(rows)
+        if bb is None:
+            print(f"beam_width,{1e6/nb['qps']:.1f},"
+                  f"no_width_matches_baseline_recall={nb['recall']}")
+        else:
+            print(f"beam_width,{1e6/bb['qps']:.1f},"
+                  f"narrow_speedup_bw{bb['beam_width']}="
+                  f"{bb['qps']/max(nb['qps'],1e-9):.2f}x"
+                  f"_recall={bb['recall']}vs{nb['recall']}"
+                  f"_hops={bb['hops']}vs{nb['hops']}")
     if "kernels" in only:
         rows = bench_kernels(quick)
         for r in rows:

@@ -4,8 +4,23 @@ The search never materializes the induced subgraph: the range filter is an
 id-interval mask applied to neighbor expansions (ids are attribute ranks), and
 Theorem 4.7 (heredity) guarantees this equals searching the induced RNSG.
 
-Fixed shapes throughout: candidate pool = sorted (ef,) arrays, visited set =
-(n,) bitmask, one `while_loop` per query, `vmap` over the query batch.
+Two hot paths share one ``while_loop``-per-query / ``vmap``-over-batch shape:
+
+* ``beam_width=1`` — the legacy single-node expansion: candidate pool =
+  (ef,) arrays re-argsorted each hop, visited set = (n+1,) bitmask.  Kept
+  verbatim as the A/B oracle (every parity test doubles as a correctness
+  check of the batched path).
+* ``beam_width=B>1`` — kernel-fused batched expansion: each iteration pops
+  the best ``B`` unexpanded candidates, scores all ``B*m`` neighbors in one
+  fused gather+score call, folds them into the sorted pool with a bounded
+  O(ef+B*m) merge (sort only the fresh distances, then a stable
+  two-pointer merge via ``searchsorted`` — never a full pool argsort), and
+  tracks visited nodes in a **fixed-size lossy hash table** (2-probe,
+  open-addressed, sized by ``ef*m`` — independent of the corpus size n, so
+  a vmapped batch carries (Q, H) state instead of (Q, n+1)).  Hash
+  collisions only ever cause false *negatives*: a forgotten node is
+  re-scored, and the merge provably drops it (the pool's worst distance is
+  monotonically non-increasing once full), so results stay exact.
 """
 from __future__ import annotations
 
@@ -17,13 +32,88 @@ import jax.numpy as jnp
 
 INF = jnp.inf
 
+# Knuth / Murmur-style odd multipliers for the two probe hashes.
+_HASH1 = 2654435761
+_HASH2 = 2246822519
+
+
+def visited_table_size(ef: int, m: int) -> int:
+    """Slots in the per-query lossy visited table (power of two).
+
+    A search scores ~ef·m̄ distinct nodes (the cost model's ``ndist_per_ef``
+    prior), but most re-discoveries are already caught by the pool-
+    membership dedup, so ~half a slot per potential insertion keeps the
+    collision — i.e. re-score — rate in the low percent while the carried
+    (Q, H) loop state stays small (the table is copied once per iteration
+    on backends that can't scatter in place, so oversizing it costs more
+    than the re-scores it prevents).  Deliberately **independent of n**:
+    this is the whole point of replacing the (n+1,) bitmask."""
+    target = max(int(ef), 1) * max(int(m), 4) // 2
+    size = 1 << (target - 1).bit_length()
+    return int(min(max(size, 256), 1 << 13))
+
+
+def _hash_slots(ids: jax.Array, size: int) -> Tuple[jax.Array, jax.Array]:
+    """Two independent probe slots in [0, size) for each id (size pow2)."""
+    bits = int(size).bit_length() - 1
+    u = ids.astype(jnp.uint32)
+    h1 = ((u * jnp.uint32(_HASH1)) >> (32 - bits)).astype(jnp.int32)
+    h2 = ((u * jnp.uint32(_HASH2)) >> (32 - bits)).astype(jnp.int32)
+    return h1, h2
+
+
+def _table_insert(table: jax.Array, ids: jax.Array, size: int) -> jax.Array:
+    """Insert ids (−1 = skip) into the 2-probe table ((size+1,), slot
+    ``size`` is the write sink).  First probe wins if its slot is empty or
+    already holds the id; otherwise the second probe is overwritten —
+    lossy by design, the evicted id is merely re-scored if met again."""
+    valid = ids >= 0
+    h1, h2 = _hash_slots(ids, size)
+    cur = table[h1]
+    slot = jnp.where((cur == -1) | (cur == ids), h1, h2)
+    slot = jnp.where(valid, slot, size)
+    return table.at[slot].set(jnp.where(valid, ids, -1))
+
+
+def _table_lookup(table: jax.Array, ids: jax.Array, size: int) -> jax.Array:
+    """Membership test: exact-positive (the slot stores the id itself, so a
+    hit is never spurious), lossy-negative (an evicted id reads as new)."""
+    h1, h2 = _hash_slots(ids, size)
+    return (table[h1] == ids) | (table[h2] == ids)
+
+
+def _merge_sorted(pool_d, pool_i, pool_e, fresh_d, fresh_i, fresh_e, ef: int):
+    """Stable bounded merge: two distance-sorted candidate lists -> the best
+    ``ef``.  The batched path's replacement for the legacy full argsort
+    over the (ef+m) pool: one ``searchsorted`` places every pool entry in
+    the merged order (pool entries win distance ties, matching the stable
+    argsort over ``[pool, fresh]`` the legacy path performs), a second
+    inverts that placement so each output lane *gathers* its element —
+    scatter-free on purpose, vmapped scatters serialize on CPU/XLA while
+    gathers vectorize."""
+    f = fresh_d.shape[0]
+    # the two searchsorted calls below are a sorted-list *merge*, not rank
+    # resolution — exempted from the single-source-resolve guard
+    pos_p = jnp.arange(ef) + jnp.searchsorted(                # sorted-merge
+        fresh_d, pool_d, side="left")
+    j = jnp.arange(ef)
+    i = jnp.searchsorted(pos_p, j, side="left")               # sorted-merge
+    ic = jnp.minimum(i, ef - 1)
+    is_pool = pos_p[ic] == j
+    jf = jnp.clip(j - i, 0, f - 1)                # fresh index for non-pool lanes
+    md = jnp.where(is_pool, pool_d[ic], fresh_d[jf])
+    mi = jnp.where(is_pool, pool_i[ic], fresh_i[jf])
+    me = jnp.where(is_pool, pool_e[ic], fresh_e[jf])
+    return md, mi, me
+
 
 @partial(jax.jit, static_argnames=("k", "ef", "max_steps", "use_kernel",
-                                   "early_stop"))
+                                   "early_stop", "beam_width"))
 def beam_search_batch(vecs: jax.Array, nbrs: jax.Array, qv: jax.Array,
                       lo: jax.Array, hi: jax.Array, entry: jax.Array,
                       *, k: int = 10, ef: int = 64, max_steps: int = 0,
-                      use_kernel: bool = False, early_stop: bool = True):
+                      use_kernel: bool = False, early_stop: bool = True,
+                      beam_width: int = 1):
     """vecs:(n,d) f32; nbrs:(n,m) i32; qv:(Q,d); lo/hi/entry:(Q,) rank ids.
     Returns (ids:(Q,k) i32 rank ids (-1 pad), dists:(Q,k), stats dict).
 
@@ -33,9 +123,21 @@ def beam_search_batch(vecs: jax.Array, nbrs: jax.Array, qv: jax.Array,
     legacy condition (kept under ``early_stop=False`` for A/B benchmarks)
     burns the full ``steps_cap``; the results are identical either way —
     the extra iterations re-expand the best already-expanded node, whose
-    neighbors are all visited."""
+    neighbors are all visited.
+
+    ``beam_width=B>1`` expands the best B unexpanded candidates per
+    iteration (batched-expansion path, see module docstring; widths beyond
+    ``ef`` are clamped — the pool only ever holds ``ef`` candidates);
+    ``hops`` in the stats then counts *iterations* (≈ node expansions / B),
+    while ``ndist`` stays the number of scored neighbors and is comparable
+    across widths."""
     n, m = nbrs.shape
     steps_cap = max_steps or 8 * ef + 64
+
+    if beam_width > 1:
+        return _beam_batched(vecs, nbrs, qv, lo, hi, entry, k=k, ef=ef,
+                             steps_cap=steps_cap, use_kernel=use_kernel,
+                             early_stop=early_stop, beam_width=beam_width)
 
     if use_kernel:
         from repro.kernels.ops import gather_dist as _gd
@@ -99,6 +201,124 @@ def beam_search_batch(vecs: jax.Array, nbrs: jax.Array, qv: jax.Array,
         out_ids = jnp.where(jnp.isfinite(cand_d[:k]), cand_ids[:k], -1)
         out_d = cand_d[:k]
         return out_ids, out_d, steps, ndist
+
+    ids, dists, steps, ndist = jax.vmap(one_query)(qv, lo, hi, entry)
+    return ids, dists, {"hops": steps, "ndist": ndist}
+
+
+# ======================================================================
+# Batched multi-node expansion (beam_width > 1)
+# ======================================================================
+def _beam_batched(vecs, nbrs, qv, lo, hi, entry, *, k: int, ef: int,
+                  steps_cap: int, use_kernel: bool, early_stop: bool,
+                  beam_width: int):
+    n, m = nbrs.shape
+    # the pool holds ef candidates, so at most ef can be unexpanded — a
+    # wider request (e.g. --beam-width 128 at the default ef=64) is clamped
+    # rather than rejected
+    B = min(int(beam_width), ef)
+    F = B * m                           # fresh neighbors per iteration
+    H = visited_table_size(ef, m)
+    # only the best min(F, ef) fresh candidates can survive the bounded
+    # merge, so the fused kernel keeps a running top-fm in VMEM and the
+    # full (F,) distance vector never leaves it
+    fm = min(F, ef)
+
+    if use_kernel:
+        from repro.kernels.ops import gather_dist as _gd
+        from repro.kernels.ops import gather_topk as _gtk
+        kernel_topk = fm <= 128         # running top-k lives in one lane row
+    else:
+        _gd = _gtk = None
+        kernel_topk = False
+
+    def fresh_sorted(q, ids_f, valid):
+        """(F,) masked neighbor ids -> distance-sorted (fm,) fresh list
+        (ids -1 / dist inf beyond the valid entries)."""
+        ids_m = jnp.where(valid, ids_f, -1)
+        if kernel_topk:
+            fi, fd = _gtk(vecs, ids_m, q, k=fm)
+            return fd, fi
+        if _gd is not None:
+            d = jnp.where(valid, _gd(vecs, ids_f, q), INF)
+        else:
+            nv = vecs[jnp.maximum(ids_f, 0)]
+            diff = nv - q[None, :]
+            d = jnp.where(valid, jnp.sum(diff * diff, axis=-1), INF)
+        o = jnp.argsort(d)[:fm]         # sort F fresh values, never the pool
+        return d[o], ids_m[o]
+
+    def one_query(q, L, R, e0):
+        empty = L > R
+        e0 = jnp.atleast_1d(e0)[:ef]
+        ev = (e0 >= 0) & ~empty
+        e0c = jnp.clip(e0, 0, n - 1)
+        ne = e0.shape[0]
+        d0 = jnp.sum(jnp.square(vecs[e0c] - q[None, :]), axis=-1)
+        d0 = jnp.where(ev, d0, INF)
+        cand_ids = jnp.full((ef,), -1, jnp.int32).at[:ne].set(
+            e0c.astype(jnp.int32))
+        cand_d = jnp.full((ef,), INF).at[:ne].set(d0)
+        expanded = jnp.zeros((ef,), bool).at[:ne].set(~ev)
+        o = jnp.argsort(cand_d)         # sort once; the merge keeps it sorted
+        cand_d, cand_ids, expanded = cand_d[o], cand_ids[o], expanded[o]
+        table = jnp.full((H + 1,), -1, jnp.int32)
+        table = _table_insert(table, jnp.where(ev, e0c.astype(jnp.int32), -1),
+                              H)
+
+        def cond(st):
+            cand_d, expanded, _, _, steps, _ = st
+            unexp = jnp.where(~expanded, cand_d, INF)
+            best = jnp.min(unexp)
+            worst = jnp.max(jnp.where(jnp.isfinite(cand_d), cand_d, -INF))
+            worst = jnp.where(jnp.any(~jnp.isfinite(cand_d)), INF, worst)
+            go = (best <= worst) & (steps < steps_cap)
+            if early_stop:
+                go &= jnp.isfinite(best)
+            return go
+
+        def body(st):
+            cand_d, expanded, cand_ids, table, steps, ndist = st
+            # best B unexpanded: the pool is sorted, so they are the first
+            # B selectable lanes
+            lane = jnp.where(~expanded & jnp.isfinite(cand_d),
+                             jnp.arange(ef), ef)
+            lanes = jnp.sort(lane)[:B]                       # (B,)
+            take = lanes < ef
+            node = jnp.where(take, cand_ids[jnp.minimum(lanes, ef - 1)], -1)
+            expanded = expanded | jnp.any(
+                (jnp.arange(ef)[None, :] == lanes[:, None]) & take[:, None],
+                axis=0)
+            nb = nbrs[jnp.maximum(node, 0)]                  # (B, m)
+            ids_f = nb.reshape(F).astype(jnp.int32)
+            valid = ((ids_f >= 0) & (ids_f >= L) & (ids_f <= R)
+                     & jnp.repeat(node >= 0, m))
+            # intra-hop dedup: two expanded nodes may share a neighbor —
+            # keep the first occurrence (the legacy path never sees this:
+            # its single hop has unique neighbors)
+            eq = ids_f[:, None] == ids_f[None, :]
+            before = jnp.arange(F)[None, :] < jnp.arange(F)[:, None]
+            valid &= ~jnp.any(eq & before & valid[None, :], axis=1)
+            # pool-membership dedup: anything currently held in the pool is
+            # by definition already scored (covers hash evictions of live
+            # candidates — the exactness keystone, see module docstring)
+            valid &= ~jnp.any(ids_f[:, None] == cand_ids[None, :], axis=1)
+            # lossy visited set: false negatives fall through to a re-score
+            valid &= ~_table_lookup(table, ids_f, H)
+            table = _table_insert(table, jnp.where(valid, ids_f, -1), H)
+            fd, fi = fresh_sorted(q, ids_f, valid)
+            fe = fi < 0                                      # pads: never expand
+            cand_d, cand_ids, expanded = _merge_sorted(
+                cand_d, cand_ids, expanded, fd, fi, fe, ef)
+            return (cand_d, expanded, cand_ids, table,
+                    steps + 1, ndist + jnp.sum(valid))
+
+        st = (cand_d, expanded, cand_ids, table,
+              jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+        cand_d, _, cand_ids, _, steps, ndist = jax.lax.while_loop(
+            cond, body, st)
+        out_ids = jnp.where(jnp.isfinite(cand_d[:k]), cand_ids[:k], -1)
+        return out_ids, cand_d[:k], steps, ndist
 
     ids, dists, steps, ndist = jax.vmap(one_query)(qv, lo, hi, entry)
     return ids, dists, {"hops": steps, "ndist": ndist}

@@ -61,21 +61,25 @@ class RNSGIndex:
 
     def search(self, queries: np.ndarray, attr_ranges: np.ndarray, *,
                k: int = 10, ef: int = 64, use_kernel: bool = False,
-               plan: str = "graph"):
+               plan: str = "graph", beam_width: int = 1):
         """queries:(Q,d); attr_ranges:(Q,2) attribute values (inclusive).
         plan: "graph" (pure beam search) | "auto" (cost-based scan/beam
         routing) | "scan" / "beam" (forced strategy).
+        beam_width: batched-expansion width for beam dispatches (1 = the
+        legacy single-node hop; B>1 fuses B node expansions per hop).
         Returns a ``SearchResult`` (tuple-compatible: ids, dists, stats)."""
         lo, hi = self.rank_range(attr_ranges)
         return self.search_ranks(queries, lo, hi, k=k, ef=ef,
-                                 use_kernel=use_kernel, plan=plan)
+                                 use_kernel=use_kernel, plan=plan,
+                                 beam_width=beam_width)
 
     def search_ranks(self, queries, lo, hi, *, k=10, ef=64, use_kernel=False,
-                     plan="graph"):
+                     plan="graph", beam_width=1):
         from repro.search import SearchRequest
         return self.substrate.run(SearchRequest(
             queries=np.asarray(queries, np.float32), lo=lo, hi=hi,
-            k=k, ef=ef, strategy=plan, use_kernel=use_kernel))
+            k=k, ef=ef, strategy=plan, use_kernel=use_kernel,
+            beam_width=beam_width))
 
     # ------------------------------------------------------------------
     @property

@@ -1,12 +1,28 @@
-"""Pallas TPU kernel: fused neighbor gather + squared-L2 distance.
+"""Pallas TPU kernels: fused neighbor gather + squared-L2 scoring, blocked.
 
 The beam-search expansion hot path: gather M arbitrary rows of X (HBM) and
-score them against one query.  The neighbor ids are *scalar-prefetched* so the
-BlockSpec index_map can steer each grid step's DMA to the right row of X —
-the TPU-native replacement for the CPU pointer-chase.
+score them against one query.  The neighbor ids are *scalar-prefetched* so
+the BlockSpec index_map can steer each grid step's DMA to the right row of X
+— the TPU-native replacement for the CPU pointer-chase.
 
-Grid = (M,); per step: one (1,d) row of X lands in VMEM, the query is resident
-(full (1,d) block), the VPU computes Σ(x−q)² into out[i].
+Both kernels process the id vector in **row tiles** of T ids: the grid is
+``(num_tiles, T)``, the innermost dimension walks the tile (one steered
+(1, d) row DMA per step, which Mosaic pipelines across steps), and each
+row's Σ(x−q)² lands in a lane of a (1, T) VMEM accumulator.  Work leaves
+VMEM once per *tile*, not once per row:
+
+* ``gather_dist_pallas`` — writes the accumulated (1, T) distance block to
+  the output on the tile's last step (full (M,) distances, the legacy
+  contract: negative/out-of-range ids are clipped, callers mask).
+* ``gather_topk_pallas`` — instead folds the masked tile (ids < 0 → +inf)
+  into a per-query **running top-k** held in (1, T)-lane output blocks
+  (dists + ids), mirroring the ``range_scan`` running-top-k trick: a
+  k-step select-min over the 2-block lane union (vector argmin + one-hot
+  updates, so it lowers on both Mosaic and interpret backends).  The full
+  (M,) distance vector never round-trips to HBM — only the merge
+  survivors the batched beam's bounded frontier merge actually consumes.
+  Ties break toward the lower input index, matching a stable
+  ``jnp.argsort`` over the materialized distances.
 """
 from __future__ import annotations
 
@@ -18,9 +34,26 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(ids_ref, x_ref, q_ref, o_ref):
+def _tile(m: int, cap: int = 128) -> int:
+    """Row-tile size for an id vector of length m (pow2, ≤ cap)."""
+    return int(min(cap, 1 << max(int(m) - 1, 0).bit_length() if m > 1 else 1))
+
+
+def _dist_kernel(ids_ref, x_ref, q_ref, o_ref, acc_ref, *, tile: int):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
     diff = x_ref[...].astype(jnp.float32) - q_ref[...].astype(jnp.float32)
-    o_ref[...] = jnp.sum(diff * diff, axis=-1, keepdims=True)
+    d2 = jnp.sum(diff * diff)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, tile), 1) == t
+    acc_ref[...] = jnp.where(lane, d2, acc_ref[...])
+
+    @pl.when(t == tile - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -30,20 +63,114 @@ def gather_dist_pallas(x: jax.Array, ids: jax.Array, q: jax.Array, *,
     Out-of-range/negative ids are clipped (callers mask separately)."""
     n, d = x.shape
     m = ids.shape[0]
+    tile = _tile(m)
+    nt = -(-m // tile)
     ids_c = jnp.clip(ids, 0, n - 1).astype(jnp.int32)
+    ids_c = jnp.pad(ids_c, (0, nt * tile - m))      # tail rows: row 0, sliced off
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(m,),
+        grid=(nt, tile),
         in_specs=[
-            pl.BlockSpec((1, d), lambda i, ids_ref: (ids_ref[i], 0)),
-            pl.BlockSpec((1, d), lambda i, ids_ref: (0, 0)),
+            pl.BlockSpec((1, d), lambda i, t, ids_ref: (ids_ref[i * tile + t], 0)),
+            pl.BlockSpec((1, d), lambda i, t, ids_ref: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1), lambda i, ids_ref: (i, 0)),
+        out_specs=pl.BlockSpec((1, tile), lambda i, t, ids_ref: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((1, tile), jnp.float32)],
     )
     out = pl.pallas_call(
-        _kernel,
+        functools.partial(_dist_kernel, tile=tile),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((nt, tile), jnp.float32),
         interpret=interpret,
     )(ids_c, x, q[None, :])
-    return out[:, 0]
+    return out.reshape(nt * tile)[:m]
+
+
+def _topk_kernel(ids_ref, x_ref, q_ref, idm_ref, od_ref, oi_ref, acc_ref, *,
+                 tile: int, k: int):
+    i = pl.program_id(0)
+    t = pl.program_id(1)
+
+    @pl.when((i == 0) & (t == 0))
+    def _init_topk():
+        od_ref[...] = jnp.full_like(od_ref, jnp.inf)
+        oi_ref[...] = jnp.full_like(oi_ref, -1)
+
+    @pl.when(t == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    diff = x_ref[...].astype(jnp.float32) - q_ref[...].astype(jnp.float32)
+    d2 = jnp.sum(diff * diff)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, tile), 1) == t
+    acc_ref[...] = jnp.where(lane, d2, acc_ref[...])
+
+    @pl.when(t == tile - 1)
+    def _merge():
+        idv = idm_ref[...]                                   # (1, tile) i32
+        d_blk = jnp.where(idv >= 0, acc_ref[...], jnp.inf)
+        # union of the running top-k and this tile; tiles arrive in
+        # ascending-id-index order and the running half comes first, so the
+        # first-occurrence argmin breaks distance ties toward the lower
+        # input index (matching a stable argsort of the full vector)
+        cd = jnp.concatenate([od_ref[...], d_blk], axis=1)   # (1, 2*tile)
+        ci = jnp.concatenate([oi_ref[...], idv], axis=1)
+        lane_u = jax.lax.broadcasted_iota(jnp.int32, (1, 2 * tile), 1)
+        lane_o = jax.lax.broadcasted_iota(jnp.int32, (1, tile), 1)
+        new_d = jnp.full((1, tile), jnp.inf, jnp.float32)
+        new_i = jnp.full((1, tile), -1, jnp.int32)
+        for s in range(k):            # static unroll: k-step select-min
+            mv = jnp.min(cd)
+            sel = lane_u == jnp.argmin(cd).astype(jnp.int32)
+            idn = jnp.sum(jnp.where(sel, ci, 0)).astype(jnp.int32)
+            idn = jnp.where(jnp.isfinite(mv), idn, -1)
+            new_d = jnp.where(lane_o == s, mv, new_d)
+            new_i = jnp.where(lane_o == s, idn, new_i)
+            cd = jnp.where(sel, jnp.inf, cd)
+        od_ref[...] = new_d
+        oi_ref[...] = new_i
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def gather_topk_pallas(x: jax.Array, ids: jax.Array, q: jax.Array, *,
+                       k: int, interpret: bool = False):
+    """x:(N,d); ids:(M,) int32, **negative = masked**; q:(d,).
+    Returns (ids:(k,) i32 sorted by ascending distance (-1 pad),
+    dists:(k,) f32, +inf pad) — the top-k over the *unmasked* ids only.
+
+    Requires ``k ≤ min(next_pow2(M), 128)`` (the running top-k lives in one
+    lane row) and raises ``ValueError`` beyond it — callers needing a
+    larger k must themselves use ``gather_dist`` + a host sort, as the
+    batched beam's ``kernel_topk`` gate in ``core/beam.py`` does."""
+    n, d = x.shape
+    m = ids.shape[0]
+    tile = _tile(max(m, k))             # lane row must hold k survivors
+    if k > tile:
+        raise ValueError(f"gather_topk: k={k} exceeds the {tile}-lane "
+                         f"running top-k row (use gather_dist + sort)")
+    nt = -(-m // tile)
+    pad = nt * tile - m
+    ids_m = jnp.pad(ids.astype(jnp.int32), (0, pad), constant_values=-1)
+    ids_c = jnp.clip(ids_m, 0, n - 1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nt, tile),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, t, ids_ref: (ids_ref[i * tile + t], 0)),
+            pl.BlockSpec((1, d), lambda i, t, ids_ref: (0, 0)),
+            pl.BlockSpec((1, tile), lambda i, t, ids_ref: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile), lambda i, t, ids_ref: (0, 0)),
+            pl.BlockSpec((1, tile), lambda i, t, ids_ref: (0, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, tile), jnp.float32)],
+    )
+    od, oi = pl.pallas_call(
+        functools.partial(_topk_kernel, tile=tile, k=k),
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct((1, tile), jnp.float32),
+                   jax.ShapeDtypeStruct((1, tile), jnp.int32)),
+        interpret=interpret,
+    )(ids_c, x, q[None, :], ids_m[None, :])
+    return oi[0, :k], od[0, :k]

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import jax
 
-from repro.kernels.gather_dist import gather_dist_pallas
+from repro.kernels.gather_dist import gather_dist_pallas, gather_topk_pallas
 from repro.kernels.l2dist import l2dist_pallas
 from repro.kernels.range_scan import range_scan_pallas
 
@@ -25,6 +25,12 @@ def l2dist(q: jax.Array, x: jax.Array, **kw) -> jax.Array:
 def gather_dist(x: jax.Array, ids: jax.Array, q: jax.Array) -> jax.Array:
     """Fused gather+score of M neighbor rows against one query."""
     return gather_dist_pallas(x, ids, q, interpret=_interpret())
+
+
+def gather_topk(x: jax.Array, ids: jax.Array, q: jax.Array, *, k: int):
+    """Fused gather+score+top-k: the batched beam's frontier feed.  Negative
+    ids are masked; only the k merge survivors leave the kernel."""
+    return gather_topk_pallas(x, ids, q, k=k, interpret=_interpret())
 
 
 def range_scan(x: jax.Array, starts: jax.Array, lens: jax.Array,

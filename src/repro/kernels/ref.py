@@ -21,6 +21,20 @@ def gather_dist_ref(x: jax.Array, ids: jax.Array, q: jax.Array) -> jax.Array:
     return jnp.sum(diff * diff, axis=-1)
 
 
+def gather_topk_ref(x: jax.Array, ids: jax.Array, q: jax.Array, *, k: int):
+    """Oracle for ``gather_topk_pallas``: negative ids are masked (never
+    enter the top-k); returns (ids:(k,) i32 ascending-distance (-1 pad),
+    dists:(k,) f32 (+inf pad)).  ``lax.top_k`` breaks distance ties toward
+    the lower input index — the kernel's select-min matches."""
+    d = jnp.where(ids >= 0, gather_dist_ref(x, ids, q), jnp.inf)
+    d = jnp.pad(d, (0, max(k - d.shape[0], 0)), constant_values=jnp.inf)
+    idp = jnp.pad(ids.astype(jnp.int32), (0, max(k - ids.shape[0], 0)),
+                  constant_values=-1)
+    neg, sel = jax.lax.top_k(-d, k)
+    out_ids = jnp.where(jnp.isfinite(neg), idp[sel], -1)
+    return out_ids, -neg
+
+
 def range_scan_ref(x: jax.Array, starts: jax.Array, lens: jax.Array,
                    q: jax.Array, *, bucket: int, k: int, tb: int = 128,
                    n_valid: int = 0):

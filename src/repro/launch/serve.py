@@ -36,10 +36,12 @@ def serve_rfann(args):
     idx = RNSGIndex.build(vecs, attrs, m=args.m, ef_spatial=32, ef_attribute=48)
     print(f"[serve] {idx.stats()}")
     warm = idx.search(qv[:8], ranges[:8], k=args.k, ef=args.ef,
-                      plan=args.plan)                       # warm the jit
+                      plan=args.plan,
+                      beam_width=args.beam_width)           # warm the jit
     assert warm.ids.shape == (8, args.k)                    # SearchResult
 
     engine = RFANNEngine(idx, k=args.k, ef=args.ef, plan=args.plan,
+                         beam_width=args.beam_width,
                          max_batch=args.max_batch, max_wait_ms=2.0,
                          calibration_path=args.calibration or None,
                          cache_bytes=args.cache_mb << 20)
@@ -106,6 +108,9 @@ def main(argv=None):
     ap.add_argument("--max-batch", type=int, default=64)
     ap.add_argument("--plan", choices=["auto", "graph", "scan", "beam"],
                     default="auto", help="query-planner strategy routing")
+    ap.add_argument("--beam-width", type=int, default=1,
+                    help="batched beam expansion width (1 = legacy "
+                         "single-node hops; try 4 for throughput)")
     ap.add_argument("--calibration", default="",
                     help="JSON path: load cost-model calibration at startup, "
                          "persist it on shutdown")

@@ -10,14 +10,18 @@ Two quantities are calibrated online:
 
 * ``ndist_per_ef`` — predicted beam distance evaluations per unit of ``ef``,
   an EMA over the ``ndist`` stats every beam batch already returns (prior:
-  the graph's mean out-degree, i.e. ndist ≈ ef · m̄).
+  the graph's mean out-degree, i.e. ndist ≈ ef · m̄).  Calibrated **per
+  beam width**: the batched-expansion path (``beam_width > 1``) explores a
+  slightly different frontier (speculative multi-node hops plus lossy-
+  visited re-scores), so each width keeps its own EMA and unseen widths
+  fall back to the nearest calibrated one.
 * ``scan_unit`` — refined from observed per-unit wall times of executed scan
   and beam partitions (warm calls only; the executor skips the first call of
   each jit signature so compile time never poisons the estimate).
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Dict, Optional
 
 
 class CostModel:
@@ -25,27 +29,55 @@ class CostModel:
                  decay: float = 0.9):
         self.scan_unit = float(scan_unit)
         self.beam_unit = 1.0
-        self.ndist_per_ef = float(max(mean_degree, 1.0))
+        self._ndist_per_ef: Dict[int, float] = {1: float(max(mean_degree,
+                                                             1.0))}
+        self._beam_obs_w: Dict[int, int] = {}   # observations per beam width
         self.decay = float(decay)
         self.beam_obs = 0
         self._scan_us: Optional[float] = None    # wall us per scanned row
         self._beam_us: Optional[float] = None    # wall us per beam distance
 
+    # back-compat scalar view (width-1 regime) -----------------------------
+    @property
+    def ndist_per_ef(self) -> float:
+        return self._ndist_per_ef[1]
+
+    @ndist_per_ef.setter
+    def ndist_per_ef(self, value: float) -> None:
+        self._ndist_per_ef[1] = float(value)
+
+    def ndist_per_ef_at(self, beam_width: int = 1) -> float:
+        """Per-width EMA; an uncalibrated width borrows the nearest
+        calibrated width's value (re-score overhead varies smoothly)."""
+        w = max(int(beam_width), 1)
+        if w in self._ndist_per_ef:
+            return self._ndist_per_ef[w]
+        nearest = min(self._ndist_per_ef, key=lambda o: abs(o - w))
+        return self._ndist_per_ef[nearest]
+
     # ------------------------------------------------------------- predict
-    def predict_beam_units(self, ef: int) -> float:
-        return self.beam_unit * self.ndist_per_ef * float(ef)
+    def predict_beam_units(self, ef: int, beam_width: int = 1) -> float:
+        return self.beam_unit * self.ndist_per_ef_at(beam_width) * float(ef)
 
     def predict_scan_units(self, window_rows: int) -> float:
         return self.scan_unit * float(window_rows)
 
     # ----------------------------------------------------------- calibrate
-    def update_beam(self, ndist_mean: float, ef: int) -> None:
-        """Feed observed per-query distance evaluations from a beam batch."""
+    def update_beam(self, ndist_mean: float, ef: int,
+                    beam_width: int = 1) -> None:
+        """Feed observed per-query distance evaluations from a beam batch.
+        The first observation **of this width** replaces its seed (the
+        construction prior, or a value borrowed from the nearest calibrated
+        width) — measured data for the exact width beats any transfer;
+        later observations decay-blend."""
         if ef <= 0 or not (ndist_mean >= 0):
             return
+        w = max(int(beam_width), 1)
         r = float(ndist_mean) / float(ef)
-        a = self.decay if self.beam_obs else 0.0   # first obs replaces prior
-        self.ndist_per_ef = a * self.ndist_per_ef + (1.0 - a) * r
+        w_obs = self._beam_obs_w.get(w, 0)
+        a = self.decay if w_obs else 0.0
+        self._ndist_per_ef[w] = a * self.ndist_per_ef_at(w) + (1.0 - a) * r
+        self._beam_obs_w[w] = w_obs + 1
         self.beam_obs += 1
 
     def observe_wall(self, strategy: str, units_per_query: float,
@@ -91,22 +123,39 @@ class CostModel:
     def snapshot(self) -> dict:
         return dict(scan_unit=round(self.scan_unit, 5),
                     ndist_per_ef=round(self.ndist_per_ef, 2),
+                    ndist_per_ef_bw={w: round(v, 2)
+                                     for w, v in self._ndist_per_ef.items()},
                     beam_obs=self.beam_obs,
                     scan_us=self._scan_us, beam_us=self._beam_us)
 
     # -------------------------------------------------------- persistence
     def state_dict(self) -> dict:
-        """Full calibration state (JSON-serializable, exact restore)."""
+        """Full calibration state (JSON-serializable, exact restore).
+        ``ndist_per_ef`` stays the width-1 scalar so calibration files
+        written before the batched-expansion regime load unchanged; the
+        per-width EMAs ride along under ``ndist_per_ef_bw``."""
         return dict(scan_unit=self.scan_unit, beam_unit=self.beam_unit,
-                    ndist_per_ef=self.ndist_per_ef, decay=self.decay,
-                    beam_obs=self.beam_obs,
+                    ndist_per_ef=self.ndist_per_ef,
+                    ndist_per_ef_bw={str(w): v
+                                     for w, v in self._ndist_per_ef.items()},
+                    beam_obs_bw={str(w): c
+                                 for w, c in self._beam_obs_w.items()},
+                    decay=self.decay, beam_obs=self.beam_obs,
                     scan_us=self._scan_us, beam_us=self._beam_us)
 
     def load_state_dict(self, state: dict) -> None:
         self.scan_unit = float(state["scan_unit"])
         self.beam_unit = float(state.get("beam_unit", 1.0))
-        self.ndist_per_ef = float(state["ndist_per_ef"])
+        self._ndist_per_ef = {1: float(state["ndist_per_ef"])}
+        for w, v in state.get("ndist_per_ef_bw", {}).items():
+            self._ndist_per_ef[int(w)] = float(v)
         self.decay = float(state.get("decay", self.decay))
         self.beam_obs = int(state["beam_obs"])
+        # files from before per-width tracking: all observations were width 1
+        obs_bw = state.get("beam_obs_bw")
+        if obs_bw is None:
+            self._beam_obs_w = {1: self.beam_obs} if self.beam_obs else {}
+        else:
+            self._beam_obs_w = {int(w): int(c) for w, c in obs_bw.items()}
         self._scan_us = state.get("scan_us")
         self._beam_us = state.get("beam_us")

@@ -69,13 +69,16 @@ class QueryPlanner:
         self.max_bucket = next_pow2(self.n)
 
     # ----------------------------------------------------- routing decision
-    def choose_strategy(self, length: int, *, k: int, ef: int) -> int:
+    def choose_strategy(self, length: int, *, k: int, ef: int,
+                        beam_width: int = 1) -> int:
         """Per-query cost-based routing for one rank-interval length.
 
         Scalar reference semantics for ``choose_strategy_batch`` (the unit
         tests hold the two in lockstep): empty and ``len ≤ k`` slices always
         scan (exact and ~free), slices above the selectivity ceiling always
-        beam, and in between the calibrated cost model decides."""
+        beam, and in between the calibrated cost model decides —
+        ``beam_width`` selects which batched-expansion regime prices the
+        beam side."""
         ln = int(length)
         if ln <= 0 or ln <= k:
             return SCAN
@@ -84,11 +87,12 @@ class QueryPlanner:
         bucket = bucket_for_len(ln, min_bucket=self.min_bucket,
                                 max_bucket=self.max_bucket)
         scan_cost = self.cost.predict_scan_units(window_rows(bucket))
-        beam_cost = self.cost.predict_beam_units(ef_bucket(ln, k, ef))
+        beam_cost = self.cost.predict_beam_units(ef_bucket(ln, k, ef),
+                                                 beam_width)
         return SCAN if scan_cost <= beam_cost else BEAM
 
-    def choose_strategy_batch(self, lens: np.ndarray, *, k: int,
-                              ef: int) -> np.ndarray:
+    def choose_strategy_batch(self, lens: np.ndarray, *, k: int, ef: int,
+                              beam_width: int = 1) -> np.ndarray:
         """Vectorized ``choose_strategy``: (Q,) lengths -> (Q,) int8 strategy
         vector (``SCAN``/``BEAM``).  Pure numpy over the whole batch — this
         is the host-side half of mesh dispatch, where the strategy vector is
@@ -98,7 +102,8 @@ class QueryPlanner:
                              max_bucket=self.max_bucket)
         scan_cost = (self.cost.predict_scan_units(1) *
                      window_rows_np(buckets).astype(np.float64))
-        beam_cost = (self.cost.beam_unit * self.cost.ndist_per_ef *
+        beam_cost = (self.cost.beam_unit *
+                     self.cost.ndist_per_ef_at(beam_width) *
                      ef_bucket_np(lens, k, ef).astype(np.float64))
         eligible = lens <= self.max_scan_len
         use_scan = (eligible & (scan_cost <= beam_cost)) | (lens <= 0) \
@@ -107,7 +112,7 @@ class QueryPlanner:
 
     # ------------------------------------------------------------------
     def plan_batch(self, lo: np.ndarray, hi: np.ndarray, *, k: int, ef: int,
-                   mode: str = "auto") -> Plan:
+                   mode: str = "auto", beam_width: int = 1) -> Plan:
         """lo/hi: (Q,) int rank intervals (inclusive; lo > hi = empty).
         mode: "auto" (cost-based) | "scan" | "beam" (forced)."""
         lo = np.asarray(lo, np.int64)
@@ -121,7 +126,8 @@ class QueryPlanner:
         elif mode == "beam":
             use_scan = lens <= 0           # beam cannot express empty ranges
         else:
-            use_scan = self.choose_strategy_batch(lens, k=k, ef=ef) == SCAN
+            use_scan = self.choose_strategy_batch(
+                lens, k=k, ef=ef, beam_width=beam_width) == SCAN
         strategy = np.where(use_scan, SCAN, BEAM).astype(np.int8)
 
         partitions: List[Partition] = []

@@ -61,9 +61,11 @@ def hash_query(q: np.ndarray) -> bytes:
 
 def query_key(q: np.ndarray, lo: int, hi: int, k: int, ef: int,
               strategy: str, use_kernel: bool = False, ns=None,
-              digest: Optional[bytes] = None) -> Tuple:
+              digest: Optional[bytes] = None, beam_width: int = 1) -> Tuple:
     """Cache key for one query row: content hash of the vector plus every
-    request parameter that changes the result.
+    request parameter that changes the result (``beam_width`` included —
+    the batched-expansion frontier may legitimately differ from the
+    single-expansion one at sub-exhaustive ``ef``).
 
     ``ns`` namespaces the key to one corpus slice.  It is required whenever
     several substrates share a cache: two shards routinely see the *same*
@@ -72,7 +74,7 @@ def query_key(q: np.ndarray, lo: int, hi: int, k: int, ef: int,
     the namespace their entries would collide and serve wrong rows."""
     h = digest if digest is not None else hash_query(q)
     return (ns, h, int(lo), int(hi), int(k), int(ef), strategy,
-            bool(use_kernel))
+            bool(use_kernel), int(beam_width))
 
 
 @dataclass
@@ -102,6 +104,7 @@ class SearchCache:
         self.epoch = 0          # bumped by invalidate(); fences late stores
         self.hits = 0
         self.misses = 0
+        self.dedup_hits = 0     # intra-batch duplicates served by one dispatch
         self.evictions = 0
         self.invalidations = 0
 
@@ -156,33 +159,49 @@ class SearchCache:
     def snapshot(self) -> dict:
         return dict(entries=len(self._d), bytes=self.bytes,
                     max_bytes=self.max_bytes, hits=self.hits,
-                    misses=self.misses, evictions=self.evictions,
+                    misses=self.misses, dedup_hits=self.dedup_hits,
+                    evictions=self.evictions,
                     invalidations=self.invalidations)
 
     # ------------------------------------------------- batch split / stitch
     def split(self, qv: np.ndarray, lo: np.ndarray, hi: np.ndarray, k: int,
               ef: int, strategy: str, use_kernel: bool = False, ns=None,
-              digests: Optional[List[bytes]] = None):
-        """Partition one batch into cache hits and misses.
+              digests: Optional[List[bytes]] = None, beam_width: int = 1):
+        """Partition one batch into cache hits, misses, and intra-batch
+        duplicates of a miss.
 
-        Returns ``(keys, hit_rows, miss_idx)``: per-row keys, a dict
-        ``{row -> CacheEntry}`` for the hits, and the miss positions (the
-        only rows the substrate has to execute).  ``digests`` are optional
-        precomputed ``hash_query`` values (one per row) so multi-substrate
-        callers hash each query once, not once per shard."""
+        Returns ``(keys, hit_rows, miss_idx, dups)``: per-row keys, a dict
+        ``{row -> CacheEntry}`` for the hits, the *unique* miss positions
+        (the only rows the substrate has to execute), and
+        ``dups: {row -> position in miss_idx}`` for rows whose key equals
+        an earlier miss in the same batch — those dispatch **once** and the
+        single result fans back out at assembly (dynamic batches routinely
+        coalesce identical requests; without this they execute twice on the
+        miss path).  ``digests`` are optional precomputed ``hash_query``
+        values (one per row) so multi-substrate callers hash each query
+        once, not once per shard."""
         keys = [query_key(qv[i], lo[i], hi[i], k, ef, strategy, use_kernel,
                           ns=ns,
-                          digest=digests[i] if digests is not None else None)
+                          digest=digests[i] if digests is not None else None,
+                          beam_width=beam_width)
                 for i in range(len(qv))]
         hit_rows: Dict[int, CacheEntry] = {}
         miss: List[int] = []
+        first_at: Dict[Tuple, int] = {}     # miss key -> its slot in `miss`
+        dups: Dict[int, int] = {}
         for i, key in enumerate(keys):
             e = self.lookup(key)
-            if e is None:
+            if e is not None:
+                hit_rows[i] = e
+                continue
+            p = first_at.get(key)
+            if p is None:
+                first_at[key] = len(miss)
                 miss.append(i)
             else:
-                hit_rows[i] = e
-        return keys, hit_rows, np.asarray(miss, np.int64)
+                dups[i] = p
+        self.dedup_hits += len(dups)
+        return keys, hit_rows, np.asarray(miss, np.int64), dups
 
     def store_batch(self, keys: List[Tuple], res: SearchResult,
                     epoch: Optional[int] = None) -> None:
@@ -199,8 +218,10 @@ class SearchCache:
 
     def assemble(self, q: int, k: int, hit_rows: Dict[int, CacheEntry],
                  miss_res: Optional[SearchResult],
-                 miss_idx: np.ndarray) -> SearchResult:
-        """Stitch hits + executed misses back into request order."""
+                 miss_idx: np.ndarray,
+                 dups: Optional[Dict[int, int]] = None) -> SearchResult:
+        """Stitch hits + executed misses back into request order; ``dups``
+        rows copy the executed result of their representative miss."""
         ids = np.full((q, k), -1, np.int32)
         dists = np.full((q, k), np.inf, np.float32)
         per_row: Dict[str, Dict[int, np.generic]] = {}
@@ -218,6 +239,13 @@ class SearchCache:
                     d = per_row.setdefault(name, {})
                     for j, i in enumerate(miss_idx):
                         d[int(i)] = v[j]
+        if dups and miss_res is not None:
+            for i, p in dups.items():
+                ids[i] = miss_res.ids[p]
+                dists[i] = miss_res.dists[p]
+                for name, d in per_row.items():
+                    if int(miss_idx[p]) in d:
+                        d[i] = d[int(miss_idx[p])]
         stats: Dict[str, object] = {}
         for name, vals in per_row.items():
             sample = np.asarray(next(iter(vals.values())))
@@ -229,4 +257,6 @@ class SearchCache:
             from repro.planner.planner import SCAN
             stats["scan_frac"] = float((stats["strategy"] == SCAN).mean())
         stats["cache_hits"] = len(hit_rows)
+        if dups:
+            stats["batch_dedup"] = len(dups)
         return SearchResult(ids, dists, stats)

@@ -25,6 +25,10 @@ class SearchRequest:
     strategy: "graph" — the paper's pure beam search over the full batch;
               "auto"  — cost-based scan/beam routing per query;
               "scan" / "beam" — forced strategy (tests, benchmarks).
+    beam_width: batched-expansion width for every beam dispatch this
+              request performs (1 = the legacy single-node expansion; B>1
+              expands the best B candidates per hop — see
+              ``repro.core.beam``).
     """
     queries: np.ndarray
     lo: np.ndarray
@@ -33,11 +37,14 @@ class SearchRequest:
     ef: int = 64
     strategy: str = "graph"
     use_kernel: bool = False
+    beam_width: int = 1
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
             raise ValueError(f"unknown strategy {self.strategy!r}: "
                              f"expected one of {STRATEGIES}")
+        if self.beam_width < 1:
+            raise ValueError(f"beam_width must be >= 1, got {self.beam_width}")
 
 
 @dataclass

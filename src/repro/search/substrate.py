@@ -5,8 +5,10 @@ corpus slice (a whole index, or one shard of a distributed one):
 
 * ``resolve``  — attribute ranges -> rank intervals (``repro.search.resolve``);
 * cache        — when a ``SearchCache`` is installed, each request is split
-                 into hit rows (served from memory, no device work) and miss
-                 rows (executed), stitched back in request order;
+                 into hit rows (served from memory, no device work), unique
+                 miss rows (executed), and intra-batch duplicates of a miss
+                 (executed once, fanned back out), stitched in request
+                 order;
 * dispatch     — ``graph`` runs the paper's beam search over the full batch;
                  ``auto``/``scan``/``beam`` go through the adaptive planner,
                  which partitions the batch into fixed-shape jit dispatches
@@ -155,42 +157,45 @@ class SearchSubstrate:
         qv = np.asarray(req.queries, np.float32)
         lo = np.asarray(req.lo, np.int64)
         hi = np.asarray(req.hi, np.int64)
-        k, ef = int(req.k), int(req.ef)
+        k, ef, bw = int(req.k), int(req.ef), int(req.beam_width)
         cache = self.cache
         if cache is None or len(qv) == 0:
             fin = self._dispatch_all(qv, lo, hi, k, ef, req.strategy,
-                                     req.use_kernel, defer)
+                                     req.use_kernel, defer, bw)
             return PendingSearch(fin)
         epoch = cache.epoch             # fences stores vs invalidate()
-        keys, hit_rows, miss = cache.split(qv, lo, hi, k, ef, req.strategy,
-                                           req.use_kernel, ns=self.cache_ns,
-                                           digests=q_digests)
+        keys, hit_rows, miss, dups = cache.split(
+            qv, lo, hi, k, ef, req.strategy, req.use_kernel,
+            ns=self.cache_ns, digests=q_digests, beam_width=bw)
         if len(miss) == 0:
             return PendingSearch(
                 lambda: cache.assemble(len(qv), k, hit_rows, None, miss))
         fin = self._dispatch_all(qv[miss], lo[miss], hi[miss], k, ef,
-                                 req.strategy, req.use_kernel, defer)
+                                 req.strategy, req.use_kernel, defer, bw)
         miss_keys = [keys[i] for i in miss]
 
         def finalize() -> SearchResult:
             miss_res = fin()
             cache.store_batch(miss_keys, miss_res, epoch=epoch)
-            if not hit_rows:
+            if not hit_rows and not dups:
                 miss_res.stats["cache_hits"] = 0
                 return miss_res
-            return cache.assemble(len(qv), k, hit_rows, miss_res, miss)
+            return cache.assemble(len(qv), k, hit_rows, miss_res, miss,
+                                  dups)
         return PendingSearch(finalize)
 
     # ----------------------------------------------------------- dispatch
     def _dispatch_all(self, qv, lo, hi, k, ef, strategy, use_kernel,
-                      defer: bool) -> Callable[[], SearchResult]:
+                      defer: bool,
+                      beam_width: int = 1) -> Callable[[], SearchResult]:
         """Enqueue the uncached work for one (sub-)batch; the returned
         closure blocks, stitches, and remaps rank ids to original ids."""
         if strategy == "graph":
-            fin = self._dispatch_graph(qv, lo, hi, k, ef, use_kernel)
+            fin = self._dispatch_graph(qv, lo, hi, k, ef, use_kernel,
+                                       beam_width)
         else:
             fin = self._dispatch_planned(qv, lo, hi, k, ef, strategy,
-                                         use_kernel, defer)
+                                         use_kernel, defer, beam_width)
 
         def finalize() -> SearchResult:
             ids, dists, stats = fin()
@@ -199,7 +204,7 @@ class SearchSubstrate:
         return finalize
 
     # ------------------------------------------------------ graph strategy
-    def _dispatch_graph(self, qv, lo, hi, k, ef, use_kernel):
+    def _dispatch_graph(self, qv, lo, hi, k, ef, use_kernel, beam_width=1):
         """The paper's path: one beam-search dispatch over the full batch."""
         qj = jnp.asarray(qv, jnp.float32)
         lo_j = jnp.asarray(lo)
@@ -208,7 +213,8 @@ class SearchSubstrate:
                                      self.n)
         ids, dists, st = beam_search_batch(
             self._vecs, self._nbrs, qj, lo_j, hi_j, entry,
-            k=k, ef=max(ef, k), use_kernel=use_kernel)
+            k=k, ef=max(ef, k), use_kernel=use_kernel,
+            beam_width=beam_width)
 
         def finalize():
             st_h = jax.tree.map(np.asarray, st)
@@ -219,14 +225,15 @@ class SearchSubstrate:
 
     # ---------------------------------------------------- planned strategies
     def _dispatch_planned(self, qv, lo, hi, k, ef, mode, use_kernel,
-                          defer: bool):
+                          defer: bool, beam_width: int = 1):
         """Routing policy: plan the batch, dispatch each fixed-shape
         partition, stitch back in request order.  ``defer=False`` blocks
         each partition before dispatching the next (today's calibrated
         loop); ``defer=True`` enqueues them all and blocks only in the
         returned closure."""
         q = len(qv)
-        plan = self.planner.plan_batch(lo, hi, k=k, ef=ef, mode=mode)
+        plan = self.planner.plan_batch(lo, hi, k=k, ef=ef, mode=mode,
+                                       beam_width=beam_width)
         fins = []
         for part in plan.partitions:
             if part.kind == "scan":
@@ -238,7 +245,8 @@ class SearchSubstrate:
                                           part.param, part.pad_q, k,
                                           calibrate=(mode == "auto"),
                                           calibrate_wall=not defer,
-                                          use_kernel=use_kernel)
+                                          use_kernel=use_kernel,
+                                          beam_width=beam_width)
             if not defer:
                 val = fin()
                 fin = (lambda v: lambda: v)(val)
@@ -307,7 +315,7 @@ class SearchSubstrate:
 
     def _dispatch_beam(self, qv, lo, hi, idx, ef: int, pad_q: int, k: int, *,
                        calibrate: bool, calibrate_wall: bool = True,
-                       use_kernel: bool = False):
+                       use_kernel: bool = False, beam_width: int = 1):
         nq = len(idx)
         if nq == 0:                 # empty partition: nothing to dispatch
             empty = np.zeros(0, np.int32)
@@ -320,7 +328,7 @@ class SearchSubstrate:
         entry = resolve.select_entry(self._rmq, self._dist_c, lo_j, hi_j,
                                      self.n)
         qp = jnp.asarray(qv[pad])
-        sig = ("beam", ef, pad_q, k)
+        sig = ("beam", ef, pad_q, k, beam_width)
         warm = sig in self._warm
         self._warm.add(sig)
         t0 = time.perf_counter()
@@ -328,7 +336,8 @@ class SearchSubstrate:
             self._vecs, self._nbrs, qp,
             jnp.asarray(lo[pad].astype(np.int32)),
             jnp.asarray(hi[pad].astype(np.int32)),
-            entry, k=k, ef=max(ef, k), use_kernel=use_kernel)
+            entry, k=k, ef=max(ef, k), use_kernel=use_kernel,
+            beam_width=beam_width)
 
         def finalize():
             ids_h = np.asarray(ids)[:nq]
@@ -336,7 +345,8 @@ class SearchSubstrate:
             st_h = {kk: np.asarray(vv)[:nq] for kk, vv in st.items()}
             dt = time.perf_counter() - t0
             if calibrate:
-                self.planner.cost.update_beam(float(st_h["ndist"].mean()), ef)
+                self.planner.cost.update_beam(float(st_h["ndist"].mean()), ef,
+                                              beam_width=beam_width)
                 if calibrate_wall and warm:
                     # pad lanes duplicate the last real query, so pad_q lanes
                     # of ~ndist work each were executed — normalize by pad_q
@@ -360,29 +370,36 @@ class SearchSubstrate:
 # Mesh path: traced per-device bodies + the host-planned mesh substrate.
 # ======================================================================
 def _shard_graph(vecs, nbrs, rmq, dist_c, order, rank0, qv, lo, hi, *,
-                 k: int, ef: int, axis: str):
+                 k: int, ef: int, axis: str, beam_width: int = 1):
     """Per-device graph body (the paper's mesh path): clip the replicated
     global rank interval to this shard, one beam dispatch over the full
-    batch, then the cross-shard merge.  Leading shard dim of size 1."""
+    batch, then the cross-shard merge.  Leading shard dim of size 1.
+
+    Besides the merged top-k, the body all-gathers each shard's **summed
+    ndist** (one scalar per shard) so the host can feed the cost model's
+    ``ndist_per_ef`` EMA — without it the mesh path would never move the
+    beam-cost estimate (traced bodies return no per-query stats)."""
     vecs, nbrs = vecs[0], nbrs[0]
     rmq, dist_c, order = rmq[0], dist_c[0], order[0]
     n = vecs.shape[0]
     slo, shi = resolve.clip_interval_jax(lo, hi, rank0[0], n)
     entry = resolve.select_entry(rmq, dist_c, slo, shi, n)
-    ids, dists, _ = beam_search_batch(vecs, nbrs, qv, slo, shi, entry,
-                                      k=k, ef=ef)
+    ids, dists, st = beam_search_batch(vecs, nbrs, qv, slo, shi, entry,
+                                       k=k, ef=ef, beam_width=beam_width)
     orig = resolve.remap_ids_jax(order, ids)
     dists = jnp.where(ids >= 0, dists, jnp.inf)
     ids_g = jax.lax.all_gather(orig, axis)               # (S, Q, k)
     ds_g = jax.lax.all_gather(dists, axis)
-    return merge_topk(ids_g, ds_g, k)
+    nd_g = jax.lax.all_gather(jnp.sum(st["ndist"]), axis)    # (S,)
+    out_i, out_d = merge_topk(ids_g, ds_g, k)
+    return out_i, out_d, nd_g
 
 
 def _shard_planned(x_pad, vecs, nbrs, rmq, dist_c, order, rank0,
                    scan_q, scan_lo, scan_hi, scan_dst,
                    beam_q, beam_lo, beam_hi, beam_dst, *,
                    k: int, ef: int, bucket: int, nq: int,
-                   has_beam: bool, axis: str):
+                   has_beam: bool, axis: str, beam_width: int = 1):
     """Per-device planned body: branchless strategy dispatch.
 
     The host already split the batch into scan/beam sub-batches (replicated
@@ -409,17 +426,22 @@ def _shard_planned(x_pad, vecs, nbrs, rmq, dist_c, order, rank0,
     d_s = jnp.where(ids_s >= 0, d_s, jnp.inf)
     out_i = out_i.at[scan_dst].set(resolve.remap_ids_jax(order, ids_s))
     out_d = out_d.at[scan_dst].set(d_s)
+    nd = jnp.zeros((), jnp.int32)
     if has_beam:
         slo, shi = resolve.clip_interval_jax(beam_lo, beam_hi, rank0[0], n)
         entry = resolve.select_entry(rmq, dist_c, slo, shi, n)
-        ids_b, d_b, _ = beam_search_batch(vecs, nbrs, beam_q, slo, shi,
-                                          entry, k=k, ef=ef)
+        ids_b, d_b, st = beam_search_batch(vecs, nbrs, beam_q, slo, shi,
+                                           entry, k=k, ef=ef,
+                                           beam_width=beam_width)
         d_b = jnp.where(ids_b >= 0, d_b, jnp.inf)
         out_i = out_i.at[beam_dst].set(resolve.remap_ids_jax(order, ids_b))
         out_d = out_d.at[beam_dst].set(d_b)
+        nd = jnp.sum(st["ndist"])       # pad lanes: empty windows, ndist 0
     ids_g = jax.lax.all_gather(out_i[:nq], axis)         # (S, Q, k)
     ds_g = jax.lax.all_gather(out_d[:nq], axis)
-    return merge_topk(ids_g, ds_g, k)
+    nd_g = jax.lax.all_gather(nd, axis)                  # (S,) beam-group sum
+    out_ii, out_dd = merge_topk(ids_g, ds_g, k)
+    return out_ii, out_dd, nd_g
 
 
 class MeshSubstrate:
@@ -445,11 +467,13 @@ class MeshSubstrate:
     Calibration feedback: routed dispatches (``auto``/``scan``/``beam``)
     whose jit signature is already warm feed their wall time back into the
     planner's cost model — pure-beam calls observe the beam unit cost
-    (work per lane ≈ ``ndist_per_ef · ef``; the traced bodies return no
-    stats, so the ndist EMA itself only moves via the local path or a
-    loaded calibration file), and mixed scan+beam calls are attributed
-    proportionally to predicted unit costs (``observe_wall_mixed``).
-    ``req.strategy == "graph"`` — the paper's pure path — never calibrates.
+    (work per lane ≈ ``ndist_per_ef · ef``), and mixed scan+beam calls are
+    attributed proportionally to predicted unit costs
+    (``observe_wall_mixed``).  The traced bodies additionally **all-gather
+    a per-shard ndist scalar**, so warm routed dispatches also move the
+    ``ndist_per_ef`` EMA itself — the mesh path calibrates the same two
+    quantities the local path does.  ``req.strategy == "graph"`` — the
+    paper's pure path — never calibrates.
     """
 
     def __init__(self, mesh, axis: str, vecs, nbrs, rmq, dist_c, order,
@@ -482,7 +506,8 @@ class MeshSubstrate:
 
     # ------------------------------------------------------------- planning
     def plan_strategies(self, lo: np.ndarray, hi: np.ndarray, *, k: int,
-                        ef: int, mode: str) -> Tuple[np.ndarray, np.ndarray]:
+                        ef: int, mode: str,
+                        beam_width: int = 1) -> Tuple[np.ndarray, np.ndarray]:
         """Host half of mesh dispatch: (strategy (Q,) int8, lens_eff (Q,)).
 
         ``lens_eff`` is each query's **widest shard-local clip** of its
@@ -500,7 +525,8 @@ class MeshSubstrate:
             return np.full(len(lo), SCAN, np.int8), lens_eff
         if mode == "beam":
             return np.full(len(lo), BEAM, np.int8), lens_eff
-        return (self.planner.choose_strategy_batch(lens_eff, k=k, ef=ef),
+        return (self.planner.choose_strategy_batch(lens_eff, k=k, ef=ef,
+                                                   beam_width=beam_width),
                 lens_eff)
 
     # ---------------------------------------------------------------- run
@@ -512,6 +538,7 @@ class MeshSubstrate:
         lo = np.asarray(req.lo, np.int64)
         hi = np.asarray(req.hi, np.int64)
         k, ef = int(req.k), max(int(req.ef), int(req.k))
+        bw = int(req.beam_width)
         nq = len(qv)
         if nq == 0:
             return SearchResult(np.zeros((0, k), np.int32),
@@ -520,30 +547,33 @@ class MeshSubstrate:
                                  "scan_frac": 0.0})
         cache = self.cache
         if cache is None:
-            return self._run_uncached(qv, lo, hi, k, ef, req.strategy)
+            return self._run_uncached(qv, lo, hi, k, ef, req.strategy, bw)
         epoch = cache.epoch             # fences stores vs invalidate()
-        keys, hit_rows, miss = cache.split(qv, lo, hi, k, ef, req.strategy,
-                                           ns="mesh")
+        keys, hit_rows, miss, dups = cache.split(qv, lo, hi, k, ef,
+                                                 req.strategy, ns="mesh",
+                                                 beam_width=bw)
         if len(miss) == 0:
             return cache.assemble(nq, k, hit_rows, None, miss)
         miss_res = self._run_uncached(qv[miss], lo[miss], hi[miss], k, ef,
-                                      req.strategy)
+                                      req.strategy, bw)
         cache.store_batch([keys[i] for i in miss], miss_res, epoch=epoch)
-        if not hit_rows:
+        if not hit_rows and not dups:
             miss_res.stats["cache_hits"] = 0
             return miss_res
-        return cache.assemble(nq, k, hit_rows, miss_res, miss)
+        return cache.assemble(nq, k, hit_rows, miss_res, miss, dups)
 
-    def _run_uncached(self, qv, lo, hi, k: int, ef: int,
-                      mode: str) -> SearchResult:
+    def _run_uncached(self, qv, lo, hi, k: int, ef: int, mode: str,
+                      beam_width: int = 1) -> SearchResult:
         nq = len(qv)
         if mode == "graph":
-            ids, dists = self._call_graph(qv, lo, hi, k, ef, calibrate=False)
+            ids, dists = self._call_graph(qv, lo, hi, k, ef, calibrate=False,
+                                          beam_width=beam_width)
             return SearchResult(ids, dists,
                                 {"strategy": np.ones(nq, np.int8),
                                  "scan_frac": 0.0})
         strategy, lens_eff = self.plan_strategies(lo, hi, k=k, ef=ef,
-                                                  mode=mode)
+                                                  mode=mode,
+                                                  beam_width=beam_width)
         scan_idx = np.flatnonzero(strategy == SCAN)
         beam_idx = np.flatnonzero(strategy == BEAM)
         if len(scan_idx) == 0:
@@ -551,7 +581,8 @@ class MeshSubstrate:
             # graph body plus pow2 padding and a scatter — dispatch the graph
             # fn directly (same ef, same merge, bit-identical results)
             ids, dists = self._call_graph(qv, lo, hi, k, ef,
-                                          calibrate=self.calibrate)
+                                          calibrate=self.calibrate,
+                                          beam_width=beam_width)
             return SearchResult(ids, dists,
                                 {"strategy": strategy, "scan_frac": 0.0})
         # scan_idx is non-empty past the fast path; one shared bucket covers
@@ -562,50 +593,75 @@ class MeshSubstrate:
             for ln in lens_eff[scan_idx])
         pad_s = pad_pow2(len(scan_idx))
         pad_b = pad_pow2(len(beam_idx)) if len(beam_idx) else 0
-        key = ("planned", k, ef, bucket, pad_s, pad_b, nq)
+        key = ("planned", k, ef, bucket, pad_s, pad_b, nq, beam_width)
         warm = key in self._fns
         fn = self._planned_fn(k=k, ef=ef, bucket=bucket, pad_s=pad_s,
-                              pad_b=pad_b, nq=nq)
+                              pad_b=pad_b, nq=nq, beam_width=beam_width)
         scan_ops = self._group_operands(qv, lo, hi, scan_idx, pad_s, nq,
                                         lane_pad=True)
         beam_ops = self._group_operands(qv, lo, hi, beam_idx, pad_b, nq,
                                         lane_pad=False)
         t0 = time.perf_counter()
-        ids, dists = fn(self._scan_corpus(), self._vecs, self._nbrs, self._rmq,
-                        self._dist_c, self._order, self._rank0,
-                        *scan_ops, *beam_ops)
+        ids, dists, nd_g = fn(self._scan_corpus(), self._vecs, self._nbrs,
+                              self._rmq, self._dist_c, self._order,
+                              self._rank0, *scan_ops, *beam_ops)
         ids = np.asarray(ids)
         dists = np.asarray(dists)
         if self.calibrate and warm:
             # one fused traced step: attribute the wall time across the two
-            # groups proportionally to their predicted unit costs (per-shard
-            # lane counts include the pow2 padding, which did real work)
+            # groups proportionally to their predicted unit costs.  Scan
+            # lanes count the pow2 padding (empty windows still scan their
+            # fixed-shape blocks — real work); beam lanes count only the
+            # real queries (pad lanes carry empty windows and exit the
+            # while_loop immediately)
             dt = time.perf_counter() - t0
+            n_beam = len(beam_idx)
             self.planner.cost.observe_wall_mixed(
                 window_rows(bucket, self.tb) * pad_s,
-                self.planner.cost.ndist_per_ef * ef * pad_b,
-                dt, pad_s, pad_b)
+                self.planner.cost.ndist_per_ef_at(beam_width) * ef * n_beam,
+                dt, pad_s, n_beam)
+            if len(beam_idx):
+                # all-gathered per-shard ndist sums: pad lanes carry empty
+                # windows (ndist 0), so normalize by the real beam count —
+                # this is the signal that moves the mesh path's ndist EMA
+                nd_mean = float(np.asarray(nd_g).mean()) / len(beam_idx)
+                self.planner.cost.update_beam(nd_mean, ef,
+                                              beam_width=beam_width)
         scan_frac = len(scan_idx) / nq
         return SearchResult(ids, dists,
                             {"strategy": strategy, "scan_frac": scan_frac})
 
-    def _call_graph(self, qv, lo, hi, k: int, ef: int, *, calibrate: bool):
-        """One graph-body mesh dispatch (+ optional warm-call beam-wall
-        calibration for routed uniform-beam batches)."""
-        warm = ("graph", k, ef) in self._fns
-        fn = self.graph_fn(k, ef)
+    def _call_graph(self, qv, lo, hi, k: int, ef: int, *, calibrate: bool,
+                    beam_width: int = 1):
+        """One graph-body mesh dispatch (+ optional warm-call beam
+        calibration for routed uniform-beam batches: wall time and the
+        all-gathered per-shard ndist feed the cost model)."""
+        warm = ("graph", k, max(ef, k), beam_width) in self._fns
+        fn = self.graph_fn(k, ef, beam_width)
         t0 = time.perf_counter()
-        ids, dists = fn(self._vecs, self._nbrs, self._rmq, self._dist_c,
-                        self._order, self._rank0, jnp.asarray(qv),
-                        jnp.asarray(np.asarray(lo).astype(np.int32)),
-                        jnp.asarray(np.asarray(hi).astype(np.int32)))
+        ids, dists, nd_g = fn(self._vecs, self._nbrs, self._rmq, self._dist_c,
+                              self._order, self._rank0, jnp.asarray(qv),
+                              jnp.asarray(np.asarray(lo).astype(np.int32)),
+                              jnp.asarray(np.asarray(hi).astype(np.int32)))
         ids = np.asarray(ids)
         dists = np.asarray(dists)
         if calibrate and warm:
-            dt = time.perf_counter() - t0
-            self.planner.cost.observe_wall(
-                "beam", max(self.planner.cost.ndist_per_ef * ef, 1.0), dt,
-                len(qv))
+            # both feeds normalize by the NON-EMPTY row count: forced-beam
+            # batches may carry empty intervals (the local path routes
+            # those to scan), which exit the while_loop immediately and
+            # would bias both the wall-per-unit estimate and the ndist EMA
+            # toward free
+            n_real = int((np.asarray(lo) <= np.asarray(hi)).sum())
+            if n_real:
+                dt = time.perf_counter() - t0
+                self.planner.cost.observe_wall(
+                    "beam",
+                    max(self.planner.cost.ndist_per_ef_at(beam_width) * ef,
+                        1.0),
+                    dt, n_real)
+                nd_mean = float(np.asarray(nd_g).mean()) / n_real
+                self.planner.cost.update_beam(nd_mean, ef,
+                                              beam_width=beam_width)
         return ids, dists
 
     # ------------------------------------------------------------ operands
@@ -640,30 +696,34 @@ class MeshSubstrate:
         return self._x_pad
 
     # ---------------------------------------------------------- traced fns
-    def graph_fn(self, k: int, ef: int):
-        """Jitted graph-strategy mesh fn (also the dry-run lowering target)."""
-        key = ("graph", k, max(ef, k))
+    def graph_fn(self, k: int, ef: int, beam_width: int = 1):
+        """Jitted graph-strategy mesh fn (also the dry-run lowering target).
+        Returns (ids, dists, ndist_per_shard)."""
+        key = ("graph", k, max(ef, k), beam_width)
         fn = self._fns.get(key)
         if fn is None:
-            body = partial(_shard_graph, k=k, ef=max(ef, k), axis=self.axis)
+            body = partial(_shard_graph, k=k, ef=max(ef, k), axis=self.axis,
+                           beam_width=beam_width)
             shard, rep = P(self.axis), P()
             fn = jax.jit(shard_map_compat(
                 body, self.mesh,
                 in_specs=(shard,) * 6 + (rep, rep, rep),
-                out_specs=(rep, rep)))
+                out_specs=(rep, rep, rep)))
             self._fns[key] = fn
         return fn
 
-    def _planned_fn(self, *, k, ef, bucket, pad_s, pad_b, nq):
-        key = ("planned", k, ef, bucket, pad_s, pad_b, nq)
+    def _planned_fn(self, *, k, ef, bucket, pad_s, pad_b, nq,
+                    beam_width: int = 1):
+        key = ("planned", k, ef, bucket, pad_s, pad_b, nq, beam_width)
         fn = self._fns.get(key)
         if fn is None:
             body = partial(_shard_planned, k=k, ef=ef, bucket=bucket, nq=nq,
-                           has_beam=pad_b > 0, axis=self.axis)
+                           has_beam=pad_b > 0, axis=self.axis,
+                           beam_width=beam_width)
             shard, rep = P(self.axis), P()
             fn = jax.jit(shard_map_compat(
                 body, self.mesh,
                 in_specs=(shard,) * 7 + (rep,) * 8,
-                out_specs=(rep, rep)))
+                out_specs=(rep, rep, rep)))
             self._fns[key] = fn
         return fn

@@ -124,7 +124,8 @@ class DistributedRFANN:
         if self._mesh_sub is not None:
             self._mesh_sub.cache = cache
 
-    def _search_local(self, qv, lo, hi, *, k: int, ef: int, plan: str):
+    def _search_local(self, qv, lo, hi, *, k: int, ef: int, plan: str,
+                      beam_width: int = 1):
         """Per-shard substrate dispatch, merged by the same ``merge_topk``
         the mesh path uses — identical ids by construction.  With
         ``async_dispatch`` every shard's work is enqueued before any block
@@ -146,7 +147,8 @@ class DistributedRFANN:
         for s, sub in enumerate(self.substrates):
             slo, shi = clip_interval(lo, hi, s * self.per, self.per)
             req = SearchRequest(queries=qv, lo=slo, hi=shi,
-                                k=k, ef=ef, strategy=plan)
+                                k=k, ef=ef, strategy=plan,
+                                beam_width=beam_width)
             p = sub.dispatch(req, defer=self.async_dispatch,
                              q_digests=digests)
             if not self.async_dispatch:
@@ -178,23 +180,27 @@ class DistributedRFANN:
                              np.asarray(attr_ranges, np.float32))
 
     def search_ranks(self, queries, lo, hi, *, k: int = 10, ef: int = 64,
-                     plan: str = "graph") -> SearchResult:
+                     plan: str = "graph",
+                     beam_width: int = 1) -> SearchResult:
         """Rank-space entry point (resolve already done): dispatch on the
         mesh path when a mesh is attached, else the (async) local path."""
         qv = np.asarray(queries, np.float32)
         ef = max(ef, k)
         if self.mesh is None:
             ids, dists, stats = self._search_local(qv, lo, hi, k=k, ef=ef,
-                                                   plan=plan)
+                                                   plan=plan,
+                                                   beam_width=beam_width)
             return SearchResult(ids, dists, stats)
         return self.mesh_substrate.run(SearchRequest(
-            queries=qv, lo=lo, hi=hi, k=k, ef=ef, strategy=plan))
+            queries=qv, lo=lo, hi=hi, k=k, ef=ef, strategy=plan,
+            beam_width=beam_width))
 
     def search(self, queries: np.ndarray, attr_ranges: np.ndarray, *,
-               k: int = 10, ef: int = 64,
-               plan: str = "graph") -> Tuple[np.ndarray, np.ndarray]:
+               k: int = 10, ef: int = 64, plan: str = "graph",
+               beam_width: int = 1) -> Tuple[np.ndarray, np.ndarray]:
         lo, hi = self.rank_range(attr_ranges)
-        res = self.search_ranks(queries, lo, hi, k=k, ef=ef, plan=plan)
+        res = self.search_ranks(queries, lo, hi, k=k, ef=ef, plan=plan,
+                                beam_width=beam_width)
         return res.ids, res.dists
 
     # ------------------------------------------------------------------

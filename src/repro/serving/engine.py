@@ -81,13 +81,14 @@ class EngineStats:
 class RFANNEngine:
     def __init__(self, index, *, k: int = 10, ef: int = 64,
                  max_batch: int = 64, max_wait_ms: float = 2.0,
-                 plan: str = "auto",
+                 plan: str = "auto", beam_width: int = 1,
                  calibration_path: Optional[str] = None,
                  cache_bytes: int = 0,
                  pipeline_depth: int = 2):
         self.index = index
         self.k, self.ef = k, ef
         self.plan = plan
+        self.beam_width = int(beam_width)
         self.max_batch = max_batch
         self.max_wait = max_wait_ms / 1000.0
         self.calibration_path = calibration_path
@@ -189,14 +190,17 @@ class RFANNEngine:
                 continue
             with self._index_lock:
                 index = self.index
+            # beam_width=1 is omitted so indexes predating the batched-
+            # expansion API (baselines, external wrappers) keep working
+            kw = dict(k=self.k, ef=self.ef, plan=self.plan)
+            if self.beam_width != 1:
+                kw["beam_width"] = self.beam_width
             if index is not r_index or lo is None:
                 # swapped between the stages (or no rank-space entry point):
                 # re-resolve against the live index
-                res = index.search(qv, rg, k=self.k, ef=self.ef,
-                                   plan=self.plan)
+                res = index.search(qv, rg, **kw)
             else:
-                res = index.search_ranks(qv, lo, hi, k=self.k, ef=self.ef,
-                                         plan=self.plan)
+                res = index.search_ranks(qv, lo, hi, **kw)
             if not hasattr(res, "row"):     # tuple-returning index
                 from repro.search import SearchResult
                 res = SearchResult(np.asarray(res[0]), np.asarray(res[1]), {})

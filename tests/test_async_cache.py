@@ -47,6 +47,35 @@ def test_cache_hit_miss_counters_through_search():
     assert np.array_equal(r3.ids[:4], r1.ids[:4])
 
 
+def test_cache_miss_path_batch_dedup():
+    """Identical rows inside one dynamic batch dispatch ONCE on the miss
+    path: the duplicates fan out from the single executed result, are
+    bit-identical to it, and only one entry lands in the cache."""
+    ix, vecs, attrs = _index()
+    cache = SearchCache(max_bytes=1 << 20)
+    qv1 = make_vectors(3, 16, seed=7)
+    rg1 = selectivity_ranges(attrs, 3, 0.2, seed=11)
+    # rows 0..2 unique; rows 3..6 duplicate row 0 / row 1
+    qv = np.concatenate([qv1, qv1[:2], qv1[:2]])
+    rg = np.concatenate([rg1, rg1[:2], rg1[:2]])
+    base = ix.search(qv, rg, k=5, ef=64, plan="auto")       # uncached oracle
+    ix.install_cache(cache)
+    res = ix.search(qv, rg, k=5, ef=64, plan="auto")
+    assert res.stats["batch_dedup"] == 4
+    assert cache.dedup_hits == 4
+    assert len(cache) == 3                  # only the unique keys stored
+    assert np.array_equal(res.ids, base.ids)
+    assert np.array_equal(res.ids[3], res.ids[0])
+    assert np.array_equal(res.dists[4], res.dists[1])
+    # per-row stats fanned out with the result
+    assert res.stats["strategy"][3] == res.stats["strategy"][0]
+    # second pass: every row (duplicates included) is a plain hit
+    r2 = ix.search(qv, rg, k=5, ef=64, plan="auto")
+    assert r2.stats["cache_hits"] == 7
+    assert np.array_equal(r2.ids, base.ids)
+    ix.install_cache(None)
+
+
 def test_cache_eviction_under_byte_budget():
     k = 5
     entry_bytes = CacheEntry(np.zeros(k, np.int32), np.zeros(k, np.float32),

