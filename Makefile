@@ -3,7 +3,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test test-fast verify lint docs-check bench-quick bench-planner \
         bench-substrate bench-mesh bench-cache bench-beam bench-beam-smoke \
-        bench-full quickstart
+        bench-full quickstart obs-smoke profile
 
 # tier-1 verify (the command CI runs)
 test:
@@ -60,3 +60,12 @@ bench-full:
 
 quickstart:
 	$(PY) examples/quickstart.py
+
+# short serve with metrics; asserts the JSON + Prometheus exports parse and
+# carry the core metric families (CI runs this)
+obs-smoke:
+	$(PY) tools/obs_smoke.py
+
+# jax.profiler device trace around a small beam run -> results/profiles/
+profile:
+	$(PY) tools/profile_capture.py

@@ -35,7 +35,8 @@ class RNSGIndex:
         """Lazily-built unified search substrate (resolve/dispatch/stitch)."""
         if self._substrate is None:
             from repro.search import SearchSubstrate
-            self._substrate = SearchSubstrate.from_graph(self.g)
+            self._substrate = SearchSubstrate.from_graph(
+                self.g, metrics=getattr(self, "_metrics", None))
         return self._substrate
 
     # Back-compat aliases from the pre-substrate layering.
@@ -52,6 +53,13 @@ class RNSGIndex:
         substrate choke point — see ``repro.search.cache``."""
         self.substrate.cache = cache
 
+    def install_metrics(self, metrics) -> None:
+        """Install (or remove, with ``None``) a ``MetricsRegistry`` on the
+        substrate — the engine wires its registry here so substrate-level
+        counters/histograms land in ``engine.metrics()``."""
+        self._metrics = metrics
+        self.substrate.metrics = metrics
+
     def rank_range(self, attr_ranges: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         """[a_l, a_r] (inclusive) -> rank interval [L, R] (inclusive).
         Pure host-side resolve — does not force the substrate's device
@@ -61,25 +69,34 @@ class RNSGIndex:
 
     def search(self, queries: np.ndarray, attr_ranges: np.ndarray, *,
                k: int = 10, ef: int = 64, use_kernel: bool = False,
-               plan: str = "graph", beam_width: int = 1):
+               plan: str = "graph", beam_width: int = 1, trace=None):
         """queries:(Q,d); attr_ranges:(Q,2) attribute values (inclusive).
         plan: "graph" (pure beam search) | "auto" (cost-based scan/beam
         routing) | "scan" / "beam" (forced strategy).
         beam_width: batched-expansion width for beam dispatches (1 = the
         legacy single-node hop; B>1 fuses B node expansions per hop).
+        trace: optional ``repro.obs.QueryTrace`` — collects resolve / plan /
+        dispatch / stitch spans and rides back on the result.
         Returns a ``SearchResult`` (tuple-compatible: ids, dists, stats)."""
-        lo, hi = self.rank_range(attr_ranges)
+        from repro.obs import maybe_span
+        with maybe_span(trace, "resolve") as sp:
+            lo, hi = self.rank_range(attr_ranges)
+            sp.attrs.update(
+                q=len(np.atleast_2d(queries)), n=self.g.n,
+                interval_widths=np.clip(
+                    np.asarray(hi, np.int64) - np.asarray(lo, np.int64) + 1,
+                    0, None) if trace is not None else None)
         return self.search_ranks(queries, lo, hi, k=k, ef=ef,
                                  use_kernel=use_kernel, plan=plan,
-                                 beam_width=beam_width)
+                                 beam_width=beam_width, trace=trace)
 
     def search_ranks(self, queries, lo, hi, *, k=10, ef=64, use_kernel=False,
-                     plan="graph", beam_width=1):
+                     plan="graph", beam_width=1, trace=None):
         from repro.search import SearchRequest
         return self.substrate.run(SearchRequest(
             queries=np.asarray(queries, np.float32), lo=lo, hi=hi,
             k=k, ef=ef, strategy=plan, use_kernel=use_kernel,
-            beam_width=beam_width))
+            beam_width=beam_width, trace=trace))
 
     # ------------------------------------------------------------------
     @property

@@ -7,10 +7,16 @@ QPS, recall and latency percentiles.
 ``--mode lm``: batched LM serving (prefill + decode loop) on a smoke config.
 
   PYTHONPATH=src python -m repro.launch.serve --mode rfann --n 8192 --requests 512
+
+``--metrics-path out.prom`` dumps the final metrics snapshot on shutdown:
+Prometheus text exposition at the given path plus a JSON sibling
+(``out.prom.json``); ``--log-interval S`` turns on the engine's periodic
+one-line stats log while serving.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -44,7 +50,9 @@ def serve_rfann(args):
                          beam_width=args.beam_width,
                          max_batch=args.max_batch, max_wait_ms=2.0,
                          calibration_path=args.calibration or None,
-                         cache_bytes=args.cache_mb << 20)
+                         cache_bytes=args.cache_mb << 20,
+                         log_interval_s=args.log_interval,
+                         trace_sample_every=args.trace_sample_every)
     rng = np.random.default_rng(0)
     futs = []
     t0 = time.perf_counter()
@@ -59,6 +67,15 @@ def serve_rfann(args):
         print(f"[serve] result cache: {engine.cache.snapshot()}")
     if args.calibration:
         print(f"[serve] cost-model calibration persisted to {args.calibration}")
+    if args.metrics_path:
+        # final snapshot on shutdown, alongside the calibration save:
+        # Prometheus text at the given path, JSON snapshot as a sibling
+        from repro.obs import write_prometheus
+        write_prometheus(engine.registry, args.metrics_path)
+        with open(args.metrics_path + ".json", "w") as f:
+            json.dump(engine.metrics(), f, indent=2, sort_keys=True,
+                      default=float)
+        print(f"[serve] metrics written to {args.metrics_path} (+.json)")
 
     order = np.argsort(attrs, kind="stable")
     gt_r, _ = ground_truth(vecs[order], attrs[order], qv, ranges, args.k)
@@ -116,6 +133,13 @@ def main(argv=None):
                          "persist it on shutdown")
     ap.add_argument("--cache-mb", type=int, default=0,
                     help="result-cache byte budget in MiB (0 = no cache)")
+    ap.add_argument("--metrics-path", default="",
+                    help="write the final metrics snapshot here on shutdown "
+                         "(Prometheus text; JSON sibling at <path>.json)")
+    ap.add_argument("--log-interval", type=float, default=0.0,
+                    help="seconds between one-line stats logs (0 = off)")
+    ap.add_argument("--trace-sample-every", type=int, default=0,
+                    help="attach a QueryTrace to every Nth batch (0 = off)")
     ap.add_argument("--new-tokens", type=int, default=16)
     args = ap.parse_args(argv)
     if args.mode == "rfann":

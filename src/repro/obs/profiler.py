@@ -1,0 +1,50 @@
+"""``jax.profiler`` integration: host-span annotations + trace capture.
+
+``annotate(name)`` wraps a host-side region in a
+``jax.profiler.TraceAnnotation`` so device profiles (captured with
+``device_trace`` / ``make profile``) line up with the serve path's own
+span names — the kernel dispatch sites in ``repro.search.substrate`` use
+``rnsg.scan_dispatch`` / ``rnsg.beam_dispatch`` / ``rnsg.gather`` style
+names.  When no profiler session is active a ``TraceAnnotation`` is a few
+nanoseconds of overhead, so the annotations stay on unconditionally; if
+the running jax build lacks the profiler entirely, everything degrades to
+no-ops instead of failing.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager, nullcontext
+
+try:                                    # profiler present in jax >= 0.3
+    from jax.profiler import TraceAnnotation as _TraceAnnotation
+except Exception:                       # pragma: no cover - stub builds
+    _TraceAnnotation = None
+
+
+def annotate(name: str):
+    """Context manager marking a host region in the profiler timeline."""
+    if _TraceAnnotation is None:        # pragma: no cover - stub builds
+        return nullcontext()
+    return _TraceAnnotation(name)
+
+
+@contextmanager
+def device_trace(log_dir: str):
+    """Capture a ``jax.profiler`` trace (TensorBoard format) around a block.
+
+    No-op (with a warning) when the profiler is unavailable, so callers —
+    ``make profile`` / ``tools/profile_capture.py`` — never hard-fail in a
+    stripped container."""
+    try:
+        import jax.profiler as _prof
+        _prof.start_trace(log_dir)
+        started = True
+    except Exception as e:              # pragma: no cover - stub builds
+        import warnings
+        warnings.warn(f"jax profiler unavailable ({e}); capturing nothing")
+        started = False
+    try:
+        yield
+    finally:
+        if started:
+            import jax.profiler as _prof
+            _prof.stop_trace()

@@ -34,6 +34,8 @@ class CostModel:
         self._beam_obs_w: Dict[int, int] = {}   # observations per beam width
         self.decay = float(decay)
         self.beam_obs = 0
+        self.scan_wall_obs = 0                  # observe_wall feeds per kind
+        self.beam_wall_obs = 0
         self._scan_us: Optional[float] = None    # wall us per scanned row
         self._beam_us: Optional[float] = None    # wall us per beam distance
 
@@ -87,9 +89,11 @@ class CostModel:
             return
         per_unit = seconds * 1e6 / nq / units_per_query
         if strategy == "scan":
+            self.scan_wall_obs += 1
             self._scan_us = per_unit if self._scan_us is None else \
                 self.decay * self._scan_us + (1.0 - self.decay) * per_unit
         else:
+            self.beam_wall_obs += 1
             self._beam_us = per_unit if self._beam_us is None else \
                 self.decay * self._beam_us + (1.0 - self.decay) * per_unit
         if self._scan_us and self._beam_us:
@@ -126,6 +130,9 @@ class CostModel:
                     ndist_per_ef_bw={w: round(v, 2)
                                      for w, v in self._ndist_per_ef.items()},
                     beam_obs=self.beam_obs,
+                    beam_obs_bw=dict(self._beam_obs_w),
+                    scan_wall_obs=self.scan_wall_obs,
+                    beam_wall_obs=self.beam_wall_obs,
                     scan_us=self._scan_us, beam_us=self._beam_us)
 
     # -------------------------------------------------------- persistence
@@ -141,6 +148,8 @@ class CostModel:
                     beam_obs_bw={str(w): c
                                  for w, c in self._beam_obs_w.items()},
                     decay=self.decay, beam_obs=self.beam_obs,
+                    scan_wall_obs=self.scan_wall_obs,
+                    beam_wall_obs=self.beam_wall_obs,
                     scan_us=self._scan_us, beam_us=self._beam_us)
 
     def load_state_dict(self, state: dict) -> None:
@@ -157,5 +166,8 @@ class CostModel:
             self._beam_obs_w = {1: self.beam_obs} if self.beam_obs else {}
         else:
             self._beam_obs_w = {int(w): int(c) for w, c in obs_bw.items()}
+        # pre-observability files carry no wall-obs counts: default 0
+        self.scan_wall_obs = int(state.get("scan_wall_obs", 0))
+        self.beam_wall_obs = int(state.get("beam_wall_obs", 0))
         self._scan_us = state.get("scan_us")
         self._beam_us = state.get("beam_us")

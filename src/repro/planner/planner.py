@@ -91,12 +91,13 @@ class QueryPlanner:
                                                  beam_width)
         return SCAN if scan_cost <= beam_cost else BEAM
 
-    def choose_strategy_batch(self, lens: np.ndarray, *, k: int, ef: int,
-                              beam_width: int = 1) -> np.ndarray:
-        """Vectorized ``choose_strategy``: (Q,) lengths -> (Q,) int8 strategy
-        vector (``SCAN``/``BEAM``).  Pure numpy over the whole batch — this
-        is the host-side half of mesh dispatch, where the strategy vector is
-        computed once and passed into ``shard_map`` as a replicated operand."""
+    def predict_costs(self, lens: np.ndarray, *, k: int, ef: int,
+                      beam_width: int = 1) -> Tuple[np.ndarray, np.ndarray]:
+        """(Q,) lengths -> per-query (scan_cost, beam_cost) in beam distance
+        units, from the current calibrated model.  This is the exact pricing
+        ``choose_strategy_batch`` routes on — also recorded into the plan
+        span of traced requests so "what did the planner see?" is
+        answerable after the fact."""
         lens = np.asarray(lens, np.int64)
         buckets = buckets_np(lens, min_bucket=self.min_bucket,
                              max_bucket=self.max_bucket)
@@ -105,6 +106,17 @@ class QueryPlanner:
         beam_cost = (self.cost.beam_unit *
                      self.cost.ndist_per_ef_at(beam_width) *
                      ef_bucket_np(lens, k, ef).astype(np.float64))
+        return scan_cost, beam_cost
+
+    def choose_strategy_batch(self, lens: np.ndarray, *, k: int, ef: int,
+                              beam_width: int = 1) -> np.ndarray:
+        """Vectorized ``choose_strategy``: (Q,) lengths -> (Q,) int8 strategy
+        vector (``SCAN``/``BEAM``).  Pure numpy over the whole batch — this
+        is the host-side half of mesh dispatch, where the strategy vector is
+        computed once and passed into ``shard_map`` as a replicated operand."""
+        lens = np.asarray(lens, np.int64)
+        scan_cost, beam_cost = self.predict_costs(lens, k=k, ef=ef,
+                                                  beam_width=beam_width)
         eligible = lens <= self.max_scan_len
         use_scan = (eligible & (scan_cost <= beam_cost)) | (lens <= 0) \
             | (lens <= k)                  # tiny slices: scan is exact & free

@@ -200,7 +200,9 @@ class SearchCache:
                 miss.append(i)
             else:
                 dups[i] = p
-        self.dedup_hits += len(dups)
+        if dups:                    # engine dispatch + direct callers may
+            with self._lock:        # split concurrently: count under lock
+                self.dedup_hits += len(dups)
         return keys, hit_rows, np.asarray(miss, np.int64), dups
 
     def store_batch(self, keys: List[Tuple], res: SearchResult,

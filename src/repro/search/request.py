@@ -7,7 +7,7 @@ migrate to attribute access incrementally.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 import numpy as np
 
@@ -29,6 +29,11 @@ class SearchRequest:
               request performs (1 = the legacy single-node expansion; B>1
               expands the best B candidates per hop — see
               ``repro.core.beam``).
+    trace   : optional ``repro.obs.QueryTrace``.  When attached, every
+              stage that touches the request appends a wall-timed span
+              (resolve / plan / dispatch / stitch) and the trace comes back
+              on the ``SearchResult``.  ``None`` (the default) keeps the
+              hot path to a single ``is None`` check.
     """
     queries: np.ndarray
     lo: np.ndarray
@@ -38,6 +43,7 @@ class SearchRequest:
     strategy: str = "graph"
     use_kernel: bool = False
     beam_width: int = 1
+    trace: Optional[Any] = None
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
@@ -50,10 +56,13 @@ class SearchRequest:
 @dataclass
 class SearchResult:
     """ids: (Q, k) original corpus ids (-1 padded); dists: (Q, k) squared L2
-    (+inf padded); stats: per-query hops/ndist plus routing info."""
+    (+inf padded); stats: per-query hops/ndist plus routing info; trace:
+    the request's ``QueryTrace`` (when one was attached), with every span
+    the path recorded."""
     ids: np.ndarray
     dists: np.ndarray
     stats: Dict[str, Any] = field(default_factory=dict)
+    trace: Optional[Any] = None
 
     # tuple compatibility ------------------------------------------------
     def __iter__(self):
@@ -66,8 +75,10 @@ class SearchResult:
         return 3
 
     def row(self, i: int) -> "SearchResult":
-        """Per-request slice (engine futures resolve to these)."""
+        """Per-request slice (engine futures resolve to these).  The batch
+        trace rides along on every row — spans are batch-scoped."""
         return SearchResult(self.ids[i], self.dists[i],
                             {k: v[i] for k, v in self.stats.items()
                              if isinstance(v, np.ndarray) and v.ndim >= 1
-                             and len(v) == len(self.ids)})
+                             and len(v) == len(self.ids)},
+                            trace=self.trace)

@@ -59,6 +59,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.beam import beam_search_batch
 from repro.kernels.ops import range_scan
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.profiler import annotate
+from repro.obs.trace import maybe_span
 from repro.parallel.sharding import shard_map_compat
 from repro.planner.bucketing import (ROW_TILE, bucket_for_len, next_pow2,
                                      pad_pow2, window_rows)
@@ -107,7 +110,8 @@ class SearchSubstrate:
                  planner: Optional[QueryPlanner] = None,
                  use_kernel: bool = False,
                  cache: Optional[SearchCache] = None,
-                 cache_ns=None):
+                 cache_ns=None,
+                 metrics: Optional[MetricsRegistry] = None):
         self._vecs = jnp.asarray(vecs, jnp.float32)
         self._nbrs = jnp.asarray(nbrs)
         self._rmq = jnp.asarray(rmq)
@@ -117,6 +121,7 @@ class SearchSubstrate:
         self.use_kernel = use_kernel
         self.cache = cache
         self.cache_ns = cache_ns    # distinguishes shards sharing one cache
+        self.metrics = metrics      # optional MetricsRegistry (obs layer)
         n, d = self._vecs.shape
         self.n, self.d = n, d
         self.tb = ROW_TILE          # must match the range_scan kernel tile
@@ -153,25 +158,50 @@ class SearchSubstrate:
         are clean enough to calibrate on.  Cache hits are resolved here —
         a fully-hit request performs no device work at all.  ``q_digests``
         are optional precomputed ``hash_query`` values (the distributed
-        local path hashes each query once, not once per shard)."""
+        local path hashes each query once, not once per shard).
+
+        A ``req.trace`` collects plan / dispatch / stitch spans (the stitch
+        span on a deferred dispatch includes the device block); the
+        installed ``MetricsRegistry`` (when any) counts routed queries,
+        cache outcomes and pad waste, and observes dispatch wall
+        histograms."""
         qv = np.asarray(req.queries, np.float32)
         lo = np.asarray(req.lo, np.int64)
         hi = np.asarray(req.hi, np.int64)
         k, ef, bw = int(req.k), int(req.ef), int(req.beam_width)
+        tr = req.trace
+        met = self.metrics
+        nq = len(qv)
+        if met is not None and nq:
+            met.counter("queries_total").inc(nq)
         cache = self.cache
-        if cache is None or len(qv) == 0:
+        cache_info = dict(cache_enabled=cache is not None,
+                          cache_hits=0, cache_misses=nq, batch_dedup=0)
+        if cache is None or nq == 0:
             fin = self._dispatch_all(qv, lo, hi, k, ef, req.strategy,
-                                     req.use_kernel, defer, bw)
-            return PendingSearch(fin)
+                                     req.use_kernel, defer, bw,
+                                     trace=tr, cache_info=cache_info)
+            return PendingSearch(self._stitched(fin, tr))
         epoch = cache.epoch             # fences stores vs invalidate()
         keys, hit_rows, miss, dups = cache.split(
             qv, lo, hi, k, ef, req.strategy, req.use_kernel,
             ns=self.cache_ns, digests=q_digests, beam_width=bw)
+        cache_info.update(cache_hits=len(hit_rows), cache_misses=len(miss),
+                          batch_dedup=len(dups))
+        if met is not None:
+            met.counter("cache_hit_rows_total").inc(len(hit_rows))
+            met.counter("cache_miss_rows_total").inc(len(miss))
+            if dups:
+                met.counter("cache_dedup_rows_total").inc(len(dups))
         if len(miss) == 0:
-            return PendingSearch(
-                lambda: cache.assemble(len(qv), k, hit_rows, None, miss))
+            if tr is not None:          # fully hit: no device work at all
+                tr.add_span("dispatch", dispatched=0, ns=self.cache_ns,
+                            **cache_info)
+            return PendingSearch(self._stitched(
+                lambda: cache.assemble(nq, k, hit_rows, None, miss), tr))
         fin = self._dispatch_all(qv[miss], lo[miss], hi[miss], k, ef,
-                                 req.strategy, req.use_kernel, defer, bw)
+                                 req.strategy, req.use_kernel, defer, bw,
+                                 trace=tr, cache_info=cache_info)
         miss_keys = [keys[i] for i in miss]
 
         def finalize() -> SearchResult:
@@ -180,22 +210,59 @@ class SearchSubstrate:
             if not hit_rows and not dups:
                 miss_res.stats["cache_hits"] = 0
                 return miss_res
-            return cache.assemble(len(qv), k, hit_rows, miss_res, miss,
+            return cache.assemble(nq, k, hit_rows, miss_res, miss,
                                   dups)
-        return PendingSearch(finalize)
+        return PendingSearch(self._stitched(finalize, tr))
+
+    def _stitched(self, fin: Callable[[], SearchResult],
+                  tr) -> Callable[[], SearchResult]:
+        """Wrap a finalize closure with the stitch span (block + assembly +
+        id remap; on deferred dispatches the block time includes sibling
+        device work) and attach the trace to the result.  Identity when
+        neither tracing nor metrics are on — the hot path is unchanged."""
+        met = self.metrics
+        if tr is None and met is None:
+            return fin
+
+        def finalize() -> SearchResult:
+            t0 = time.perf_counter()
+            with maybe_span(tr, "stitch", ns=self.cache_ns):
+                res = fin()
+            if met is not None:
+                met.histogram("stitch_ms").observe(
+                    (time.perf_counter() - t0) * 1e3)
+            if tr is not None:
+                res.trace = tr
+            return res
+        return finalize
 
     # ----------------------------------------------------------- dispatch
     def _dispatch_all(self, qv, lo, hi, k, ef, strategy, use_kernel,
-                      defer: bool,
-                      beam_width: int = 1) -> Callable[[], SearchResult]:
+                      defer: bool, beam_width: int = 1, trace=None,
+                      cache_info=None) -> Callable[[], SearchResult]:
         """Enqueue the uncached work for one (sub-)batch; the returned
-        closure blocks, stitches, and remaps rank ids to original ids."""
-        if strategy == "graph":
-            fin = self._dispatch_graph(qv, lo, hi, k, ef, use_kernel,
-                                       beam_width)
-        else:
-            fin = self._dispatch_planned(qv, lo, hi, k, ef, strategy,
-                                         use_kernel, defer, beam_width)
+        closure blocks, stitches, and remaps rank ids to original ids.
+        The dispatch span covers the enqueue (plus, on the ``defer=False``
+        path, the per-partition blocks); the plan span is recorded inside
+        it, so spans land in resolve -> plan -> dispatch -> stitch order."""
+        met = self.metrics
+        with maybe_span(trace, "dispatch") as sp:
+            sp.attrs.update(cache_info or {})
+            sp.attrs.update(strategy_mode=strategy, use_kernel=use_kernel,
+                            beam_width=beam_width, ns=self.cache_ns,
+                            dispatched=len(qv), deferred=defer)
+            if strategy == "graph":
+                if trace is not None:
+                    trace.add_span("plan", strategy_mode="graph",
+                                   chosen="graph", beam_width=beam_width)
+                if met is not None and len(qv):
+                    met.counter("graph_queries_total").inc(len(qv))
+                fin = self._dispatch_graph(qv, lo, hi, k, ef, use_kernel,
+                                           beam_width)
+            else:
+                fin = self._dispatch_planned(qv, lo, hi, k, ef, strategy,
+                                             use_kernel, defer, beam_width,
+                                             trace=trace, span=sp)
 
         def finalize() -> SearchResult:
             ids, dists, stats = fin()
@@ -211,29 +278,60 @@ class SearchSubstrate:
         hi_j = jnp.asarray(hi)
         entry = resolve.select_entry(self._rmq, self._dist_c, lo_j, hi_j,
                                      self.n)
-        ids, dists, st = beam_search_batch(
-            self._vecs, self._nbrs, qj, lo_j, hi_j, entry,
-            k=k, ef=max(ef, k), use_kernel=use_kernel,
-            beam_width=beam_width)
+        t0 = time.perf_counter()
+        with annotate("rnsg.graph_beam_dispatch"):
+            ids, dists, st = beam_search_batch(
+                self._vecs, self._nbrs, qj, lo_j, hi_j, entry,
+                k=k, ef=max(ef, k), use_kernel=use_kernel,
+                beam_width=beam_width)
+        met = self.metrics
 
         def finalize():
             st_h = jax.tree.map(np.asarray, st)
             st_h["strategy"] = np.ones(len(qv), np.int8)     # all graph/beam
             st_h["scan_frac"] = 0.0
+            if met is not None:
+                met.histogram("graph_dispatch_ms").observe(
+                    (time.perf_counter() - t0) * 1e3)
             return np.asarray(ids), np.asarray(dists), st_h
         return finalize
 
     # ---------------------------------------------------- planned strategies
     def _dispatch_planned(self, qv, lo, hi, k, ef, mode, use_kernel,
-                          defer: bool, beam_width: int = 1):
+                          defer: bool, beam_width: int = 1, trace=None,
+                          span=None):
         """Routing policy: plan the batch, dispatch each fixed-shape
         partition, stitch back in request order.  ``defer=False`` blocks
         each partition before dispatching the next (today's calibrated
         loop); ``defer=True`` enqueues them all and blocks only in the
         returned closure."""
         q = len(qv)
-        plan = self.planner.plan_batch(lo, hi, k=k, ef=ef, mode=mode,
-                                       beam_width=beam_width)
+        met = self.metrics
+        if trace is None:
+            plan = self.planner.plan_batch(lo, hi, k=k, ef=ef, mode=mode,
+                                           beam_width=beam_width)
+        else:
+            with trace.span("plan") as psp:
+                plan = self.planner.plan_batch(lo, hi, k=k, ef=ef,
+                                               mode=mode,
+                                               beam_width=beam_width)
+                lens = np.clip(hi - lo + 1, 0, None)
+                sc, bc = self.planner.predict_costs(lens, k=k, ef=ef,
+                                                    beam_width=beam_width)
+                psp.attrs.update(
+                    strategy_mode=mode, strategy=plan.strategy.copy(),
+                    scan_frac=plan.scan_frac, beam_width=beam_width,
+                    partitions=[p.signature for p in plan.partitions],
+                    predicted_scan_units=sc, predicted_beam_units=bc)
+        pad_rows = sum(p.pad_q - len(p.indices) for p in plan.partitions)
+        if met is not None and q:
+            n_scan = int((plan.strategy == SCAN).sum())
+            met.counter("scan_routed_total").inc(n_scan)
+            met.counter("beam_routed_total").inc(q - n_scan)
+            if pad_rows:
+                met.counter("pad_rows_total").inc(pad_rows)
+        if span is not None:
+            span.attrs["pad_rows"] = pad_rows
         fins = []
         for part in plan.partitions:
             if part.kind == "scan":
@@ -296,15 +394,19 @@ class SearchSubstrate:
         warm = sig in self._warm
         self._warm.add(sig)
         t0 = time.perf_counter()
-        ids, d = range_scan(self._scan_corpus(), jnp.asarray(starts),
-                            jnp.asarray(lens), jnp.asarray(qp),
-                            bucket=bucket, k=k)
+        with annotate("rnsg.scan_dispatch"):
+            ids, d = range_scan(self._scan_corpus(), jnp.asarray(starts),
+                                jnp.asarray(lens), jnp.asarray(qp),
+                                bucket=bucket, k=k)
         units = window_rows(bucket, self.tb)
+        met = self.metrics
 
         def finalize():
             ids_h = np.asarray(ids)[:nq]
             d_h = np.asarray(d)[:nq]
             dt = time.perf_counter() - t0
+            if met is not None:
+                met.histogram("scan_dispatch_ms").observe(dt * 1e3)
             if calibrate_wall and warm:
                 # the dispatch did pad_q windows of work, not nq: normalize
                 # by pad_q so calibration measures the kernel, not the
@@ -332,18 +434,22 @@ class SearchSubstrate:
         warm = sig in self._warm
         self._warm.add(sig)
         t0 = time.perf_counter()
-        ids, d, st = beam_search_batch(
-            self._vecs, self._nbrs, qp,
-            jnp.asarray(lo[pad].astype(np.int32)),
-            jnp.asarray(hi[pad].astype(np.int32)),
-            entry, k=k, ef=max(ef, k), use_kernel=use_kernel,
-            beam_width=beam_width)
+        with annotate("rnsg.beam_dispatch"):
+            ids, d, st = beam_search_batch(
+                self._vecs, self._nbrs, qp,
+                jnp.asarray(lo[pad].astype(np.int32)),
+                jnp.asarray(hi[pad].astype(np.int32)),
+                entry, k=k, ef=max(ef, k), use_kernel=use_kernel,
+                beam_width=beam_width)
+        met = self.metrics
 
         def finalize():
             ids_h = np.asarray(ids)[:nq]
             d_h = np.asarray(d)[:nq]
             st_h = {kk: np.asarray(vv)[:nq] for kk, vv in st.items()}
             dt = time.perf_counter() - t0
+            if met is not None:
+                met.histogram("beam_dispatch_ms").observe(dt * 1e3)
             if calibrate:
                 self.planner.cost.update_beam(float(st_h["ndist"].mean()), ef,
                                               beam_width=beam_width)
@@ -479,7 +585,8 @@ class MeshSubstrate:
     def __init__(self, mesh, axis: str, vecs, nbrs, rmq, dist_c, order,
                  rank0, *, planner: Optional[QueryPlanner] = None,
                  cache: Optional[SearchCache] = None,
-                 calibrate: bool = True):
+                 calibrate: bool = True,
+                 metrics: Optional[MetricsRegistry] = None):
         self.mesh, self.axis = mesh, axis
         self._vecs = jnp.asarray(vecs, jnp.float32)      # (S, per, d)
         self._nbrs = jnp.asarray(nbrs)
@@ -497,6 +604,7 @@ class MeshSubstrate:
         self.planner = planner
         self.cache = cache
         self.calibrate = calibrate
+        self.metrics = metrics      # optional MetricsRegistry (obs layer)
         self._x_pad = None          # padded scan corpus, built on first scan
         self._fns: Dict[Tuple, object] = {}
 
@@ -533,58 +641,140 @@ class MeshSubstrate:
     def run(self, req: SearchRequest) -> SearchResult:
         """Dispatch one request on the mesh; result ids are original corpus
         ids, already merged across shards (replicated).  With a cache
-        installed, hit rows skip the mesh dispatch entirely."""
+        installed, hit rows skip the mesh dispatch entirely.  A ``req.trace``
+        collects plan / dispatch / stitch spans (the cross-shard scatter +
+        merge run *inside* the traced body, so the host-side stitch span
+        covers output conversion and cache assembly)."""
         qv = np.asarray(req.queries, np.float32)
         lo = np.asarray(req.lo, np.int64)
         hi = np.asarray(req.hi, np.int64)
         k, ef = int(req.k), max(int(req.ef), int(req.k))
         bw = int(req.beam_width)
+        tr = req.trace
+        met = self.metrics
         nq = len(qv)
         if nq == 0:
             return SearchResult(np.zeros((0, k), np.int32),
                                 np.zeros((0, k), np.float32),
                                 {"strategy": np.zeros(0, np.int8),
-                                 "scan_frac": 0.0})
+                                 "scan_frac": 0.0}, trace=tr)
+        if met is not None:
+            met.counter("queries_total").inc(nq)
+            met.counter("mesh_queries_total").inc(nq)
         cache = self.cache
+        cache_info = dict(cache_enabled=cache is not None,
+                          cache_hits=0, cache_misses=nq, batch_dedup=0)
         if cache is None:
-            return self._run_uncached(qv, lo, hi, k, ef, req.strategy, bw)
+            res = self._run_uncached(qv, lo, hi, k, ef, req.strategy, bw,
+                                     trace=tr, cache_info=cache_info)
+            res.trace = tr
+            return res
         epoch = cache.epoch             # fences stores vs invalidate()
         keys, hit_rows, miss, dups = cache.split(qv, lo, hi, k, ef,
                                                  req.strategy, ns="mesh",
                                                  beam_width=bw)
+        cache_info.update(cache_hits=len(hit_rows), cache_misses=len(miss),
+                          batch_dedup=len(dups))
+        if met is not None:
+            met.counter("cache_hit_rows_total").inc(len(hit_rows))
+            met.counter("cache_miss_rows_total").inc(len(miss))
+            if dups:
+                met.counter("cache_dedup_rows_total").inc(len(dups))
         if len(miss) == 0:
-            return cache.assemble(nq, k, hit_rows, None, miss)
+            if tr is not None:          # fully hit: no mesh dispatch at all
+                tr.add_span("dispatch", dispatched=0, ns="mesh",
+                            **cache_info)
+            with maybe_span(tr, "stitch", ns="mesh"):
+                res = cache.assemble(nq, k, hit_rows, None, miss)
+            res.trace = tr
+            return res
         miss_res = self._run_uncached(qv[miss], lo[miss], hi[miss], k, ef,
-                                      req.strategy, bw)
+                                      req.strategy, bw, trace=tr,
+                                      cache_info=cache_info)
         cache.store_batch([keys[i] for i in miss], miss_res, epoch=epoch)
         if not hit_rows and not dups:
             miss_res.stats["cache_hits"] = 0
+            miss_res.trace = tr
             return miss_res
-        return cache.assemble(nq, k, hit_rows, miss_res, miss, dups)
+        with maybe_span(tr, "stitch", ns="mesh"):
+            res = cache.assemble(nq, k, hit_rows, miss_res, miss, dups)
+        res.trace = tr
+        return res
+
+    def _shard_clip_widths(self, lo, hi) -> np.ndarray:
+        """(S, Q) shard-local clipped interval widths — the dispatch-span
+        view of how each query's global interval lands on the mesh."""
+        w = []
+        for s in range(self.n_shards):
+            slo, shi = resolve.clip_interval(lo, hi, s * self.per, self.per)
+            w.append(np.clip(shi.astype(np.int64) - slo + 1, 0, None))
+        return np.stack(w)
 
     def _run_uncached(self, qv, lo, hi, k: int, ef: int, mode: str,
-                      beam_width: int = 1) -> SearchResult:
+                      beam_width: int = 1, trace=None,
+                      cache_info=None) -> SearchResult:
         nq = len(qv)
+        met = self.metrics
         if mode == "graph":
-            ids, dists = self._call_graph(qv, lo, hi, k, ef, calibrate=False,
-                                          beam_width=beam_width)
-            return SearchResult(ids, dists,
-                                {"strategy": np.ones(nq, np.int8),
-                                 "scan_frac": 0.0})
-        strategy, lens_eff = self.plan_strategies(lo, hi, k=k, ef=ef,
-                                                  mode=mode,
-                                                  beam_width=beam_width)
+            if trace is not None:
+                trace.add_span("plan", strategy_mode="graph", chosen="graph",
+                               beam_width=beam_width)
+            if met is not None:
+                met.counter("graph_queries_total").inc(nq)
+            with maybe_span(trace, "dispatch") as sp:
+                sp.attrs.update(cache_info or {})
+                sp.attrs.update(strategy_mode=mode, ns="mesh",
+                                dispatched=nq, beam_width=beam_width,
+                                shard_clip_widths=self._shard_clip_widths(
+                                    lo, hi) if trace is not None else None)
+                ids, dists = self._call_graph(qv, lo, hi, k, ef,
+                                              calibrate=False,
+                                              beam_width=beam_width)
+            with maybe_span(trace, "stitch", ns="mesh"):
+                res = SearchResult(ids, dists,
+                                   {"strategy": np.ones(nq, np.int8),
+                                    "scan_frac": 0.0})
+            return res
+        if trace is None:
+            strategy, lens_eff = self.plan_strategies(lo, hi, k=k, ef=ef,
+                                                      mode=mode,
+                                                      beam_width=beam_width)
+        else:
+            with trace.span("plan") as psp:
+                strategy, lens_eff = self.plan_strategies(
+                    lo, hi, k=k, ef=ef, mode=mode, beam_width=beam_width)
+                sc, bc = self.planner.predict_costs(lens_eff, k=k, ef=ef,
+                                                    beam_width=beam_width)
+                psp.attrs.update(strategy_mode=mode,
+                                 strategy=strategy.copy(),
+                                 lens_eff=lens_eff.copy(),
+                                 beam_width=beam_width,
+                                 scan_frac=float((strategy == SCAN).mean()),
+                                 predicted_scan_units=sc,
+                                 predicted_beam_units=bc)
         scan_idx = np.flatnonzero(strategy == SCAN)
         beam_idx = np.flatnonzero(strategy == BEAM)
+        if met is not None:
+            met.counter("scan_routed_total").inc(len(scan_idx))
+            met.counter("beam_routed_total").inc(len(beam_idx))
         if len(scan_idx) == 0:
             # uniform-beam batch: the planned body would degenerate to the
             # graph body plus pow2 padding and a scatter — dispatch the graph
             # fn directly (same ef, same merge, bit-identical results)
-            ids, dists = self._call_graph(qv, lo, hi, k, ef,
-                                          calibrate=self.calibrate,
-                                          beam_width=beam_width)
-            return SearchResult(ids, dists,
-                                {"strategy": strategy, "scan_frac": 0.0})
+            with maybe_span(trace, "dispatch") as sp:
+                sp.attrs.update(cache_info or {})
+                sp.attrs.update(strategy_mode=mode, ns="mesh",
+                                dispatched=nq, beam_width=beam_width,
+                                uniform_beam_fast_path=True,
+                                shard_clip_widths=self._shard_clip_widths(
+                                    lo, hi) if trace is not None else None)
+                ids, dists = self._call_graph(qv, lo, hi, k, ef,
+                                              calibrate=self.calibrate,
+                                              beam_width=beam_width)
+            with maybe_span(trace, "stitch", ns="mesh"):
+                res = SearchResult(ids, dists,
+                                   {"strategy": strategy, "scan_frac": 0.0})
+            return res
         # scan_idx is non-empty past the fast path; one shared bucket covers
         # every scan query's widest shard-local clip (never truncates)
         cap = next_pow2(self.per)
@@ -601,12 +791,28 @@ class MeshSubstrate:
                                         lane_pad=True)
         beam_ops = self._group_operands(qv, lo, hi, beam_idx, pad_b, nq,
                                         lane_pad=False)
+        pad_rows = (pad_s - len(scan_idx)) + (pad_b - len(beam_idx))
+        if met is not None and pad_rows:
+            met.counter("pad_rows_total").inc(pad_rows)
         t0 = time.perf_counter()
-        ids, dists, nd_g = fn(self._scan_corpus(), self._vecs, self._nbrs,
-                              self._rmq, self._dist_c, self._order,
-                              self._rank0, *scan_ops, *beam_ops)
-        ids = np.asarray(ids)
-        dists = np.asarray(dists)
+        with maybe_span(trace, "dispatch") as sp:
+            sp.attrs.update(cache_info or {})
+            sp.attrs.update(strategy_mode=mode, ns="mesh", dispatched=nq,
+                            beam_width=beam_width, warm=warm, bucket=bucket,
+                            pad_scan=pad_s, pad_beam=pad_b,
+                            pad_rows=pad_rows,
+                            shard_clip_widths=self._shard_clip_widths(
+                                lo, hi) if trace is not None else None)
+            with annotate("rnsg.mesh_planned_dispatch"):
+                ids, dists, nd_g = fn(self._scan_corpus(), self._vecs,
+                                      self._nbrs, self._rmq, self._dist_c,
+                                      self._order, self._rank0, *scan_ops,
+                                      *beam_ops)
+                ids = np.asarray(ids)
+                dists = np.asarray(dists)
+        if met is not None:
+            met.histogram("mesh_dispatch_ms").observe(
+                (time.perf_counter() - t0) * 1e3)
         if self.calibrate and warm:
             # one fused traced step: attribute the wall time across the two
             # groups proportionally to their predicted unit costs.  Scan
@@ -628,8 +834,11 @@ class MeshSubstrate:
                 self.planner.cost.update_beam(nd_mean, ef,
                                               beam_width=beam_width)
         scan_frac = len(scan_idx) / nq
-        return SearchResult(ids, dists,
-                            {"strategy": strategy, "scan_frac": scan_frac})
+        with maybe_span(trace, "stitch", ns="mesh"):
+            res = SearchResult(ids, dists,
+                               {"strategy": strategy,
+                                "scan_frac": scan_frac})
+        return res
 
     def _call_graph(self, qv, lo, hi, k: int, ef: int, *, calibrate: bool,
                     beam_width: int = 1):
@@ -639,12 +848,17 @@ class MeshSubstrate:
         warm = ("graph", k, max(ef, k), beam_width) in self._fns
         fn = self.graph_fn(k, ef, beam_width)
         t0 = time.perf_counter()
-        ids, dists, nd_g = fn(self._vecs, self._nbrs, self._rmq, self._dist_c,
-                              self._order, self._rank0, jnp.asarray(qv),
-                              jnp.asarray(np.asarray(lo).astype(np.int32)),
-                              jnp.asarray(np.asarray(hi).astype(np.int32)))
-        ids = np.asarray(ids)
-        dists = np.asarray(dists)
+        with annotate("rnsg.mesh_graph_dispatch"):
+            ids, dists, nd_g = fn(self._vecs, self._nbrs, self._rmq,
+                                  self._dist_c, self._order, self._rank0,
+                                  jnp.asarray(qv),
+                                  jnp.asarray(np.asarray(lo).astype(np.int32)),
+                                  jnp.asarray(np.asarray(hi).astype(np.int32)))
+            ids = np.asarray(ids)
+            dists = np.asarray(dists)
+        if self.metrics is not None:
+            self.metrics.histogram("mesh_dispatch_ms").observe(
+                (time.perf_counter() - t0) * 1e3)
         if calibrate and warm:
             # both feeds normalize by the NON-EMPTY row count: forced-beam
             # batches may carry empty intervals (the local path routes

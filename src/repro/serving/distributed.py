@@ -85,6 +85,7 @@ class DistributedRFANN:
         self._subs: Optional[list] = None
         self._mesh_sub: Optional[MeshSubstrate] = None
         self._cache: Optional[SearchCache] = None
+        self._metrics = None
 
     @property
     def index_bytes(self) -> int:
@@ -99,7 +100,8 @@ class DistributedRFANN:
                 SearchSubstrate(self.vecs[s], self.nbrs[s], self.rmq[s],
                                 self.dist_c[s], np.asarray(self.order[s]),
                                 np.asarray(self.attrs[s]),
-                                cache=self._cache, cache_ns=s)
+                                cache=self._cache, cache_ns=s,
+                                metrics=self._metrics)
                 for s in range(self.n_shards)]
         return self._subs
 
@@ -110,7 +112,8 @@ class DistributedRFANN:
             assert self.mesh is not None, "mesh execution needs mesh="
             self._mesh_sub = MeshSubstrate(
                 self.mesh, self.axis, self.vecs, self.nbrs, self.rmq,
-                self.dist_c, self.order, self.rank0, cache=self._cache)
+                self.dist_c, self.order, self.rank0, cache=self._cache,
+                metrics=self._metrics)
         return self._mesh_sub
 
     def install_cache(self, cache: Optional[SearchCache]) -> None:
@@ -124,8 +127,19 @@ class DistributedRFANN:
         if self._mesh_sub is not None:
             self._mesh_sub.cache = cache
 
+    def install_metrics(self, metrics) -> None:
+        """Install (or remove, with ``None``) a ``MetricsRegistry`` on every
+        execution path — already-built shard substrates and the mesh
+        substrate pick it up immediately, lazy ones at construction."""
+        self._metrics = metrics
+        if self._subs is not None:
+            for sub in self._subs:
+                sub.metrics = metrics
+        if self._mesh_sub is not None:
+            self._mesh_sub.metrics = metrics
+
     def _search_local(self, qv, lo, hi, *, k: int, ef: int, plan: str,
-                      beam_width: int = 1):
+                      beam_width: int = 1, trace=None):
         """Per-shard substrate dispatch, merged by the same ``merge_topk``
         the mesh path uses — identical ids by construction.  With
         ``async_dispatch`` every shard's work is enqueued before any block
@@ -146,9 +160,12 @@ class DistributedRFANN:
         pending = []
         for s, sub in enumerate(self.substrates):
             slo, shi = clip_interval(lo, hi, s * self.per, self.per)
+            # every shard shares the one trace; its spans are tagged by the
+            # substrate with ns=<shard>, and the blocking loop below drains
+            # shards sequentially so appends never race
             req = SearchRequest(queries=qv, lo=slo, hi=shi,
                                 k=k, ef=ef, strategy=plan,
-                                beam_width=beam_width)
+                                beam_width=beam_width, trace=trace)
             p = sub.dispatch(req, defer=self.async_dispatch,
                              q_digests=digests)
             if not self.async_dispatch:
@@ -163,13 +180,18 @@ class DistributedRFANN:
             hits += int(res.stats.get("cache_hits", 0))
             if "scan_frac" in res.stats:
                 scan_fracs.append(float(res.stats["scan_frac"]))
-        ids, dists = merge_topk(jnp.asarray(all_i), jnp.asarray(all_d), k)
+        from repro.obs import maybe_span
+        with maybe_span(trace, "stitch", ns="merge",
+                        n_shards=self.n_shards) as sp:
+            ids, dists = merge_topk(jnp.asarray(all_i), jnp.asarray(all_d), k)
+            ids, dists = np.asarray(ids), np.asarray(dists)
+            sp.attrs["q"] = q
         stats = {}
         if scan_fracs:
             stats["scan_frac"] = float(np.mean(scan_fracs))
         if self._cache is not None:
             stats["cache_hits"] = int(round(hits / self.n_shards))
-        return np.asarray(ids), np.asarray(dists), stats
+        return ids, dists, stats
 
     # ------------------------------------------------------------------
     def rank_range(self, attr_ranges: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
@@ -180,8 +202,8 @@ class DistributedRFANN:
                              np.asarray(attr_ranges, np.float32))
 
     def search_ranks(self, queries, lo, hi, *, k: int = 10, ef: int = 64,
-                     plan: str = "graph",
-                     beam_width: int = 1) -> SearchResult:
+                     plan: str = "graph", beam_width: int = 1,
+                     trace=None) -> SearchResult:
         """Rank-space entry point (resolve already done): dispatch on the
         mesh path when a mesh is attached, else the (async) local path."""
         qv = np.asarray(queries, np.float32)
@@ -189,18 +211,27 @@ class DistributedRFANN:
         if self.mesh is None:
             ids, dists, stats = self._search_local(qv, lo, hi, k=k, ef=ef,
                                                    plan=plan,
-                                                   beam_width=beam_width)
-            return SearchResult(ids, dists, stats)
+                                                   beam_width=beam_width,
+                                                   trace=trace)
+            return SearchResult(ids, dists, stats, trace=trace)
         return self.mesh_substrate.run(SearchRequest(
             queries=qv, lo=lo, hi=hi, k=k, ef=ef, strategy=plan,
-            beam_width=beam_width))
+            beam_width=beam_width, trace=trace))
 
     def search(self, queries: np.ndarray, attr_ranges: np.ndarray, *,
                k: int = 10, ef: int = 64, plan: str = "graph",
-               beam_width: int = 1) -> Tuple[np.ndarray, np.ndarray]:
-        lo, hi = self.rank_range(attr_ranges)
+               beam_width: int = 1,
+               trace=None) -> Tuple[np.ndarray, np.ndarray]:
+        from repro.obs import maybe_span
+        with maybe_span(trace, "resolve") as sp:
+            lo, hi = self.rank_range(attr_ranges)
+            sp.attrs.update(
+                q=len(np.atleast_2d(queries)), n=len(self.attrs_sorted),
+                interval_widths=np.clip(
+                    np.asarray(hi, np.int64) - np.asarray(lo, np.int64) + 1,
+                    0, None) if trace is not None else None)
         res = self.search_ranks(queries, lo, hi, k=k, ef=ef, plan=plan,
-                                beam_width=beam_width)
+                                beam_width=beam_width, trace=trace)
         return res.ids, res.dists
 
     # ------------------------------------------------------------------

@@ -28,6 +28,17 @@ is restored from it at startup and persisted (atomically: temp file +
 rename) at ``close()`` — a restarted server starts from steady-state
 routing instead of the prior, and a crash mid-shutdown can never leave a
 truncated file behind.
+
+Observability: the engine owns a ``MetricsRegistry`` (``repro.obs``) —
+pass one in to share it, or read the default via :meth:`metrics`.  It is
+installed on the index (and re-installed on ``swap_index``) so substrate
+counters/histograms land in the same snapshot, and the engine itself
+records end-to-end latency/batch-size histograms, queue-depth gauges, and
+pull-side producers for the cache, the cost model, and its own summary.
+``trace_sample_every=N`` attaches a ``QueryTrace`` to every Nth batch
+(resolver times the resolve span, the substrate fills plan/dispatch/stitch)
+and parks the finished trace on :attr:`last_trace`; ``log_interval_s > 0``
+prints a one-line stats summary from the dispatch thread at that cadence.
 """
 from __future__ import annotations
 
@@ -42,6 +53,8 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import MetricsRegistry, QueryTrace, format_stats_line
+
 
 @dataclass
 class EngineStats:
@@ -52,6 +65,7 @@ class EngineStats:
     batches: int = 0
     scan_routed: int = 0
     cache_hits: int = 0
+    dedup_hits: int = 0     # intra-batch duplicate rows served by one dispatch
     reservoir_size: int = 4096
     latencies_ms: List[float] = field(default_factory=list)
     lat_seen: int = 0
@@ -68,12 +82,18 @@ class EngineStats:
                 self.latencies_ms[j] = ms
 
     def summary(self) -> dict:
+        # percentiles from an EMPTY reservoir are reported as 0.0, not a
+        # percentile of a fake zero sample — lat_seen disambiguates
         lat = np.asarray(self.latencies_ms) if self.latencies_ms else np.zeros(1)
         return dict(served=self.served, batches=self.batches,
                     mean_batch=self.served / max(self.batches, 1),
                     scan_frac=self.scan_routed / max(self.served, 1),
                     cache_hit_frac=self.cache_hits / max(self.served, 1),
+                    dedup_hits=self.dedup_hits,
+                    dedup_frac=self.dedup_hits / max(self.served, 1),
+                    lat_seen=self.lat_seen,
                     p50_ms=float(np.percentile(lat, 50)),
+                    p90_ms=float(np.percentile(lat, 90)),
                     p95_ms=float(np.percentile(lat, 95)),
                     p99_ms=float(np.percentile(lat, 99)))
 
@@ -84,7 +104,10 @@ class RFANNEngine:
                  plan: str = "auto", beam_width: int = 1,
                  calibration_path: Optional[str] = None,
                  cache_bytes: int = 0,
-                 pipeline_depth: int = 2):
+                 pipeline_depth: int = 2,
+                 metrics: Optional[MetricsRegistry] = None,
+                 log_interval_s: float = 0.0,
+                 trace_sample_every: int = 0):
         self.index = index
         self.k, self.ef = k, ef
         self.plan = plan
@@ -92,6 +115,12 @@ class RFANNEngine:
         self.max_batch = max_batch
         self.max_wait = max_wait_ms / 1000.0
         self.calibration_path = calibration_path
+        self.registry = metrics if metrics is not None else MetricsRegistry()
+        self.log_interval = float(log_interval_s)
+        self.trace_sample_every = int(trace_sample_every)
+        self.last_trace: Optional[QueryTrace] = None
+        self._batch_seq = 0
+        self._last_log = time.perf_counter()
         if calibration_path and os.path.exists(calibration_path):
             planner = getattr(index, "planner", None)
             if planner is not None:
@@ -113,12 +142,50 @@ class RFANNEngine:
         self._stop = threading.Event()
         self._index_lock = threading.Lock()
         self.stats = EngineStats()
+        # bound the hot-path metric handles once (get-or-create is locked;
+        # the loops below only touch per-metric locks)
+        reg = self.registry
+        self._m_requests = reg.counter("engine_requests_total",
+                                       "requests served end to end")
+        self._m_batches = reg.counter("engine_batches_total",
+                                      "dynamic batches dispatched")
+        self._m_e2e = reg.histogram("engine_e2e_ms",
+                                    "submit -> result wall time (ms)")
+        self._m_batch_size = reg.histogram("engine_batch_size",
+                                           "dynamic batch sizes",
+                                           lo=1.0, hi=8192.0, growth=1.25)
+        self._m_resolve = reg.histogram("engine_resolve_ms",
+                                        "host-side resolve wall time (ms)")
+        self._m_qdepth = reg.gauge("engine_queue_depth",
+                                   "requests waiting to be batched")
+        self._m_hdepth = reg.gauge("engine_handoff_depth",
+                                   "resolved batches waiting for dispatch")
+        if hasattr(index, "install_metrics"):
+            index.install_metrics(reg)
+        if self.cache is not None:
+            reg.register_producer("cache", self.cache.snapshot)
+        reg.register_producer("cost_model", self._cost_snapshot)
+        reg.register_producer("engine", self.stats.summary)
         self._resolver = threading.Thread(target=self._resolve_loop,
                                           daemon=True)
         self._dispatcher = threading.Thread(target=self._dispatch_loop,
                                             daemon=True)
         self._resolver.start()
         self._dispatcher.start()
+
+    # ------------------------------------------------------------------
+    def _cost_snapshot(self) -> dict:
+        """Pull-side cost-model producer — reads the *live* index so a
+        ``swap_index`` transparently switches whose calibration is exported."""
+        planner = getattr(self.index, "planner", None)
+        return planner.cost.snapshot() if planner is not None else {}
+
+    def metrics(self) -> dict:
+        """One JSON-able snapshot: every counter/gauge/histogram (with
+        p50/p90/p99) plus the pull-side sections (``engine``, ``cache``,
+        ``cost_model``).  Prometheus text comes from
+        ``repro.obs.to_prometheus(engine.registry)``."""
+        return self.registry.snapshot()
 
     # ------------------------------------------------------------------
     def submit(self, query: np.ndarray, attr_range: Tuple[float, float]) -> Future:
@@ -144,6 +211,10 @@ class RFANNEngine:
             self.index = new_index
             if self.cache is not None and hasattr(new_index, "install_cache"):
                 new_index.install_cache(self.cache)
+            if hasattr(old, "install_metrics"):
+                old.install_metrics(None)
+            if hasattr(new_index, "install_metrics"):
+                new_index.install_metrics(self.registry)
 
     # ------------------------------------------------------- stage 1: batch+resolve
     def _resolve_loop(self):
@@ -164,12 +235,24 @@ class RFANNEngine:
                     break
             qv = np.stack([b[0] for b in batch])
             rg = np.stack([b[1] for b in batch])
+            self._m_qdepth.set(self._q.qsize())
             with self._index_lock:          # only the reference needs the
                 index = self.index          # lock — never resolve under it,
             # the dispatcher takes it per batch and would stall behind us
+            self._batch_seq += 1
+            trace = (QueryTrace()
+                     if self.trace_sample_every
+                     and self._batch_seq % self.trace_sample_every == 0
+                     else None)
+            t_res = time.perf_counter()
             lo, hi = (index.rank_range(rg)
                       if hasattr(index, "rank_range") else (None, None))
-            item = (batch, qv, rg, lo, hi, index)
+            resolve_ms = (time.perf_counter() - t_res) * 1e3
+            self._m_resolve.observe(resolve_ms)
+            if trace is not None:
+                trace.add_span("resolve", wall_ms=resolve_ms, q=len(batch),
+                               stage="engine_resolver")
+            item = (batch, qv, rg, lo, hi, index, trace)
             enqueued = False
             while not self._stop.is_set():  # bounded queue: backpressure
                 try:
@@ -185,9 +268,11 @@ class RFANNEngine:
     def _dispatch_loop(self):
         while not self._stop.is_set() or not self._dq.empty():
             try:
-                batch, qv, rg, lo, hi, r_index = self._dq.get(timeout=0.05)
+                batch, qv, rg, lo, hi, r_index, trace = \
+                    self._dq.get(timeout=0.05)
             except queue.Empty:
                 continue
+            self._m_hdepth.set(self._dq.qsize())
             with self._index_lock:
                 index = self.index
             # beam_width=1 is omitted so indexes predating the batched-
@@ -195,12 +280,15 @@ class RFANNEngine:
             kw = dict(k=self.k, ef=self.ef, plan=self.plan)
             if self.beam_width != 1:
                 kw["beam_width"] = self.beam_width
-            if index is not r_index or lo is None:
-                # swapped between the stages (or no rank-space entry point):
-                # re-resolve against the live index
-                res = index.search(qv, rg, **kw)
-            else:
-                res = index.search_ranks(qv, lo, hi, **kw)
+            if trace is not None:
+                kw["trace"] = trace
+            try:
+                res = self._run_search(index, qv, rg, lo, hi, r_index, kw)
+            except TypeError:
+                if "trace" not in kw:       # genuine signature error
+                    raise
+                kw.pop("trace")             # index predates the trace API
+                res = self._run_search(index, qv, rg, lo, hi, r_index, kw)
             if not hasattr(res, "row"):     # tuple-returning index
                 from repro.search import SearchResult
                 res = SearchResult(np.asarray(res[0]), np.asarray(res[1]), {})
@@ -209,12 +297,33 @@ class RFANNEngine:
                 self.stats.scan_routed += int(
                     (np.asarray(res.stats["strategy"]) == SCAN).sum())
             self.stats.cache_hits += int(res.stats.get("cache_hits", 0))
+            self.stats.dedup_hits += int(res.stats.get("batch_dedup", 0))
             now = time.perf_counter()
-            for i, (_, _, t0, fut) in enumerate(batch):
-                self.stats.record_latency((now - t0) * 1e3)
-                fut.set_result(res.row(i))
+            lats = [(now - t0) * 1e3 for (_, _, t0, _) in batch]
+            # account BEFORE resolving futures: a client that holds its
+            # result must see the stats/metrics that include its request
+            for ms in lats:
+                self.stats.record_latency(ms)
             self.stats.served += len(batch)
             self.stats.batches += 1
+            self._m_e2e.observe_many(lats)
+            self._m_batch_size.observe(len(batch))
+            self._m_requests.inc(len(batch))
+            self._m_batches.inc()
+            if trace is not None:
+                self.last_trace = trace
+            for i, (_, _, _, fut) in enumerate(batch):
+                fut.set_result(res.row(i))
+            if self.log_interval and now - self._last_log >= self.log_interval:
+                self._last_log = now
+                print(format_stats_line(self.metrics()), flush=True)
+
+    def _run_search(self, index, qv, rg, lo, hi, r_index, kw):
+        if index is not r_index or lo is None:
+            # swapped between the stages (or no rank-space entry point):
+            # re-resolve against the live index
+            return index.search(qv, rg, **kw)
+        return index.search_ranks(qv, lo, hi, **kw)
 
     @staticmethod
     def _fail_batch(batch) -> None:

@@ -1,0 +1,65 @@
+#!/usr/bin/env python
+"""CI smoke for the observability stack: run a short serve with metrics
+enabled, then assert both exporter formats parse and carry the core
+metric families with non-trivial latency percentiles.
+
+    PYTHONPATH=src python tools/obs_smoke.py
+
+Exit code 0 = every assertion held.  This drives the real launcher
+(``repro.launch.serve --mode rfann --metrics-path ...``) rather than a
+synthetic registry, so it catches wiring regressions anywhere on the
+engine -> substrate -> exporter path.
+"""
+import json
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main as serve_main          # noqa: E402
+from repro.obs import CORE_FAMILIES, parse_prometheus      # noqa: E402
+
+
+def check(cond, msg):
+    if not cond:
+        print(f"[obs-smoke] FAIL: {msg}")
+        sys.exit(1)
+    print(f"[obs-smoke] ok: {msg}")
+
+
+def main():
+    with tempfile.TemporaryDirectory() as td:
+        prom = os.path.join(td, "metrics.prom")
+        serve_main(["--mode", "rfann", "--n", "2048", "--requests", "128",
+                    "--max-batch", "32", "--plan", "auto", "--cache-mb", "4",
+                    "--trace-sample-every", "4", "--metrics-path", prom])
+        check(os.path.exists(prom), "prometheus dump written")
+        check(os.path.exists(prom + ".json"), "json snapshot written")
+
+        with open(prom) as f:
+            text = f.read()
+        samples = parse_prometheus(text)           # raises on malformed lines
+        names = {n for (n, _) in samples}
+        check(len(samples) > 0, f"prometheus dump parsed ({len(samples)} samples)")
+        for fam in CORE_FAMILIES:
+            present = any(n == fam or n.startswith(fam + "_") for n in names)
+            check(present, f"core family {fam} present")
+        # cumulative-bucket sanity on the e2e histogram
+        e2e_count = samples.get(("rnsg_engine_e2e_ms_count", ""), 0.0)
+        check(e2e_count > 0, f"e2e histogram counted {int(e2e_count)} requests")
+
+        with open(prom + ".json") as f:
+            snap = json.load(f)
+        lat = snap["histograms"]["engine_e2e_ms"]
+        check(lat["count"] > 0, "json snapshot has e2e observations")
+        check(lat["p50"] > 0 and lat["p99"] > 0,
+              f"non-trivial percentiles p50={lat['p50']:.2f}ms "
+              f"p99={lat['p99']:.2f}ms")
+        check(lat["p50"] <= lat["p99"], "p50 <= p99")
+        check(snap["engine"]["served"] == 128, "engine served every request")
+    print("[obs-smoke] PASS")
+
+
+if __name__ == "__main__":
+    main()
