@@ -3,7 +3,8 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test test-fast verify lint docs-check bench-quick bench-planner \
         bench-substrate bench-mesh bench-cache bench-beam bench-beam-smoke \
-        bench-full quickstart obs-smoke profile
+        bench-quant bench-quant-smoke bench-all bench-full quickstart \
+        obs-smoke profile
 
 # tier-1 verify (the command CI runs)
 test:
@@ -54,6 +55,22 @@ bench-beam:
 # catches kernel/beam regressions fast without meaningful wall numbers
 bench-beam-smoke:
 	$(PY) -m benchmarks.run --only beam_width --n 1024
+
+# quantized scoring (int8/bf16 + exact f32 rerank) vs the f32 baseline
+# (results/bench/quantized.csv + BENCH_quant.json)
+bench-quant:
+	$(PY) -m benchmarks.run --only quantized
+
+# tiny-scale CI smoke: asserts int8/bf16 scan id parity vs the f32 oracle
+# and the beam recall envelope, all in Pallas interpret mode
+bench-quant-smoke:
+	$(PY) -m benchmarks.run --only quantized --n 1024
+
+# smoke-sized perf trajectory: writes BENCH_substrate.json, BENCH_beam.json
+# and BENCH_quant.json at the repo root so the numbers are tracked per PR
+bench-all:
+	$(PY) -m benchmarks.run --only search_substrate,beam_width,quantized \
+	    --n 2048
 
 bench-full:
 	$(PY) -m benchmarks.run --full

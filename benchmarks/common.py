@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import csv
+import json
 import os
 import time
 from pathlib import Path
@@ -11,11 +12,65 @@ import numpy as np
 
 from repro.core.rfann import RNSGIndex
 from repro.data.ann import (ground_truth, make_attrs, make_vectors,
-                            mixed_workload, recall_at_k, selectivity_ranges)
+                            mixed_workload, selectivity_ranges)
 from repro.index.baselines import (BruteForceIndex, MRNGIndex,
                                    SegmentTreeIndex)
 
-RESULTS = Path(__file__).resolve().parent.parent / "results" / "bench"
+ROOT = Path(__file__).resolve().parent.parent
+RESULTS = ROOT / "results" / "bench"
+
+
+def recall_at_k(found: np.ndarray, gt: np.ndarray, *,
+                gt_dists: Optional[np.ndarray] = None,
+                found_dists: Optional[np.ndarray] = None,
+                eps: float = 1e-5) -> float:
+    """recall@k = |found ∩ gt| / |gt-valid|, micro-averaged over queries.
+
+    The canonical benchmark/acceptance metric, with two edge rules every
+    caller needs:
+
+    * ``k > |interval|`` — ground-truth rows are ``-1``-padded when the rank
+      slice holds fewer than k points; the denominator is the count of
+      *valid* gt entries per row (fully-empty rows are skipped entirely), so
+      an exact method scores 1.0 on sub-k slices instead of being penalized
+      for ids that do not exist.
+    * tie handling — when both ``gt_dists`` and ``found_dists`` are given, a
+      found id outside the gt id set still counts as a hit if its distance
+      is within ``eps`` of the row's worst valid gt distance: equidistant
+      points at the k-th boundary are interchangeable, and a different
+      tie-break order must not read as recall loss.  Per-row hits stay
+      capped at the valid-gt count so recall never exceeds 1.0.
+    """
+    found = np.asarray(found)
+    gt = np.asarray(gt)
+    tot, hit = 0, 0
+    for i in range(len(gt)):
+        gs = {int(x) for x in gt[i] if x >= 0}
+        if not gs:
+            continue
+        fs = [int(x) for x in found[i] if x >= 0]
+        row_hit = len(gs & set(fs))
+        if gt_dists is not None and found_dists is not None:
+            kth = max(float(d) for d, g in zip(gt_dists[i], gt[i]) if g >= 0)
+            row_hit += sum(
+                1 for j, x in enumerate(found[i])
+                if x >= 0 and int(x) not in gs
+                and float(found_dists[i][j]) <= kth + eps)
+            row_hit = min(row_hit, len(gs))
+        hit += row_hit
+        tot += len(gs)
+    return hit / max(tot, 1)
+
+
+def emit_bench_json(stem: str, summary: dict) -> Path:
+    """Write a machine-readable ``BENCH_<stem>.json`` trajectory file at the
+    repo root (tracked across PRs) plus a copy under results/bench/."""
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    text = json.dumps(summary, indent=2, sort_keys=True)
+    for path in (ROOT / f"BENCH_{stem}.json", RESULTS / f"BENCH_{stem}.json"):
+        with open(path, "w") as f:
+            f.write(text + "\n")
+    return ROOT / f"BENCH_{stem}.json"
 
 
 def dataset(n: int, d: int, seed: int = 0):

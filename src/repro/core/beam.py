@@ -107,15 +107,44 @@ def _merge_sorted(pool_d, pool_i, pool_e, fresh_d, fresh_i, fresh_e, ef: int):
     return md, mi, me
 
 
+def rerank_pool(vecs, pool_ids, qv, k: int, use_kernel: bool):
+    """Exact f32 rescore of each query's final candidate pool — the rerank
+    stage of the quantized beam: traversal ordered by quantized distances,
+    the returned top-k rescored against the f32 vectors.  Pool ids are
+    sorted ascending first (``sort_candidates``) so the stable tie-breaking
+    of the top-k matches the exact path's tie-toward-lower-rank."""
+    from repro.kernels.quantize import sort_candidates
+    ids_s = sort_candidates(pool_ids)                        # (Q, ef)
+    if use_kernel and k <= 128:
+        from repro.kernels.ops import gather_rerank
+        return gather_rerank(vecs, ids_s, qv, k=k)
+    rows = vecs[jnp.maximum(ids_s, 0)]                       # (Q, ef, d)
+    d2 = jnp.sum(jnp.square(rows - qv[:, None, :]), axis=-1)
+    d2 = jnp.where(ids_s >= 0, d2, INF)
+    neg, sel = jax.lax.top_k(-d2, k)
+    ids = jnp.where(jnp.isfinite(neg), jnp.take_along_axis(ids_s, sel,
+                                                           axis=1), -1)
+    return ids, -neg
+
+
 @partial(jax.jit, static_argnames=("k", "ef", "max_steps", "use_kernel",
                                    "early_stop", "beam_width"))
 def beam_search_batch(vecs: jax.Array, nbrs: jax.Array, qv: jax.Array,
                       lo: jax.Array, hi: jax.Array, entry: jax.Array,
                       *, k: int = 10, ef: int = 64, max_steps: int = 0,
                       use_kernel: bool = False, early_stop: bool = True,
-                      beam_width: int = 1):
+                      beam_width: int = 1, quant=None):
     """vecs:(n,d) f32; nbrs:(n,m) i32; qv:(Q,d); lo/hi/entry:(Q,) rank ids.
     Returns (ids:(Q,k) i32 rank ids (-1 pad), dists:(Q,k), stats dict).
+
+    ``quant=(data, scale)`` switches neighbor scoring to the quantized
+    corpus copy (``data``: (n,d) int8/bf16 in the same rank order;
+    ``scale``: (d,) f32 per-dim dequant factors, or None for bf16) — the
+    traversal then moves 4x/2x fewer bytes per scored neighbor, and the
+    final pool is rescored in f32 (``rerank_pool``) before the top-k is
+    taken, so whenever the pool saw every true neighbor (any time the f32
+    search would return them, e.g. the exhaustive ``ef ≥ |interval|``
+    regime) the returned id set is exactly the f32 one.
 
     ``early_stop`` exits the while_loop as soon as no finite unexpanded
     candidate remains.  When the in-range node count is below ``ef`` the
@@ -137,7 +166,12 @@ def beam_search_batch(vecs: jax.Array, nbrs: jax.Array, qv: jax.Array,
     if beam_width > 1:
         return _beam_batched(vecs, nbrs, qv, lo, hi, entry, k=k, ef=ef,
                              steps_cap=steps_cap, use_kernel=use_kernel,
-                             early_stop=early_stop, beam_width=beam_width)
+                             early_stop=early_stop, beam_width=beam_width,
+                             quant=quant)
+
+    # traversal scores against the quantized copy when one is given (the
+    # dtype is trace-static, so the scale branch costs nothing at runtime)
+    score_x, score_scale = (vecs, None) if quant is None else quant
 
     if use_kernel:
         from repro.kernels.ops import gather_dist as _gd
@@ -146,12 +180,21 @@ def beam_search_batch(vecs: jax.Array, nbrs: jax.Array, qv: jax.Array,
 
     def neighbor_dists(q, ids, valid):
         if _gd is not None:
-            d = _gd(vecs, ids, q)
+            d = _gd(score_x, ids, q, scale=score_scale)
         else:
-            nv = vecs[jnp.maximum(ids, 0)]
+            nv = score_x[jnp.maximum(ids, 0)].astype(jnp.float32)
+            if score_scale is not None:
+                nv = nv * score_scale[None, :]
             diff = nv - q[None, :]
             d = jnp.sum(diff * diff, axis=-1)
         return jnp.where(valid, d, INF)
+
+    def entry_dists(q, e0c, ev):
+        nv = score_x[e0c].astype(jnp.float32)
+        if score_scale is not None:
+            nv = nv * score_scale[None, :]
+        return jnp.where(ev, jnp.sum(jnp.square(nv - q[None, :]), axis=-1),
+                         INF)
 
     def one_query(q, L, R, e0):
         empty = L > R
@@ -159,8 +202,7 @@ def beam_search_batch(vecs: jax.Array, nbrs: jax.Array, qv: jax.Array,
         ev = (e0 >= 0) & ~empty
         e0c = jnp.clip(e0, 0, n - 1)
         ne = e0.shape[0]
-        d0 = jnp.sum(jnp.square(vecs[e0c] - q[None, :]), axis=-1)
-        d0 = jnp.where(ev, d0, INF)
+        d0 = entry_dists(q, e0c, ev)
         cand_ids = jnp.full((ef,), -1, jnp.int32).at[:ne].set(e0c.astype(jnp.int32))
         cand_d = jnp.full((ef,), INF).at[:ne].set(d0)
         expanded = jnp.zeros((ef,), bool).at[:ne].set(~ev)
@@ -198,11 +240,16 @@ def beam_search_batch(vecs: jax.Array, nbrs: jax.Array, qv: jax.Array,
         st = (cand_d, expanded, cand_ids, visited,
               jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
         cand_d, _, cand_ids, _, steps, ndist = jax.lax.while_loop(cond, body, st)
+        if quant is not None:       # return the full pool for the f32 rerank
+            pool = jnp.where(jnp.isfinite(cand_d), cand_ids, -1)
+            return pool, cand_d, steps, ndist
         out_ids = jnp.where(jnp.isfinite(cand_d[:k]), cand_ids[:k], -1)
         out_d = cand_d[:k]
         return out_ids, out_d, steps, ndist
 
     ids, dists, steps, ndist = jax.vmap(one_query)(qv, lo, hi, entry)
+    if quant is not None:
+        ids, dists = rerank_pool(vecs, ids, qv, k, use_kernel)
     return ids, dists, {"hops": steps, "ndist": ndist}
 
 
@@ -211,8 +258,9 @@ def beam_search_batch(vecs: jax.Array, nbrs: jax.Array, qv: jax.Array,
 # ======================================================================
 def _beam_batched(vecs, nbrs, qv, lo, hi, entry, *, k: int, ef: int,
                   steps_cap: int, use_kernel: bool, early_stop: bool,
-                  beam_width: int):
+                  beam_width: int, quant=None):
     n, m = nbrs.shape
+    score_x, score_scale = (vecs, None) if quant is None else quant
     # the pool holds ef candidates, so at most ef can be unexpanded — a
     # wider request (e.g. --beam-width 128 at the default ef=64) is clamped
     # rather than rejected
@@ -237,12 +285,15 @@ def _beam_batched(vecs, nbrs, qv, lo, hi, entry, *, k: int, ef: int,
         (ids -1 / dist inf beyond the valid entries)."""
         ids_m = jnp.where(valid, ids_f, -1)
         if kernel_topk:
-            fi, fd = _gtk(vecs, ids_m, q, k=fm)
+            fi, fd = _gtk(score_x, ids_m, q, k=fm, scale=score_scale)
             return fd, fi
         if _gd is not None:
-            d = jnp.where(valid, _gd(vecs, ids_f, q), INF)
+            d = jnp.where(valid, _gd(score_x, ids_f, q, scale=score_scale),
+                          INF)
         else:
-            nv = vecs[jnp.maximum(ids_f, 0)]
+            nv = score_x[jnp.maximum(ids_f, 0)].astype(jnp.float32)
+            if score_scale is not None:
+                nv = nv * score_scale[None, :]
             diff = nv - q[None, :]
             d = jnp.where(valid, jnp.sum(diff * diff, axis=-1), INF)
         o = jnp.argsort(d)[:fm]         # sort F fresh values, never the pool
@@ -254,7 +305,10 @@ def _beam_batched(vecs, nbrs, qv, lo, hi, entry, *, k: int, ef: int,
         ev = (e0 >= 0) & ~empty
         e0c = jnp.clip(e0, 0, n - 1)
         ne = e0.shape[0]
-        d0 = jnp.sum(jnp.square(vecs[e0c] - q[None, :]), axis=-1)
+        nv0 = score_x[e0c].astype(jnp.float32)
+        if score_scale is not None:
+            nv0 = nv0 * score_scale[None, :]
+        d0 = jnp.sum(jnp.square(nv0 - q[None, :]), axis=-1)
         d0 = jnp.where(ev, d0, INF)
         cand_ids = jnp.full((ef,), -1, jnp.int32).at[:ne].set(
             e0c.astype(jnp.int32))
@@ -317,8 +371,13 @@ def _beam_batched(vecs, nbrs, qv, lo, hi, entry, *, k: int, ef: int,
               jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
         cand_d, _, cand_ids, _, steps, ndist = jax.lax.while_loop(
             cond, body, st)
+        if quant is not None:       # return the full pool for the f32 rerank
+            pool = jnp.where(jnp.isfinite(cand_d), cand_ids, -1)
+            return pool, cand_d, steps, ndist
         out_ids = jnp.where(jnp.isfinite(cand_d[:k]), cand_ids[:k], -1)
         return out_ids, cand_d[:k], steps, ndist
 
     ids, dists, steps, ndist = jax.vmap(one_query)(qv, lo, hi, entry)
+    if quant is not None:
+        ids, dists = rerank_pool(vecs, ids, qv, k, use_kernel)
     return ids, dists, {"hops": steps, "ndist": ndist}

@@ -67,14 +67,22 @@ class RNSGIndex:
         from repro.search import rank_interval
         return rank_interval(self.g.attrs, np.asarray(attr_ranges, np.float32))
 
+    def install_quantized(self, precision: str) -> None:
+        """Pre-build the quantized corpus copies for one precision (int8 /
+        bf16) so the first ``precision=`` search pays no build cost."""
+        self.substrate.install_quantized(precision)
+
     def search(self, queries: np.ndarray, attr_ranges: np.ndarray, *,
                k: int = 10, ef: int = 64, use_kernel: bool = False,
-               plan: str = "graph", beam_width: int = 1, trace=None):
+               plan: str = "graph", beam_width: int = 1,
+               precision: str = "f32", trace=None):
         """queries:(Q,d); attr_ranges:(Q,2) attribute values (inclusive).
         plan: "graph" (pure beam search) | "auto" (cost-based scan/beam
         routing) | "scan" / "beam" (forced strategy).
         beam_width: batched-expansion width for beam dispatches (1 = the
         legacy single-node hop; B>1 fuses B node expansions per hop).
+        precision: "f32" | "int8" | "bf16" — quantized scoring with a fused
+        exact f32 rerank (same top-k id set as f32).
         trace: optional ``repro.obs.QueryTrace`` — collects resolve / plan /
         dispatch / stitch spans and rides back on the result.
         Returns a ``SearchResult`` (tuple-compatible: ids, dists, stats)."""
@@ -88,15 +96,16 @@ class RNSGIndex:
                     0, None) if trace is not None else None)
         return self.search_ranks(queries, lo, hi, k=k, ef=ef,
                                  use_kernel=use_kernel, plan=plan,
-                                 beam_width=beam_width, trace=trace)
+                                 beam_width=beam_width, precision=precision,
+                                 trace=trace)
 
     def search_ranks(self, queries, lo, hi, *, k=10, ef=64, use_kernel=False,
-                     plan="graph", beam_width=1, trace=None):
+                     plan="graph", beam_width=1, precision="f32", trace=None):
         from repro.search import SearchRequest
         return self.substrate.run(SearchRequest(
             queries=np.asarray(queries, np.float32), lo=lo, hi=hi,
             k=k, ef=ef, strategy=plan, use_kernel=use_kernel,
-            beam_width=beam_width, trace=trace))
+            beam_width=beam_width, precision=precision, trace=trace))
 
     # ------------------------------------------------------------------
     @property

@@ -39,15 +39,25 @@ def _tile(m: int, cap: int = 128) -> int:
     return int(min(cap, 1 << max(int(m) - 1, 0).bit_length() if m > 1 else 1))
 
 
-def _dist_kernel(ids_ref, x_ref, q_ref, o_ref, acc_ref, *, tile: int):
+def _row_d2(x_ref, q_ref, scale_ref):
+    """Σ(x−q)² of one gathered row, dequantized in VMEM when the corpus is
+    int8 (``scale_ref`` holds the (1, d) per-dimension factors)."""
+    xf = x_ref[...].astype(jnp.float32)
+    if scale_ref is not None:
+        xf = xf * scale_ref[...]
+    diff = xf - q_ref[...].astype(jnp.float32)
+    return jnp.sum(diff * diff)
+
+
+def _dist_body(ids_ref, x_ref, q_ref, scale_ref, o_ref, acc_ref, *,
+               tile: int):
     t = pl.program_id(1)
 
     @pl.when(t == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    diff = x_ref[...].astype(jnp.float32) - q_ref[...].astype(jnp.float32)
-    d2 = jnp.sum(diff * diff)
+    d2 = _row_d2(x_ref, q_ref, scale_ref)
     lane = jax.lax.broadcasted_iota(jnp.int32, (1, tile), 1) == t
     acc_ref[...] = jnp.where(lane, d2, acc_ref[...])
 
@@ -56,38 +66,82 @@ def _dist_kernel(ids_ref, x_ref, q_ref, o_ref, acc_ref, *, tile: int):
         o_ref[...] = acc_ref[...]
 
 
+def _dist_kernel(ids_ref, x_ref, q_ref, o_ref, acc_ref, **kw):
+    _dist_body(ids_ref, x_ref, q_ref, None, o_ref, acc_ref, **kw)
+
+
+def _dist_kernel_scaled(ids_ref, x_ref, scale_ref, q_ref, o_ref, acc_ref,
+                        **kw):
+    _dist_body(ids_ref, x_ref, q_ref, scale_ref, o_ref, acc_ref, **kw)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def gather_dist_pallas(x: jax.Array, ids: jax.Array, q: jax.Array, *,
-                       interpret: bool = False) -> jax.Array:
+                       interpret: bool = False,
+                       scale: jax.Array | None = None) -> jax.Array:
     """x:(N,d); ids:(M,) int32; q:(d,) -> (M,) f32 squared distances.
-    Out-of-range/negative ids are clipped (callers mask separately)."""
+    Out-of-range/negative ids are clipped (callers mask separately).
+    ``x`` may be int8/bf16; ``scale`` ((d,) f32) dequantizes int8 rows."""
     n, d = x.shape
     m = ids.shape[0]
     tile = _tile(m)
     nt = -(-m // tile)
     ids_c = jnp.clip(ids, 0, n - 1).astype(jnp.int32)
     ids_c = jnp.pad(ids_c, (0, nt * tile - m))      # tail rows: row 0, sliced off
+    x_spec = pl.BlockSpec((1, d), lambda i, t, ids_ref: (ids_ref[i * tile + t], 0))
+    q_spec = pl.BlockSpec((1, d), lambda i, t, ids_ref: (0, 0))
+    if scale is None:
+        kernel, in_specs, ops = _dist_kernel, [x_spec, q_spec], (x, q[None, :])
+    else:
+        kernel = _dist_kernel_scaled
+        in_specs = [x_spec, q_spec, q_spec]      # scale: one (1, d) block
+        ops = (x, scale.astype(jnp.float32)[None, :], q[None, :])
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(nt, tile),
-        in_specs=[
-            pl.BlockSpec((1, d), lambda i, t, ids_ref: (ids_ref[i * tile + t], 0)),
-            pl.BlockSpec((1, d), lambda i, t, ids_ref: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, tile), lambda i, t, ids_ref: (i, 0)),
         scratch_shapes=[pltpu.VMEM((1, tile), jnp.float32)],
     )
     out = pl.pallas_call(
-        functools.partial(_dist_kernel, tile=tile),
+        functools.partial(kernel, tile=tile),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((nt, tile), jnp.float32),
         interpret=interpret,
-    )(ids_c, x, q[None, :])
+    )(ids_c, *ops)
     return out.reshape(nt * tile)[:m]
 
 
-def _topk_kernel(ids_ref, x_ref, q_ref, idm_ref, od_ref, oi_ref, acc_ref, *,
-                 tile: int, k: int):
+def _fold_topk(acc_ref, idm_ref, od_ref, oi_ref, *, tile: int, k: int):
+    """Fold one accumulated (1, tile) distance block into the running top-k
+    held in the (1, tile) output lanes (dists + ids).  Shared by the
+    single-query ``gather_topk`` and the batched ``gather_rerank``."""
+    idv = idm_ref[...]                                   # (1, tile) i32
+    d_blk = jnp.where(idv >= 0, acc_ref[...], jnp.inf)
+    # union of the running top-k and this tile; tiles arrive in
+    # ascending-id-index order and the running half comes first, so the
+    # first-occurrence argmin breaks distance ties toward the lower
+    # input index (matching a stable argsort of the full vector)
+    cd = jnp.concatenate([od_ref[...], d_blk], axis=1)   # (1, 2*tile)
+    ci = jnp.concatenate([oi_ref[...], idv], axis=1)
+    lane_u = jax.lax.broadcasted_iota(jnp.int32, (1, 2 * tile), 1)
+    lane_o = jax.lax.broadcasted_iota(jnp.int32, (1, tile), 1)
+    new_d = jnp.full((1, tile), jnp.inf, jnp.float32)
+    new_i = jnp.full((1, tile), -1, jnp.int32)
+    for s in range(k):            # static unroll: k-step select-min
+        mv = jnp.min(cd)
+        sel = lane_u == jnp.argmin(cd).astype(jnp.int32)
+        idn = jnp.sum(jnp.where(sel, ci, 0)).astype(jnp.int32)
+        idn = jnp.where(jnp.isfinite(mv), idn, -1)
+        new_d = jnp.where(lane_o == s, mv, new_d)
+        new_i = jnp.where(lane_o == s, idn, new_i)
+        cd = jnp.where(sel, jnp.inf, cd)
+    od_ref[...] = new_d
+    oi_ref[...] = new_i
+
+
+def _topk_body(ids_ref, x_ref, q_ref, scale_ref, idm_ref, od_ref, oi_ref,
+               acc_ref, *, tile: int, k: int):
     i = pl.program_id(0)
     t = pl.program_id(1)
 
@@ -100,43 +154,35 @@ def _topk_kernel(ids_ref, x_ref, q_ref, idm_ref, od_ref, oi_ref, acc_ref, *,
     def _init_acc():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    diff = x_ref[...].astype(jnp.float32) - q_ref[...].astype(jnp.float32)
-    d2 = jnp.sum(diff * diff)
+    d2 = _row_d2(x_ref, q_ref, scale_ref)
     lane = jax.lax.broadcasted_iota(jnp.int32, (1, tile), 1) == t
     acc_ref[...] = jnp.where(lane, d2, acc_ref[...])
 
     @pl.when(t == tile - 1)
     def _merge():
-        idv = idm_ref[...]                                   # (1, tile) i32
-        d_blk = jnp.where(idv >= 0, acc_ref[...], jnp.inf)
-        # union of the running top-k and this tile; tiles arrive in
-        # ascending-id-index order and the running half comes first, so the
-        # first-occurrence argmin breaks distance ties toward the lower
-        # input index (matching a stable argsort of the full vector)
-        cd = jnp.concatenate([od_ref[...], d_blk], axis=1)   # (1, 2*tile)
-        ci = jnp.concatenate([oi_ref[...], idv], axis=1)
-        lane_u = jax.lax.broadcasted_iota(jnp.int32, (1, 2 * tile), 1)
-        lane_o = jax.lax.broadcasted_iota(jnp.int32, (1, tile), 1)
-        new_d = jnp.full((1, tile), jnp.inf, jnp.float32)
-        new_i = jnp.full((1, tile), -1, jnp.int32)
-        for s in range(k):            # static unroll: k-step select-min
-            mv = jnp.min(cd)
-            sel = lane_u == jnp.argmin(cd).astype(jnp.int32)
-            idn = jnp.sum(jnp.where(sel, ci, 0)).astype(jnp.int32)
-            idn = jnp.where(jnp.isfinite(mv), idn, -1)
-            new_d = jnp.where(lane_o == s, mv, new_d)
-            new_i = jnp.where(lane_o == s, idn, new_i)
-            cd = jnp.where(sel, jnp.inf, cd)
-        od_ref[...] = new_d
-        oi_ref[...] = new_i
+        _fold_topk(acc_ref, idm_ref, od_ref, oi_ref, tile=tile, k=k)
+
+
+def _topk_kernel(ids_ref, x_ref, q_ref, idm_ref, od_ref, oi_ref, acc_ref,
+                 **kw):
+    _topk_body(ids_ref, x_ref, q_ref, None, idm_ref, od_ref, oi_ref, acc_ref,
+               **kw)
+
+
+def _topk_kernel_scaled(ids_ref, x_ref, scale_ref, q_ref, idm_ref, od_ref,
+                        oi_ref, acc_ref, **kw):
+    _topk_body(ids_ref, x_ref, q_ref, scale_ref, idm_ref, od_ref, oi_ref,
+               acc_ref, **kw)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "interpret"))
 def gather_topk_pallas(x: jax.Array, ids: jax.Array, q: jax.Array, *,
-                       k: int, interpret: bool = False):
+                       k: int, interpret: bool = False,
+                       scale: jax.Array | None = None):
     """x:(N,d); ids:(M,) int32, **negative = masked**; q:(d,).
     Returns (ids:(k,) i32 sorted by ascending distance (-1 pad),
     dists:(k,) f32, +inf pad) — the top-k over the *unmasked* ids only.
+    ``x`` may be int8/bf16; ``scale`` ((d,) f32) dequantizes int8 rows.
 
     Requires ``k ≤ min(next_pow2(M), 128)`` (the running top-k lives in one
     lane row) and raises ``ValueError`` beyond it — callers needing a
@@ -152,14 +198,22 @@ def gather_topk_pallas(x: jax.Array, ids: jax.Array, q: jax.Array, *,
     pad = nt * tile - m
     ids_m = jnp.pad(ids.astype(jnp.int32), (0, pad), constant_values=-1)
     ids_c = jnp.clip(ids_m, 0, n - 1)
+    x_spec = pl.BlockSpec((1, d), lambda i, t, ids_ref: (ids_ref[i * tile + t], 0))
+    q_spec = pl.BlockSpec((1, d), lambda i, t, ids_ref: (0, 0))
+    idm_spec = pl.BlockSpec((1, tile), lambda i, t, ids_ref: (0, i))
+    if scale is None:
+        kernel = _topk_kernel
+        in_specs = [x_spec, q_spec, idm_spec]
+        ops = (x, q[None, :], ids_m[None, :])
+    else:
+        kernel = _topk_kernel_scaled
+        in_specs = [x_spec, q_spec, q_spec, idm_spec]
+        ops = (x, scale.astype(jnp.float32)[None, :], q[None, :],
+               ids_m[None, :])
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(nt, tile),
-        in_specs=[
-            pl.BlockSpec((1, d), lambda i, t, ids_ref: (ids_ref[i * tile + t], 0)),
-            pl.BlockSpec((1, d), lambda i, t, ids_ref: (0, 0)),
-            pl.BlockSpec((1, tile), lambda i, t, ids_ref: (0, i)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, tile), lambda i, t, ids_ref: (0, 0)),
             pl.BlockSpec((1, tile), lambda i, t, ids_ref: (0, 0)),
@@ -167,10 +221,86 @@ def gather_topk_pallas(x: jax.Array, ids: jax.Array, q: jax.Array, *,
         scratch_shapes=[pltpu.VMEM((1, tile), jnp.float32)],
     )
     od, oi = pl.pallas_call(
-        functools.partial(_topk_kernel, tile=tile, k=k),
+        functools.partial(kernel, tile=tile, k=k),
         grid_spec=grid_spec,
         out_shape=(jax.ShapeDtypeStruct((1, tile), jnp.float32),
                    jax.ShapeDtypeStruct((1, tile), jnp.int32)),
         interpret=interpret,
-    )(ids_c, x, q[None, :], ids_m[None, :])
+    )(ids_c, *ops)
     return oi[0, :k], od[0, :k]
+
+
+# ======================================================================
+# Batched rerank: per-query gather + f32 top-k over survivor id lists
+# ======================================================================
+def _rerank_kernel(ids_ref, x_ref, q_ref, idm_ref, od_ref, oi_ref, acc_ref,
+                   *, tile: int, k: int):
+    j = pl.program_id(1)          # id tile within this query's list
+    t = pl.program_id(2)          # position within the tile
+
+    @pl.when((j == 0) & (t == 0))
+    def _init_topk():             # grid is row-major: (i, 0, 0) starts query i
+        od_ref[...] = jnp.full_like(od_ref, jnp.inf)
+        oi_ref[...] = jnp.full_like(oi_ref, -1)
+
+    @pl.when(t == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    d2 = _row_d2(x_ref, q_ref, None)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, tile), 1) == t
+    acc_ref[...] = jnp.where(lane, d2, acc_ref[...])
+
+    @pl.when(t == tile - 1)
+    def _merge():
+        _fold_topk(acc_ref, idm_ref, od_ref, oi_ref, tile=tile, k=k)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def gather_rerank_pallas(x: jax.Array, ids: jax.Array, q: jax.Array, *,
+                         k: int, interpret: bool = False):
+    """Batched ``gather_topk``: the f32 rerank stage of the quantized path.
+
+    x:(N,d) f32; ids:(Q,M) int32 survivor ranks per query (**negative =
+    masked**, callers pre-sort ascending via ``sort_candidates`` so distance
+    ties break toward the lower rank); q:(Q,d).  Returns (ids:(Q,k) i32
+    ascending-distance (-1 pad), dists:(Q,k) f32 (+inf pad)).
+
+    One grid, Q running top-k rows: grid = (Q, tiles, tile) with the same
+    scalar-prefetched row steering as ``gather_topk`` — the per-(query, t)
+    row DMA index comes from the flattened id table.  Requires ``k ≤
+    min(next_pow2(M), 128)``."""
+    n, d = x.shape
+    Q, m = ids.shape
+    tile = _tile(max(m, k))
+    if k > tile:
+        raise ValueError(f"gather_rerank: k={k} exceeds the {tile}-lane "
+                         f"running top-k row (use gather_dist + sort)")
+    nt = -(-m // tile)
+    mp = nt * tile
+    ids_m = jnp.pad(ids.astype(jnp.int32), ((0, 0), (0, mp - m)),
+                    constant_values=-1)
+    ids_c = jnp.clip(ids_m, 0, n - 1).reshape(Q * mp)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Q, nt, tile),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, j, t, ids_ref:
+                         (ids_ref[i * (nt * tile) + j * tile + t], 0)),
+            pl.BlockSpec((1, d), lambda i, j, t, ids_ref: (i, 0)),
+            pl.BlockSpec((1, tile), lambda i, j, t, ids_ref: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile), lambda i, j, t, ids_ref: (i, 0)),
+            pl.BlockSpec((1, tile), lambda i, j, t, ids_ref: (i, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, tile), jnp.float32)],
+    )
+    od, oi = pl.pallas_call(
+        functools.partial(_rerank_kernel, tile=tile, k=k),
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct((Q, tile), jnp.float32),
+                   jax.ShapeDtypeStruct((Q, tile), jnp.int32)),
+        interpret=interpret,
+    )(ids_c, x, q, ids_m)
+    return oi[:, :k], od[:, :k]

@@ -1,0 +1,94 @@
+"""Quantized corpus artifacts for the int8/bf16 scoring paths.
+
+The corpus is stored **once per precision** in the same rank-sorted order as
+the f32 vectors, so interval slicing (``x[L : R+1]``), neighbor gathers, and
+the scan kernel's window arithmetic are unchanged — only the bytes moved per
+scored row shrink (4x for int8, 2x for bf16).
+
+* ``int8`` — per-dimension symmetric quantization: ``scale[j] =
+  max|x[:, j]| / 127`` and ``data = round(x / scale)`` clipped to ±127.
+  Kernels dequantize in VMEM (``data.astype(f32) * scale``) right after the
+  narrow DMA, so the MXU matmul stays f32 and HBM bandwidth is the win.
+* ``bf16`` — a plain downcast; no scale (the kernels' existing
+  ``astype(f32)`` upcast covers it).
+
+Quantized scoring alone is *approximate*; exactness of the final top-k is
+restored by the f32 rerank stage: the quantized pass over-fetches
+``rerank_depth(k, ef)`` survivors, a second f32 gather+top-k rescores only
+those ids, and the reranked result is what merge/stitch consume.  Survivor
+ids are sorted ascending (``sort_candidates``) before the rerank so its
+stable tie-breaking (toward the lower input index) equals the f32 oracle's
+tie-toward-lower-rank — bit-compatible id sets, asserted in tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+PRECISIONS = ("f32", "int8", "bf16")
+
+#: the scan kernel's running top-k lives in one (1, 128) lane row, so the
+#: quantized over-fetch is capped there; larger k falls through to the
+#: materializing oracle which has no such bound.
+RERANK_CAP = 128
+
+
+def rerank_depth(k: int, ef: int, cap: int = RERANK_CAP) -> int:
+    """Quantized-pass over-fetch: ~4*ef survivors, clamped to [k, cap]."""
+    return int(min(max(4 * int(ef), int(k)), max(int(cap), int(k))))
+
+
+@dataclass(frozen=True)
+class QuantizedCorpus:
+    """One rank-ordered quantized corpus copy.
+
+    data  : (n, d) int8 or bfloat16, same row order as the f32 vectors.
+    scale : (d,) f32 per-dimension dequant factors (int8 only; None for
+            bf16 — the downcast needs no scale).
+    """
+    precision: str
+    data: jax.Array
+    scale: Optional[jax.Array]
+
+    @property
+    def bytes_per_vector(self) -> int:
+        return int(self.data.shape[1]) * self.data.dtype.itemsize
+
+
+def quantize_corpus(vecs: jax.Array, precision: str) -> QuantizedCorpus:
+    """Build the quantized copy of a rank-ordered (n, d) f32 corpus."""
+    x = jnp.asarray(vecs, jnp.float32)
+    if precision == "bf16":
+        return QuantizedCorpus("bf16", x.astype(jnp.bfloat16), None)
+    if precision != "int8":
+        raise ValueError(f"quantize_corpus: invalid precision {precision!r} "
+                         f"(expected one of {PRECISIONS[1:]})")
+    abs_max = jnp.max(jnp.abs(x), axis=0)
+    # an all-zero dimension would divide by zero; its rows are all zero
+    # anyway, so any positive scale round-trips them exactly
+    scale = jnp.where(abs_max > 0, abs_max / 127.0, 1.0).astype(jnp.float32)
+    data = jnp.clip(jnp.round(x / scale[None, :]), -127, 127).astype(jnp.int8)
+    return QuantizedCorpus("int8", data, scale)
+
+
+def dequantize(qc: QuantizedCorpus) -> jax.Array:
+    """f32 view of the quantized corpus — what the kernels score against
+    (the oracle target for the quantized-parity tests)."""
+    x = qc.data.astype(jnp.float32)
+    if qc.scale is not None:
+        x = x * qc.scale[None, :]
+    return x
+
+
+def sort_candidates(ids: jax.Array) -> jax.Array:
+    """Sort candidate rank ids ascending along the last axis, -1 pads last.
+
+    Rerank inputs must arrive in ascending-rank order: the f32 rescore
+    breaks distance ties toward the lower *input index*, so pre-sorting by
+    rank makes that identical to the exact path's tie-toward-lower-rank."""
+    big = jnp.int32(jnp.iinfo(jnp.int32).max)
+    s = jnp.sort(jnp.where(ids >= 0, ids.astype(jnp.int32), big), axis=-1)
+    return jnp.where(s == big, -1, s)

@@ -40,8 +40,8 @@ def window_rows(bucket: int, tb: int = 128) -> int:
     return (-(-bucket // tb) + 1) * tb
 
 
-def _kernel(starts_ref, lens_ref, x_ref, q_ref, od_ref, oi_ref, acc_ref,
-            *, nd: int, tb: int, k: int, n_valid: int):
+def _body(starts_ref, lens_ref, x_ref, scale_ref, q_ref, od_ref, oi_ref,
+          acc_ref, *, nd: int, tb: int, k: int, n_valid: int):
     i = pl.program_id(0)          # query
     j = pl.program_id(1)          # row block within the window
     kd = pl.program_id(2)         # d-chunk
@@ -56,6 +56,8 @@ def _kernel(starts_ref, lens_ref, x_ref, q_ref, od_ref, oi_ref, acc_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     x = x_ref[...].astype(jnp.float32)            # (tb, td)
+    if scale_ref is not None:                     # int8: dequant in VMEM
+        x = x * scale_ref[...]                    # (1, td) broadcast
     q = q_ref[...].astype(jnp.float32)            # (1, td)
     dot = jax.lax.dot_general(q, x, (((1,), (1,)), ((), ())),
                               preferred_element_type=jnp.float32)
@@ -92,16 +94,33 @@ def _kernel(starts_ref, lens_ref, x_ref, q_ref, od_ref, oi_ref, acc_ref,
         oi_ref[...] = new_i
 
 
+def _kernel(starts_ref, lens_ref, x_ref, q_ref, od_ref, oi_ref, acc_ref,
+            **kw):
+    _body(starts_ref, lens_ref, x_ref, None, q_ref, od_ref, oi_ref, acc_ref,
+          **kw)
+
+
+def _kernel_scaled(starts_ref, lens_ref, x_ref, scale_ref, q_ref, od_ref,
+                   oi_ref, acc_ref, **kw):
+    _body(starts_ref, lens_ref, x_ref, scale_ref, q_ref, od_ref, oi_ref,
+          acc_ref, **kw)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("bucket", "k", "tb", "td", "interpret",
                                     "n_valid"))
 def range_scan_pallas(x: jax.Array, starts: jax.Array, lens: jax.Array,
                       q: jax.Array, *, bucket: int, k: int, tb: int = 128,
                       td: int = 512, interpret: bool = False,
-                      n_valid: int = 0):
-    """x:(n_pad,d_pad) f32 rank-ordered, n_pad % tb == 0, d_pad % 128 == 0;
+                      n_valid: int = 0, scale: jax.Array | None = None):
+    """x:(n_pad,d_pad) rank-ordered, n_pad % tb == 0, d_pad % 128 == 0;
     starts/lens:(Q,) i32 per-query rank windows (len ≤ bucket); q:(Q,d_pad).
     Returns (ids:(Q,k) i32 absolute ranks (-1 pad), dists:(Q,k) f32).
+
+    ``x`` may be a quantized corpus copy (int8/bf16): the block is upcast to
+    f32 in VMEM right after the narrow DMA, and an optional ``scale``
+    ((d_pad,) f32 per-dimension dequant factors, int8 mode) multiplies it
+    before scoring — the accumulation/top-k machinery is dtype-agnostic.
 
     ``n_valid`` (0 = n_pad): ranks ≥ n_valid never enter the top-k, even when
     a window nominally covers them.  Shard-local dispatch (the mesh substrate
@@ -116,7 +135,7 @@ def range_scan_pallas(x: jax.Array, starts: jax.Array, lens: jax.Array,
         # back to the materializing oracle (rare: k > 128)
         from repro.kernels.ref import range_scan_ref
         return range_scan_ref(x, starts, lens, q, bucket=bucket, k=k, tb=tb,
-                              n_valid=n_valid)
+                              n_valid=n_valid, scale=scale)
     td = d_pad if d_pad <= td else 128
     nd = d_pad // td
     w = window_rows(bucket, tb)
@@ -125,15 +144,21 @@ def range_scan_pallas(x: jax.Array, starts: jax.Array, lens: jax.Array,
     starts = starts.astype(jnp.int32)
     lens = lens.astype(jnp.int32)
 
+    x_spec = pl.BlockSpec((tb, td),
+                          lambda i, j, kd, s_ref, l_ref:
+                          (jnp.minimum(s_ref[i] // tb + j, max_blk), kd))
+    q_spec = pl.BlockSpec((1, td), lambda i, j, kd, s_ref, l_ref: (i, kd))
+    if scale is None:
+        kernel, in_specs, ops = _kernel, [x_spec, q_spec], (x, q)
+    else:
+        s_spec = pl.BlockSpec((1, td), lambda i, j, kd, s_ref, l_ref: (0, kd))
+        kernel = _kernel_scaled
+        in_specs = [x_spec, s_spec, q_spec]
+        ops = (x, scale.astype(jnp.float32)[None, :], q)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(Q, nb, nd),
-        in_specs=[
-            pl.BlockSpec((tb, td),
-                         lambda i, j, kd, s_ref, l_ref:
-                         (jnp.minimum(s_ref[i] // tb + j, max_blk), kd)),
-            pl.BlockSpec((1, td), lambda i, j, kd, s_ref, l_ref: (i, kd)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, tb), lambda i, j, kd, s_ref, l_ref: (i, 0)),
             pl.BlockSpec((1, tb), lambda i, j, kd, s_ref, l_ref: (i, 0)),
@@ -141,11 +166,11 @@ def range_scan_pallas(x: jax.Array, starts: jax.Array, lens: jax.Array,
         scratch_shapes=[pltpu.VMEM((1, tb), jnp.float32)],
     )
     dists, ids = pl.pallas_call(
-        functools.partial(_kernel, nd=nd, tb=tb, k=k, n_valid=n_valid),
+        functools.partial(kernel, nd=nd, tb=tb, k=k, n_valid=n_valid),
         grid_spec=grid_spec,
         out_shape=(jax.ShapeDtypeStruct((Q, tb), jnp.float32),
                    jax.ShapeDtypeStruct((Q, tb), jnp.int32)),
         interpret=interpret,
-    )(starts, lens, x, q)
+    )(starts, lens, *ops)
 
     return ids[:, :k], dists[:, :k]

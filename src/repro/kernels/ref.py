@@ -14,19 +14,24 @@ def l2dist_ref(q: jax.Array, x: jax.Array) -> jax.Array:
     return jnp.maximum(qn - 2.0 * (qf @ xf.T) + xn[None, :], 0.0)
 
 
-def gather_dist_ref(x: jax.Array, ids: jax.Array, q: jax.Array) -> jax.Array:
-    """x:(N,d); ids:(M,) int32 (clipped to range); q:(d,) -> (M,) sq dists."""
+def gather_dist_ref(x: jax.Array, ids: jax.Array, q: jax.Array,
+                    scale: jax.Array | None = None) -> jax.Array:
+    """x:(N,d); ids:(M,) int32 (clipped to range); q:(d,) -> (M,) sq dists.
+    ``scale`` ((d,) f32) dequantizes int8 rows, matching the kernels."""
     rows = x[jnp.clip(ids, 0, x.shape[0] - 1)].astype(jnp.float32)
+    if scale is not None:
+        rows = rows * scale[None, :]
     diff = rows - q.astype(jnp.float32)[None, :]
     return jnp.sum(diff * diff, axis=-1)
 
 
-def gather_topk_ref(x: jax.Array, ids: jax.Array, q: jax.Array, *, k: int):
+def gather_topk_ref(x: jax.Array, ids: jax.Array, q: jax.Array, *, k: int,
+                    scale: jax.Array | None = None):
     """Oracle for ``gather_topk_pallas``: negative ids are masked (never
     enter the top-k); returns (ids:(k,) i32 ascending-distance (-1 pad),
     dists:(k,) f32 (+inf pad)).  ``lax.top_k`` breaks distance ties toward
     the lower input index — the kernel's select-min matches."""
-    d = jnp.where(ids >= 0, gather_dist_ref(x, ids, q), jnp.inf)
+    d = jnp.where(ids >= 0, gather_dist_ref(x, ids, q, scale), jnp.inf)
     d = jnp.pad(d, (0, max(k - d.shape[0], 0)), constant_values=jnp.inf)
     idp = jnp.pad(ids.astype(jnp.int32), (0, max(k - ids.shape[0], 0)),
                   constant_values=-1)
@@ -35,11 +40,18 @@ def gather_topk_ref(x: jax.Array, ids: jax.Array, q: jax.Array, *, k: int):
     return out_ids, -neg
 
 
+def gather_rerank_ref(x: jax.Array, ids: jax.Array, q: jax.Array, *, k: int):
+    """Oracle for ``gather_rerank_pallas``: per-query ``gather_topk_ref``
+    over (Q, M) survivor lists against (Q, d) queries."""
+    return jax.vmap(lambda i, qq: gather_topk_ref(x, i, qq, k=k))(ids, q)
+
+
 def range_scan_ref(x: jax.Array, starts: jax.Array, lens: jax.Array,
                    q: jax.Array, *, bucket: int, k: int, tb: int = 128,
-                   n_valid: int = 0):
+                   n_valid: int = 0, scale: jax.Array | None = None):
     """Oracle for ``range_scan_pallas``: same window/alignment/n_valid
-    contract.  x:(n_pad,d); starts/lens:(Q,); q:(Q,d) -> (ids, dists)."""
+    contract.  x:(n_pad,d); starts/lens:(Q,); q:(Q,d) -> (ids, dists).
+    ``scale`` ((d,) f32) dequantizes int8 rows, matching the kernel."""
     from repro.kernels.range_scan import window_rows
     n_pad = x.shape[0]
     n_valid = int(n_valid) or n_pad
@@ -47,6 +59,8 @@ def range_scan_ref(x: jax.Array, starts: jax.Array, lens: jax.Array,
     base = (starts.astype(jnp.int32) // tb) * tb
     rank = base[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]   # (Q, w)
     rows = x[jnp.clip(rank, 0, n_pad - 1)].astype(jnp.float32)       # (Q, w, d)
+    if scale is not None:
+        rows = rows * scale[None, None, :]
     diff = rows - q.astype(jnp.float32)[:, None, :]
     d2 = jnp.sum(diff * diff, axis=-1)
     valid = ((rank >= starts[:, None]) & (rank < (starts + lens)[:, None])

@@ -41,13 +41,16 @@ def serve_rfann(args):
     print("[serve] building RNSG index ...")
     idx = RNSGIndex.build(vecs, attrs, m=args.m, ef_spatial=32, ef_attribute=48)
     print(f"[serve] {idx.stats()}")
+    if args.precision != "f32":
+        idx.install_quantized(args.precision)   # build quantized corpus once
     warm = idx.search(qv[:8], ranges[:8], k=args.k, ef=args.ef,
-                      plan=args.plan,
-                      beam_width=args.beam_width)           # warm the jit
+                      plan=args.plan, beam_width=args.beam_width,
+                      precision=args.precision)             # warm the jit
     assert warm.ids.shape == (8, args.k)                    # SearchResult
 
     engine = RFANNEngine(idx, k=args.k, ef=args.ef, plan=args.plan,
                          beam_width=args.beam_width,
+                         precision=args.precision,
                          max_batch=args.max_batch, max_wait_ms=2.0,
                          calibration_path=args.calibration or None,
                          cache_bytes=args.cache_mb << 20,
@@ -128,6 +131,11 @@ def main(argv=None):
     ap.add_argument("--beam-width", type=int, default=1,
                     help="batched beam expansion width (1 = legacy "
                          "single-node hops; try 4 for throughput)")
+    ap.add_argument("--precision", choices=["f32", "int8", "bf16"],
+                    default="f32",
+                    help="distance-scoring precision: quantized corpora "
+                         "(int8/bf16) scan cheaper and rerank the survivors "
+                         "in exact f32 (same ids as f32)")
     ap.add_argument("--calibration", default="",
                     help="JSON path: load cost-model calibration at startup, "
                          "persist it on shutdown")

@@ -18,10 +18,24 @@ Two quantities are calibrated online:
 * ``scan_unit`` — refined from observed per-unit wall times of executed scan
   and beam partitions (warm calls only; the executor skips the first call of
   each jit signature so compile time never poisons the estimate).
+
+Per-precision pricing: quantized corpora (int8/bf16) move fewer bytes per
+scored row, so scan and beam units are cheaper under them.  Wall-time EMAs
+are kept **per precision** (``{"f32": ..., "int8": ...}``); the predicted
+cost of a precision is the f32 cost times a factor — the measured
+``us[precision] / us["f32"]`` ratio once both are observed, else a static
+bandwidth-derived prior (``PRECISION_PRIOR``).  The routing decision thus
+shifts toward scan under quantization exactly as fast as the hardware
+actually delivers the bandwidth win.
 """
 from __future__ import annotations
 
 from typing import Dict, Optional
+
+#: prior per-unit cost relative to f32, before any wall observation of that
+#: precision lands.  int8 moves 4× fewer bytes (≈0.25) plus rerank overhead;
+#: bf16 moves 2× fewer (≈0.5) plus rerank overhead.
+PRECISION_PRIOR: Dict[str, float] = {"f32": 1.0, "bf16": 0.6, "int8": 0.35}
 
 
 class CostModel:
@@ -36,8 +50,18 @@ class CostModel:
         self.beam_obs = 0
         self.scan_wall_obs = 0                  # observe_wall feeds per kind
         self.beam_wall_obs = 0
-        self._scan_us: Optional[float] = None    # wall us per scanned row
-        self._beam_us: Optional[float] = None    # wall us per beam distance
+        # wall us per scanned row / per beam distance, keyed by precision
+        self._scan_us_p: Dict[str, float] = {}
+        self._beam_us_p: Dict[str, float] = {}
+
+    # f32 scalar view (back-compat: snapshots/state predating precisions)
+    @property
+    def _scan_us(self) -> Optional[float]:
+        return self._scan_us_p.get("f32")
+
+    @property
+    def _beam_us(self) -> Optional[float]:
+        return self._beam_us_p.get("f32")
 
     # back-compat scalar view (width-1 regime) -----------------------------
     @property
@@ -57,12 +81,29 @@ class CostModel:
         nearest = min(self._ndist_per_ef, key=lambda o: abs(o - w))
         return self._ndist_per_ef[nearest]
 
-    # ------------------------------------------------------------- predict
-    def predict_beam_units(self, ef: int, beam_width: int = 1) -> float:
-        return self.beam_unit * self.ndist_per_ef_at(beam_width) * float(ef)
+    # ---------------------------------------------------------- precisions
+    def precision_factor(self, kind: str, precision: str = "f32") -> float:
+        """Per-unit cost of ``precision`` relative to f32 for one strategy
+        (``kind`` in {"scan", "beam"}): the measured wall-us ratio when both
+        precisions have been observed, else the bandwidth prior."""
+        if precision == "f32":
+            return 1.0
+        us = self._scan_us_p if kind == "scan" else self._beam_us_p
+        f32, this = us.get("f32"), us.get(precision)
+        if f32 and this:
+            return this / f32
+        return PRECISION_PRIOR.get(precision, 1.0)
 
-    def predict_scan_units(self, window_rows: int) -> float:
-        return self.scan_unit * float(window_rows)
+    # ------------------------------------------------------------- predict
+    def predict_beam_units(self, ef: int, beam_width: int = 1,
+                           precision: str = "f32") -> float:
+        return (self.beam_unit * self.ndist_per_ef_at(beam_width) *
+                float(ef) * self.precision_factor("beam", precision))
+
+    def predict_scan_units(self, window_rows: int,
+                           precision: str = "f32") -> float:
+        return (self.scan_unit * float(window_rows) *
+                self.precision_factor("scan", precision))
 
     # ----------------------------------------------------------- calibrate
     def update_beam(self, ndist_mean: float, ef: int,
@@ -83,26 +124,31 @@ class CostModel:
         self.beam_obs += 1
 
     def observe_wall(self, strategy: str, units_per_query: float,
-                     seconds: float, nq: int) -> None:
-        """Feed measured wall time of one executed (warm) partition."""
+                     seconds: float, nq: int,
+                     precision: str = "f32") -> None:
+        """Feed measured wall time of one executed (warm) partition.  The
+        EMA lands in the ``precision``'s slot; the scan/beam relative weight
+        (``scan_unit``) re-anchors on f32 timings only so quantized traffic
+        cannot skew the baseline strategy ratio."""
         if nq <= 0 or units_per_query <= 0 or seconds <= 0:
             return
         per_unit = seconds * 1e6 / nq / units_per_query
+        us = self._scan_us_p if strategy == "scan" else self._beam_us_p
         if strategy == "scan":
             self.scan_wall_obs += 1
-            self._scan_us = per_unit if self._scan_us is None else \
-                self.decay * self._scan_us + (1.0 - self.decay) * per_unit
         else:
             self.beam_wall_obs += 1
-            self._beam_us = per_unit if self._beam_us is None else \
-                self.decay * self._beam_us + (1.0 - self.decay) * per_unit
+        prev = us.get(precision)
+        us[precision] = per_unit if prev is None else \
+            self.decay * prev + (1.0 - self.decay) * per_unit
         if self._scan_us and self._beam_us:
             # re-anchor the relative per-unit weight on real hardware timings
             self.scan_unit = self._scan_us / self._beam_us
 
     def observe_wall_mixed(self, scan_units_total: float,
                            beam_units_total: float, seconds: float,
-                           n_scan: int, n_beam: int) -> None:
+                           n_scan: int, n_beam: int,
+                           precision: str = "f32") -> None:
         """Feed one **fused** dispatch that executed a scan group and a beam
         group in a single traced call (the mesh path's branchless body) —
         the wall time cannot be measured per group, so it is attributed
@@ -119,10 +165,12 @@ class CostModel:
             return
         if scan_units_total > 0 and n_scan > 0:
             self.observe_wall("scan", scan_units_total / n_scan,
-                              seconds * su / tot, n_scan)
+                              seconds * su / tot, n_scan,
+                              precision=precision)
         if beam_units_total > 0 and n_beam > 0:
             self.observe_wall("beam", beam_units_total / n_beam,
-                              seconds * bu / tot, n_beam)
+                              seconds * bu / tot, n_beam,
+                              precision=precision)
 
     def snapshot(self) -> dict:
         return dict(scan_unit=round(self.scan_unit, 5),
@@ -133,14 +181,19 @@ class CostModel:
                     beam_obs_bw=dict(self._beam_obs_w),
                     scan_wall_obs=self.scan_wall_obs,
                     beam_wall_obs=self.beam_wall_obs,
-                    scan_us=self._scan_us, beam_us=self._beam_us)
+                    scan_us=self._scan_us, beam_us=self._beam_us,
+                    scan_us_p=dict(self._scan_us_p),
+                    beam_us_p=dict(self._beam_us_p))
 
     # -------------------------------------------------------- persistence
     def state_dict(self) -> dict:
         """Full calibration state (JSON-serializable, exact restore).
         ``ndist_per_ef`` stays the width-1 scalar so calibration files
         written before the batched-expansion regime load unchanged; the
-        per-width EMAs ride along under ``ndist_per_ef_bw``."""
+        per-width EMAs ride along under ``ndist_per_ef_bw``, and the
+        per-precision wall EMAs under ``scan_us_p``/``beam_us_p`` (the old
+        scalar ``scan_us``/``beam_us`` keys keep the f32 values, so files
+        round-trip across the precision boundary in both directions)."""
         return dict(scan_unit=self.scan_unit, beam_unit=self.beam_unit,
                     ndist_per_ef=self.ndist_per_ef,
                     ndist_per_ef_bw={str(w): v
@@ -150,7 +203,9 @@ class CostModel:
                     decay=self.decay, beam_obs=self.beam_obs,
                     scan_wall_obs=self.scan_wall_obs,
                     beam_wall_obs=self.beam_wall_obs,
-                    scan_us=self._scan_us, beam_us=self._beam_us)
+                    scan_us=self._scan_us, beam_us=self._beam_us,
+                    scan_us_p=dict(self._scan_us_p),
+                    beam_us_p=dict(self._beam_us_p))
 
     def load_state_dict(self, state: dict) -> None:
         self.scan_unit = float(state["scan_unit"])
@@ -169,5 +224,14 @@ class CostModel:
         # pre-observability files carry no wall-obs counts: default 0
         self.scan_wall_obs = int(state.get("scan_wall_obs", 0))
         self.beam_wall_obs = int(state.get("beam_wall_obs", 0))
-        self._scan_us = state.get("scan_us")
-        self._beam_us = state.get("beam_us")
+        # pre-precision files carry only the f32 scalars: seed the dicts
+        self._scan_us_p = {k: float(v) for k, v in
+                           state.get("scan_us_p", {}).items()
+                           if v is not None}
+        self._beam_us_p = {k: float(v) for k, v in
+                           state.get("beam_us_p", {}).items()
+                           if v is not None}
+        if "f32" not in self._scan_us_p and state.get("scan_us") is not None:
+            self._scan_us_p["f32"] = float(state["scan_us"])
+        if "f32" not in self._beam_us_p and state.get("beam_us") is not None:
+            self._beam_us_p["f32"] = float(state["beam_us"])

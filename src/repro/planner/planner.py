@@ -67,10 +67,14 @@ class QueryPlanner:
         self.max_scan_len = max(self.min_bucket,
                                 int(max_scan_frac * self.n))
         self.max_bucket = next_pow2(self.n)
+        # bumped by save_calibration: fences auto-routed cache entries (a
+        # persisted calibration change may route a repeat query differently,
+        # so SearchCache expires auto rows stored under an older epoch)
+        self.calibration_epoch = 0
 
     # ----------------------------------------------------- routing decision
     def choose_strategy(self, length: int, *, k: int, ef: int,
-                        beam_width: int = 1) -> int:
+                        beam_width: int = 1, precision: str = "f32") -> int:
         """Per-query cost-based routing for one rank-interval length.
 
         Scalar reference semantics for ``choose_strategy_batch`` (the unit
@@ -86,13 +90,16 @@ class QueryPlanner:
             return BEAM
         bucket = bucket_for_len(ln, min_bucket=self.min_bucket,
                                 max_bucket=self.max_bucket)
-        scan_cost = self.cost.predict_scan_units(window_rows(bucket))
+        scan_cost = self.cost.predict_scan_units(window_rows(bucket),
+                                                 precision=precision)
         beam_cost = self.cost.predict_beam_units(ef_bucket(ln, k, ef),
-                                                 beam_width)
+                                                 beam_width,
+                                                 precision=precision)
         return SCAN if scan_cost <= beam_cost else BEAM
 
     def predict_costs(self, lens: np.ndarray, *, k: int, ef: int,
-                      beam_width: int = 1) -> Tuple[np.ndarray, np.ndarray]:
+                      beam_width: int = 1, precision: str = "f32"
+                      ) -> Tuple[np.ndarray, np.ndarray]:
         """(Q,) lengths -> per-query (scan_cost, beam_cost) in beam distance
         units, from the current calibrated model.  This is the exact pricing
         ``choose_strategy_batch`` routes on — also recorded into the plan
@@ -101,22 +108,25 @@ class QueryPlanner:
         lens = np.asarray(lens, np.int64)
         buckets = buckets_np(lens, min_bucket=self.min_bucket,
                              max_bucket=self.max_bucket)
-        scan_cost = (self.cost.predict_scan_units(1) *
+        scan_cost = (self.cost.predict_scan_units(1, precision=precision) *
                      window_rows_np(buckets).astype(np.float64))
         beam_cost = (self.cost.beam_unit *
                      self.cost.ndist_per_ef_at(beam_width) *
+                     self.cost.precision_factor("beam", precision) *
                      ef_bucket_np(lens, k, ef).astype(np.float64))
         return scan_cost, beam_cost
 
     def choose_strategy_batch(self, lens: np.ndarray, *, k: int, ef: int,
-                              beam_width: int = 1) -> np.ndarray:
+                              beam_width: int = 1,
+                              precision: str = "f32") -> np.ndarray:
         """Vectorized ``choose_strategy``: (Q,) lengths -> (Q,) int8 strategy
         vector (``SCAN``/``BEAM``).  Pure numpy over the whole batch — this
         is the host-side half of mesh dispatch, where the strategy vector is
         computed once and passed into ``shard_map`` as a replicated operand."""
         lens = np.asarray(lens, np.int64)
         scan_cost, beam_cost = self.predict_costs(lens, k=k, ef=ef,
-                                                  beam_width=beam_width)
+                                                  beam_width=beam_width,
+                                                  precision=precision)
         eligible = lens <= self.max_scan_len
         use_scan = (eligible & (scan_cost <= beam_cost)) | (lens <= 0) \
             | (lens <= k)                  # tiny slices: scan is exact & free
@@ -124,7 +134,8 @@ class QueryPlanner:
 
     # ------------------------------------------------------------------
     def plan_batch(self, lo: np.ndarray, hi: np.ndarray, *, k: int, ef: int,
-                   mode: str = "auto", beam_width: int = 1) -> Plan:
+                   mode: str = "auto", beam_width: int = 1,
+                   precision: str = "f32") -> Plan:
         """lo/hi: (Q,) int rank intervals (inclusive; lo > hi = empty).
         mode: "auto" (cost-based) | "scan" | "beam" (forced)."""
         lo = np.asarray(lo, np.int64)
@@ -139,7 +150,8 @@ class QueryPlanner:
             use_scan = lens <= 0           # beam cannot express empty ranges
         else:
             use_scan = self.choose_strategy_batch(
-                lens, k=k, ef=ef, beam_width=beam_width) == SCAN
+                lens, k=k, ef=ef, beam_width=beam_width,
+                precision=precision) == SCAN
         strategy = np.where(use_scan, SCAN, BEAM).astype(np.int8)
 
         partitions: List[Partition] = []
@@ -177,6 +189,9 @@ class QueryPlanner:
                 f.flush()
                 os.fsync(f.fileno())
             os.replace(tmp, path)
+            # persisted calibration is the fence auto-routed cache rows were
+            # stored under; bump so stale routing decisions expire on lookup
+            self.calibration_epoch += 1
         finally:
             if os.path.exists(tmp):
                 os.remove(tmp)

@@ -29,14 +29,16 @@ See docs/architecture.md for the layer diagram and docs/distributed.md for
 the mesh dispatch flow.
 """
 from repro.search.cache import SearchCache, query_key
-from repro.search.request import STRATEGIES, SearchRequest, SearchResult
+from repro.search.request import (PRECISIONS, STRATEGIES, SearchRequest,
+                                  SearchResult)
 from repro.search.resolve import (clip_interval, clip_interval_jax,
                                   rank_interval, rank_interval_jax,
                                   remap_ids, remap_ids_jax, select_entry)
 from repro.search.substrate import (MeshSubstrate, PendingSearch,
                                     SearchSubstrate, merge_topk)
 
-__all__ = ["STRATEGIES", "SearchRequest", "SearchResult", "SearchSubstrate",
+__all__ = ["PRECISIONS", "STRATEGIES", "SearchRequest", "SearchResult",
+           "SearchSubstrate",
            "MeshSubstrate", "PendingSearch", "SearchCache", "query_key",
            "merge_topk",
            "rank_interval", "rank_interval_jax", "select_entry",

@@ -3,7 +3,8 @@
 ``SearchCache`` memoizes **finished per-query results** (original corpus
 ids + distances + scalar stats) keyed on everything that determines them:
 
-    (blake2b(query vector), lo, hi, k, ef, strategy, use_kernel)
+    (blake2b(query vector), lo, hi, k, ef, strategy, use_kernel,
+     beam_width, precision)
 
 The rank interval — not the raw attribute range — is part of the key, so
 two different attribute ranges that resolve to the same ranks share one
@@ -37,6 +38,7 @@ from __future__ import annotations
 
 import hashlib
 import threading
+import time
 from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
@@ -61,11 +63,15 @@ def hash_query(q: np.ndarray) -> bytes:
 
 def query_key(q: np.ndarray, lo: int, hi: int, k: int, ef: int,
               strategy: str, use_kernel: bool = False, ns=None,
-              digest: Optional[bytes] = None, beam_width: int = 1) -> Tuple:
+              digest: Optional[bytes] = None, beam_width: int = 1,
+              precision: str = "f32") -> Tuple:
     """Cache key for one query row: content hash of the vector plus every
     request parameter that changes the result (``beam_width`` included —
     the batched-expansion frontier may legitimately differ from the
-    single-expansion one at sub-exhaustive ``ef``).
+    single-expansion one at sub-exhaustive ``ef``).  ``precision`` is also
+    keyed: the quantized paths return the exact f32 top-k id set after
+    rerank, but distances/stats and the traversal at sub-exhaustive ``ef``
+    are precision-dependent, so rows never cross precisions.
 
     ``ns`` namespaces the key to one corpus slice.  It is required whenever
     several substrates share a cache: two shards routinely see the *same*
@@ -74,15 +80,25 @@ def query_key(q: np.ndarray, lo: int, hi: int, k: int, ef: int,
     the namespace their entries would collide and serve wrong rows."""
     h = digest if digest is not None else hash_query(q)
     return (ns, h, int(lo), int(hi), int(k), int(ef), strategy,
-            bool(use_kernel), int(beam_width))
+            bool(use_kernel), int(beam_width), precision)
 
 
 @dataclass
 class CacheEntry:
-    """One finished per-query result (original corpus ids, -1 padded)."""
+    """One finished per-query result (original corpus ids, -1 padded).
+
+    ``stamp``/``cal_epoch`` implement staleness fencing for rows whose
+    routing was a *decision*, not part of the request contract:
+    ``strategy="auto"`` rows record the planner's calibration epoch at
+    store time (``cal_epoch``) and their insertion time (``stamp``).  A
+    later lookup re-validates both — see :meth:`SearchCache.lookup`.
+    Forced-strategy rows leave ``cal_epoch`` as ``None`` and are never
+    age- or epoch-expired (their result is calibration-independent)."""
     ids: np.ndarray                 # (k,) int32
     dists: np.ndarray               # (k,) float32
     stats: Dict[str, np.generic]    # scalar per-query stats (hops/ndist/...)
+    stamp: float = 0.0              # clock() at store time
+    cal_epoch: Optional[int] = None  # planner calibration epoch (auto rows)
 
     @property
     def nbytes(self) -> int:
@@ -96,8 +112,15 @@ class SearchCache:
     Thread-safe: the engine's dispatch thread and ``swap_index`` callers may
     touch it concurrently (one short lock around every structural op)."""
 
-    def __init__(self, max_bytes: int = 64 << 20):
+    def __init__(self, max_bytes: int = 64 << 20, *,
+                 ttl_s: Optional[float] = None, clock=time.monotonic):
+        """``ttl_s`` bounds the age of ``strategy="auto"`` rows (None = no
+        age limit); ``clock`` is injectable for deterministic expiry tests.
+        Forced-strategy rows are exempt — their result does not depend on
+        planner calibration, so age cannot make them wrong."""
         self.max_bytes = int(max_bytes)
+        self.ttl_s = ttl_s
+        self.clock = clock
         self._d: "OrderedDict[Tuple, CacheEntry]" = OrderedDict()
         self._lock = threading.Lock()
         self.bytes = 0
@@ -107,17 +130,35 @@ class SearchCache:
         self.dedup_hits = 0     # intra-batch duplicates served by one dispatch
         self.evictions = 0
         self.invalidations = 0
+        self.expired = 0        # TTL / calibration-epoch expiries
 
     def __len__(self) -> int:
         return len(self._d)
 
     # ------------------------------------------------------------ core ops
-    def lookup(self, key: Tuple) -> Optional[CacheEntry]:
+    def lookup(self, key: Tuple,
+               cal_epoch: Optional[int] = None) -> Optional[CacheEntry]:
+        """``cal_epoch``: the planner's current calibration epoch.  Entries
+        stored under ``strategy="auto"`` (``entry.cal_epoch is not None``)
+        are re-validated on every hit: a calibration-epoch mismatch (the
+        planner persisted new calibration since the row was stored) or an
+        age beyond ``ttl_s`` expires the row — it is dropped and the lookup
+        counts as a miss, so the caller re-executes under current routing."""
         with self._lock:
             e = self._d.get(key)
             if e is None:
                 self.misses += 1
                 return None
+            if e.cal_epoch is not None:
+                stale = (cal_epoch is not None and e.cal_epoch != cal_epoch)
+                if not stale and self.ttl_s is not None:
+                    stale = (self.clock() - e.stamp) > self.ttl_s
+                if stale:
+                    del self._d[key]
+                    self.bytes -= e.nbytes
+                    self.expired += 1
+                    self.misses += 1
+                    return None
             self._d.move_to_end(key)
             self.hits += 1
             return e
@@ -133,6 +174,7 @@ class SearchCache:
         with self._lock:
             if epoch is not None and epoch != self.epoch:
                 return
+            entry.stamp = self.clock()
             old = self._d.pop(key, None)
             if old is not None:
                 self.bytes -= old.nbytes
@@ -161,12 +203,13 @@ class SearchCache:
                     max_bytes=self.max_bytes, hits=self.hits,
                     misses=self.misses, dedup_hits=self.dedup_hits,
                     evictions=self.evictions,
-                    invalidations=self.invalidations)
+                    invalidations=self.invalidations, expired=self.expired)
 
     # ------------------------------------------------- batch split / stitch
     def split(self, qv: np.ndarray, lo: np.ndarray, hi: np.ndarray, k: int,
               ef: int, strategy: str, use_kernel: bool = False, ns=None,
-              digests: Optional[List[bytes]] = None, beam_width: int = 1):
+              digests: Optional[List[bytes]] = None, beam_width: int = 1,
+              precision: str = "f32", cal_epoch: Optional[int] = None):
         """Partition one batch into cache hits, misses, and intra-batch
         duplicates of a miss.
 
@@ -183,14 +226,14 @@ class SearchCache:
         keys = [query_key(qv[i], lo[i], hi[i], k, ef, strategy, use_kernel,
                           ns=ns,
                           digest=digests[i] if digests is not None else None,
-                          beam_width=beam_width)
+                          beam_width=beam_width, precision=precision)
                 for i in range(len(qv))]
         hit_rows: Dict[int, CacheEntry] = {}
         miss: List[int] = []
         first_at: Dict[Tuple, int] = {}     # miss key -> its slot in `miss`
         dups: Dict[int, int] = {}
         for i, key in enumerate(keys):
-            e = self.lookup(key)
+            e = self.lookup(key, cal_epoch=cal_epoch)
             if e is not None:
                 hit_rows[i] = e
                 continue
@@ -206,17 +249,20 @@ class SearchCache:
         return keys, hit_rows, np.asarray(miss, np.int64), dups
 
     def store_batch(self, keys: List[Tuple], res: SearchResult,
-                    epoch: Optional[int] = None) -> None:
+                    epoch: Optional[int] = None,
+                    cal_epoch: Optional[int] = None) -> None:
         """Store every row of a finished miss-batch result (rows are copied
         so the cache never pins the batch arrays).  Pass the ``epoch``
-        captured at split time — see :meth:`store`."""
+        captured at split time — see :meth:`store`.  ``cal_epoch`` (auto
+        rows only) arms the staleness fence on each stored entry."""
         q = len(res.ids)
         per_row = [(n, v) for n, v in res.stats.items()
                    if isinstance(v, np.ndarray) and v.ndim >= 1 and len(v) == q]
         for j, key in enumerate(keys):
             self.store(key, CacheEntry(
                 np.array(res.ids[j]), np.array(res.dists[j]),
-                {n: v[j] for n, v in per_row}), epoch=epoch)
+                {n: v[j] for n, v in per_row},
+                cal_epoch=cal_epoch), epoch=epoch)
 
     def assemble(self, q: int, k: int, hit_rows: Dict[int, CacheEntry],
                  miss_res: Optional[SearchResult],

@@ -13,6 +13,17 @@ import numpy as np
 
 STRATEGIES = ("graph", "auto", "scan", "beam")
 
+# mirrored from repro.kernels.quantize (imported lazily there to keep this
+# module dependency-free for type-only consumers)
+PRECISIONS = ("f32", "int8", "bf16")
+
+
+def _invalid(field_name: str, value, requirement: str) -> ValueError:
+    """Uniform validation error: names the offending field and the value it
+    carried, so a batch producer can map the message back to its input."""
+    return ValueError(
+        f"SearchRequest: invalid {field_name}={value!r} ({requirement})")
+
 
 @dataclass(frozen=True)
 class SearchRequest:
@@ -29,6 +40,12 @@ class SearchRequest:
               request performs (1 = the legacy single-node expansion; B>1
               expands the best B candidates per hop — see
               ``repro.core.beam``).
+    precision: corpus dtype the distance pass scores against — "f32"
+              (exact), or "int8"/"bf16" (quantized scan/traversal followed
+              by a fused f32 rerank of the survivors, so the returned top-k
+              id set matches the f32 path — see ``repro.kernels.quantize``).
+              Non-f32 requires the substrate to have the quantized corpus
+              installed (``install_quantized``).
     trace   : optional ``repro.obs.QueryTrace``.  When attached, every
               stage that touches the request appends a wall-timed span
               (resolve / plan / dispatch / stitch) and the trace comes back
@@ -43,14 +60,22 @@ class SearchRequest:
     strategy: str = "graph"
     use_kernel: bool = False
     beam_width: int = 1
+    precision: str = "f32"
     trace: Optional[Any] = None
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
-            raise ValueError(f"unknown strategy {self.strategy!r}: "
-                             f"expected one of {STRATEGIES}")
+            raise _invalid("strategy", self.strategy,
+                           f"expected one of {STRATEGIES}")
+        if self.precision not in PRECISIONS:
+            raise _invalid("precision", self.precision,
+                           f"expected one of {PRECISIONS}")
+        if self.k < 1:
+            raise _invalid("k", self.k, "must be >= 1")
+        if self.ef < 1:
+            raise _invalid("ef", self.ef, "must be >= 1")
         if self.beam_width < 1:
-            raise ValueError(f"beam_width must be >= 1, got {self.beam_width}")
+            raise _invalid("beam_width", self.beam_width, "must be >= 1")
 
 
 @dataclass

@@ -57,8 +57,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core.beam import beam_search_batch
+from repro.core.beam import beam_search_batch, rerank_pool
 from repro.kernels.ops import range_scan
+from repro.kernels.quantize import quantize_corpus, rerank_depth
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.profiler import annotate
 from repro.obs.trace import maybe_span
@@ -131,6 +132,7 @@ class SearchSubstrate:
             planner = QueryPlanner(max(n, 1), deg)
         self.planner = planner
         self._x_pad = None          # padded scan copy, built on first scan
+        self._quant: Dict[str, dict] = {}   # precision -> quantized slots
         self._warm: Set[Tuple] = set()
 
     @classmethod
@@ -169,23 +171,28 @@ class SearchSubstrate:
         lo = np.asarray(req.lo, np.int64)
         hi = np.asarray(req.hi, np.int64)
         k, ef, bw = int(req.k), int(req.ef), int(req.beam_width)
+        prec = req.precision
         tr = req.trace
         met = self.metrics
         nq = len(qv)
         if met is not None and nq:
             met.counter("queries_total").inc(nq)
+            met.counter(f"queries_{prec}_total").inc(nq)
         cache = self.cache
         cache_info = dict(cache_enabled=cache is not None,
                           cache_hits=0, cache_misses=nq, batch_dedup=0)
         if cache is None or nq == 0:
             fin = self._dispatch_all(qv, lo, hi, k, ef, req.strategy,
-                                     req.use_kernel, defer, bw,
+                                     req.use_kernel, defer, bw, prec,
                                      trace=tr, cache_info=cache_info)
             return PendingSearch(self._stitched(fin, tr))
         epoch = cache.epoch             # fences stores vs invalidate()
+        cal_epoch = (self.planner.calibration_epoch
+                     if req.strategy == "auto" else None)
         keys, hit_rows, miss, dups = cache.split(
             qv, lo, hi, k, ef, req.strategy, req.use_kernel,
-            ns=self.cache_ns, digests=q_digests, beam_width=bw)
+            ns=self.cache_ns, digests=q_digests, beam_width=bw,
+            precision=prec, cal_epoch=cal_epoch)
         cache_info.update(cache_hits=len(hit_rows), cache_misses=len(miss),
                           batch_dedup=len(dups))
         if met is not None:
@@ -201,12 +208,13 @@ class SearchSubstrate:
                 lambda: cache.assemble(nq, k, hit_rows, None, miss), tr))
         fin = self._dispatch_all(qv[miss], lo[miss], hi[miss], k, ef,
                                  req.strategy, req.use_kernel, defer, bw,
-                                 trace=tr, cache_info=cache_info)
+                                 prec, trace=tr, cache_info=cache_info)
         miss_keys = [keys[i] for i in miss]
 
         def finalize() -> SearchResult:
             miss_res = fin()
-            cache.store_batch(miss_keys, miss_res, epoch=epoch)
+            cache.store_batch(miss_keys, miss_res, epoch=epoch,
+                              cal_epoch=cal_epoch)
             if not hit_rows and not dups:
                 miss_res.stats["cache_hits"] = 0
                 return miss_res
@@ -238,7 +246,8 @@ class SearchSubstrate:
 
     # ----------------------------------------------------------- dispatch
     def _dispatch_all(self, qv, lo, hi, k, ef, strategy, use_kernel,
-                      defer: bool, beam_width: int = 1, trace=None,
+                      defer: bool, beam_width: int = 1,
+                      precision: str = "f32", trace=None,
                       cache_info=None) -> Callable[[], SearchResult]:
         """Enqueue the uncached work for one (sub-)batch; the returned
         closure blocks, stitches, and remaps rank ids to original ids.
@@ -250,6 +259,7 @@ class SearchSubstrate:
             sp.attrs.update(cache_info or {})
             sp.attrs.update(strategy_mode=strategy, use_kernel=use_kernel,
                             beam_width=beam_width, ns=self.cache_ns,
+                            precision=precision,
                             dispatched=len(qv), deferred=defer)
             if strategy == "graph":
                 if trace is not None:
@@ -258,10 +268,11 @@ class SearchSubstrate:
                 if met is not None and len(qv):
                     met.counter("graph_queries_total").inc(len(qv))
                 fin = self._dispatch_graph(qv, lo, hi, k, ef, use_kernel,
-                                           beam_width)
+                                           beam_width, precision)
             else:
                 fin = self._dispatch_planned(qv, lo, hi, k, ef, strategy,
                                              use_kernel, defer, beam_width,
+                                             precision,
                                              trace=trace, span=sp)
 
         def finalize() -> SearchResult:
@@ -271,19 +282,24 @@ class SearchSubstrate:
         return finalize
 
     # ------------------------------------------------------ graph strategy
-    def _dispatch_graph(self, qv, lo, hi, k, ef, use_kernel, beam_width=1):
-        """The paper's path: one beam-search dispatch over the full batch."""
+    def _dispatch_graph(self, qv, lo, hi, k, ef, use_kernel, beam_width=1,
+                        precision="f32"):
+        """The paper's path: one beam-search dispatch over the full batch.
+        Non-f32 precisions score the traversal against the quantized corpus
+        and rerank the final pool in f32 inside ``beam_search_batch``."""
         qj = jnp.asarray(qv, jnp.float32)
         lo_j = jnp.asarray(lo)
         hi_j = jnp.asarray(hi)
         entry = resolve.select_entry(self._rmq, self._dist_c, lo_j, hi_j,
                                      self.n)
+        slot = self._quant_for(precision)
+        quant = None if slot is None else (slot["data"], slot["scale"])
         t0 = time.perf_counter()
         with annotate("rnsg.graph_beam_dispatch"):
             ids, dists, st = beam_search_batch(
                 self._vecs, self._nbrs, qj, lo_j, hi_j, entry,
                 k=k, ef=max(ef, k), use_kernel=use_kernel,
-                beam_width=beam_width)
+                beam_width=beam_width, quant=quant)
         met = self.metrics
 
         def finalize():
@@ -298,7 +314,8 @@ class SearchSubstrate:
 
     # ---------------------------------------------------- planned strategies
     def _dispatch_planned(self, qv, lo, hi, k, ef, mode, use_kernel,
-                          defer: bool, beam_width: int = 1, trace=None,
+                          defer: bool, beam_width: int = 1,
+                          precision: str = "f32", trace=None,
                           span=None):
         """Routing policy: plan the batch, dispatch each fixed-shape
         partition, stitch back in request order.  ``defer=False`` blocks
@@ -309,18 +326,22 @@ class SearchSubstrate:
         met = self.metrics
         if trace is None:
             plan = self.planner.plan_batch(lo, hi, k=k, ef=ef, mode=mode,
-                                           beam_width=beam_width)
+                                           beam_width=beam_width,
+                                           precision=precision)
         else:
             with trace.span("plan") as psp:
                 plan = self.planner.plan_batch(lo, hi, k=k, ef=ef,
                                                mode=mode,
-                                               beam_width=beam_width)
+                                               beam_width=beam_width,
+                                               precision=precision)
                 lens = np.clip(hi - lo + 1, 0, None)
                 sc, bc = self.planner.predict_costs(lens, k=k, ef=ef,
-                                                    beam_width=beam_width)
+                                                    beam_width=beam_width,
+                                                    precision=precision)
                 psp.attrs.update(
                     strategy_mode=mode, strategy=plan.strategy.copy(),
                     scan_frac=plan.scan_frac, beam_width=beam_width,
+                    precision=precision,
                     partitions=[p.signature for p in plan.partitions],
                     predicted_scan_units=sc, predicted_beam_units=bc)
         pad_rows = sum(p.pad_q - len(p.indices) for p in plan.partitions)
@@ -336,15 +357,17 @@ class SearchSubstrate:
         for part in plan.partitions:
             if part.kind == "scan":
                 fin = self._dispatch_scan(qv, lo, hi, part.indices,
-                                          part.param, part.pad_q, k,
-                                          calibrate_wall=not defer)
+                                          part.param, part.pad_q, k, ef,
+                                          calibrate_wall=not defer,
+                                          precision=precision, trace=trace)
             else:
                 fin = self._dispatch_beam(qv, lo, hi, part.indices,
                                           part.param, part.pad_q, k,
                                           calibrate=(mode == "auto"),
                                           calibrate_wall=not defer,
                                           use_kernel=use_kernel,
-                                          beam_width=beam_width)
+                                          beam_width=beam_width,
+                                          precision=precision)
             if not defer:
                 val = fin()
                 fin = (lambda v: lambda: v)(val)
@@ -381,8 +404,42 @@ class SearchSubstrate:
                 self._vecs, ((0, n_pad - self.n), (0, self.d_pad - self.d)))
         return self._x_pad
 
-    def _dispatch_scan(self, qv, lo, hi, idx, bucket: int, pad_q: int, k: int,
-                       *, calibrate_wall: bool):
+    # --------------------------------------------------- quantized corpus
+    def install_quantized(self, precision: str) -> None:
+        """Build (or rebuild) the quantized corpus copies for one precision
+        ahead of serving, so the first quantized request pays no build cost.
+        Lazy build happens anyway on first use (``_quant_for``)."""
+        if precision != "f32":
+            self._quant.pop(precision, None)
+            self._quant_for(precision)
+
+    def _quant_for(self, precision: str) -> Optional[dict]:
+        """Quantized scoring slots for one precision (lazy, cached):
+        ``data`` (n,d) for the beam's gathered rows, ``data_pad``
+        (n_pad,d_pad) rank-ordered for the scan kernel (interval slicing is
+        unchanged — quantization is per-element), ``scale``/``scale_pad``
+        ((d,)/(d_pad,) f32, int8 only; padding scale with 1.0 is inert
+        because padded query/corpus lanes are zero)."""
+        if precision == "f32":
+            return None
+        slot = self._quant.get(precision)
+        if slot is None:
+            qc = quantize_corpus(self._vecs, precision)
+            n_pad = -(-self.n // self.tb) * self.tb
+            data_pad = jnp.pad(qc.data, ((0, n_pad - self.n),
+                                         (0, self.d_pad - self.d)))
+            scale_pad = (None if qc.scale is None else
+                         jnp.pad(qc.scale, (0, self.d_pad - self.d),
+                                 constant_values=1.0))
+            slot = dict(data=qc.data, data_pad=data_pad,
+                        scale=qc.scale, scale_pad=scale_pad,
+                        bytes_per_vector=qc.bytes_per_vector)
+            self._quant[precision] = slot
+        return slot
+
+    def _dispatch_scan(self, qv, lo, hi, idx, bucket: int, pad_q: int,
+                       k: int, ef: int, *, calibrate_wall: bool,
+                       precision: str = "f32", trace=None):
         nq = len(idx)
         starts = np.zeros(pad_q, np.int32)
         lens = np.zeros(pad_q, np.int32)
@@ -390,14 +447,33 @@ class SearchSubstrate:
         lens[:nq] = np.clip(hi[idx] - lo[idx] + 1, 0, bucket)
         qp = np.zeros((pad_q, self.d_pad), np.float32)
         qp[:nq, :self.d] = qv[idx]
-        sig = ("scan", bucket, pad_q, k)
+        slot = self._quant_for(precision)
+        sig = ("scan", bucket, pad_q, k, precision)
         warm = sig in self._warm
         self._warm.add(sig)
         t0 = time.perf_counter()
+        rq = 0
         with annotate("rnsg.scan_dispatch"):
-            ids, d = range_scan(self._scan_corpus(), jnp.asarray(starts),
-                                jnp.asarray(lens), jnp.asarray(qp),
-                                bucket=bucket, k=k)
+            if slot is None:
+                ids, d = range_scan(self._scan_corpus(), jnp.asarray(starts),
+                                    jnp.asarray(lens), jnp.asarray(qp),
+                                    bucket=bucket, k=k)
+            else:
+                # quantized scan keeps rerank_depth survivors (clamped to
+                # the slice via lens ≤ bucket masking) ...
+                rq = rerank_depth(k, ef, cap=self.tb)
+                ids_q, _ = range_scan(slot["data_pad"], jnp.asarray(starts),
+                                      jnp.asarray(lens), jnp.asarray(qp),
+                                      bucket=bucket, k=rq,
+                                      scale=slot["scale_pad"])
+                # ... then a fused f32 rescore of those ids restores the
+                # exact top-k (candidates rank-sorted so ties break exactly
+                # as the oracle's)
+                with maybe_span(trace, "rerank", precision=precision,
+                                rows=pad_q * rq, k=k):
+                    ids, d = rerank_pool(self._vecs, ids_q,
+                                         jnp.asarray(qp[:, :self.d]), k,
+                                         use_kernel=True)
         units = window_rows(bucket, self.tb)
         met = self.metrics
 
@@ -407,17 +483,21 @@ class SearchSubstrate:
             dt = time.perf_counter() - t0
             if met is not None:
                 met.histogram("scan_dispatch_ms").observe(dt * 1e3)
+                if rq:
+                    met.counter("rerank_rows_total").inc(pad_q * rq)
             if calibrate_wall and warm:
                 # the dispatch did pad_q windows of work, not nq: normalize
                 # by pad_q so calibration measures the kernel, not the
                 # padding ratio
-                self.planner.cost.observe_wall("scan", units, dt, pad_q)
+                self.planner.cost.observe_wall("scan", units, dt, pad_q,
+                                               precision=precision)
             return ids_h, d_h, units
         return finalize
 
     def _dispatch_beam(self, qv, lo, hi, idx, ef: int, pad_q: int, k: int, *,
                        calibrate: bool, calibrate_wall: bool = True,
-                       use_kernel: bool = False, beam_width: int = 1):
+                       use_kernel: bool = False, beam_width: int = 1,
+                       precision: str = "f32"):
         nq = len(idx)
         if nq == 0:                 # empty partition: nothing to dispatch
             empty = np.zeros(0, np.int32)
@@ -430,7 +510,9 @@ class SearchSubstrate:
         entry = resolve.select_entry(self._rmq, self._dist_c, lo_j, hi_j,
                                      self.n)
         qp = jnp.asarray(qv[pad])
-        sig = ("beam", ef, pad_q, k, beam_width)
+        slot = self._quant_for(precision)
+        quant = None if slot is None else (slot["data"], slot["scale"])
+        sig = ("beam", ef, pad_q, k, beam_width, precision)
         warm = sig in self._warm
         self._warm.add(sig)
         t0 = time.perf_counter()
@@ -440,7 +522,7 @@ class SearchSubstrate:
                 jnp.asarray(lo[pad].astype(np.int32)),
                 jnp.asarray(hi[pad].astype(np.int32)),
                 entry, k=k, ef=max(ef, k), use_kernel=use_kernel,
-                beam_width=beam_width)
+                beam_width=beam_width, quant=quant)
         met = self.metrics
 
         def finalize():
@@ -458,7 +540,7 @@ class SearchSubstrate:
                     # of ~ndist work each were executed — normalize by pad_q
                     self.planner.cost.observe_wall(
                         "beam", max(float(st_h["ndist"].mean()), 1.0), dt,
-                        pad_q)
+                        pad_q, precision=precision)
             return ids_h, d_h, st_h
         return finalize
 
@@ -475,11 +557,20 @@ class SearchSubstrate:
 # ======================================================================
 # Mesh path: traced per-device bodies + the host-planned mesh substrate.
 # ======================================================================
-def _shard_graph(vecs, nbrs, rmq, dist_c, order, rank0, qv, lo, hi, *,
-                 k: int, ef: int, axis: str, beam_width: int = 1):
+def _shard_graph(vecs, nbrs, rmq, dist_c, order, rank0, xq, scale, qv, lo,
+                 hi, *, k: int, ef: int, axis: str, beam_width: int = 1,
+                 precision: str = "f32"):
     """Per-device graph body (the paper's mesh path): clip the replicated
     global rank interval to this shard, one beam dispatch over the full
     batch, then the cross-shard merge.  Leading shard dim of size 1.
+
+    ``xq``/``scale`` are the quantized scoring operands (``xq`` sharded like
+    ``vecs``; ``scale`` a replicated (d_pad,) f32 row, sliced to d here).
+    Under ``precision="f32"`` the caller passes ``vecs`` itself as ``xq``
+    (no copy) and both are ignored — the operand list stays uniform so one
+    body shape serves every precision.  Quantized traversals rerank their
+    final pool in f32 inside ``beam_search_batch``, so the merged id set
+    matches the f32 body's.
 
     Besides the merged top-k, the body all-gathers each shard's **summed
     ndist** (one scalar per shard) so the host can feed the cost model's
@@ -487,11 +578,16 @@ def _shard_graph(vecs, nbrs, rmq, dist_c, order, rank0, qv, lo, hi, *,
     beam-cost estimate (traced bodies return no per-query stats)."""
     vecs, nbrs = vecs[0], nbrs[0]
     rmq, dist_c, order = rmq[0], dist_c[0], order[0]
-    n = vecs.shape[0]
+    n, d = vecs.shape
+    if precision == "f32":
+        quant = None
+    else:
+        quant = (xq[0], scale[:d] if precision == "int8" else None)
     slo, shi = resolve.clip_interval_jax(lo, hi, rank0[0], n)
     entry = resolve.select_entry(rmq, dist_c, slo, shi, n)
     ids, dists, st = beam_search_batch(vecs, nbrs, qv, slo, shi, entry,
-                                       k=k, ef=ef, beam_width=beam_width)
+                                       k=k, ef=ef, beam_width=beam_width,
+                                       quant=quant)
     orig = resolve.remap_ids_jax(order, ids)
     dists = jnp.where(ids >= 0, dists, jnp.inf)
     ids_g = jax.lax.all_gather(orig, axis)               # (S, Q, k)
@@ -501,11 +597,12 @@ def _shard_graph(vecs, nbrs, rmq, dist_c, order, rank0, qv, lo, hi, *,
     return out_i, out_d, nd_g
 
 
-def _shard_planned(x_pad, vecs, nbrs, rmq, dist_c, order, rank0,
+def _shard_planned(x_scan, vecs, nbrs, rmq, dist_c, order, rank0, xq, scale,
                    scan_q, scan_lo, scan_hi, scan_dst,
                    beam_q, beam_lo, beam_hi, beam_dst, *,
                    k: int, ef: int, bucket: int, nq: int,
-                   has_beam: bool, axis: str, beam_width: int = 1):
+                   has_beam: bool, axis: str, beam_width: int = 1,
+                   precision: str = "f32"):
     """Per-device planned body: branchless strategy dispatch.
 
     The host already split the batch into scan/beam sub-batches (replicated
@@ -517,28 +614,50 @@ def _shard_planned(x_pad, vecs, nbrs, rmq, dist_c, order, rank0,
     restoring request order *before* the cross-shard top-k merge so the merge
     is identical to the graph body's.
 
+    Quantized precisions: ``x_scan`` holds the *quantized* padded scan
+    corpus (the caller swaps it per precision — same rank order, narrower
+    DMA), ``xq`` the unpadded quantized rows for the beam's gathers, and
+    ``scale`` the replicated (d_pad,) dequant row.  The scan keeps
+    ``rerank_depth`` survivors and rescores them against the f32 ``vecs``
+    in-trace, so scan rows leave this body exact; the beam reranks inside
+    ``beam_search_batch``.  Under f32 the extra operands alias ``vecs`` /
+    ones and are ignored.
+
     The scan group is always non-empty here — uniform-beam batches dispatch
     the graph body instead (``MeshSubstrate.run`` fast path)."""
-    x_pad, vecs, nbrs = x_pad[0], vecs[0], nbrs[0]
+    x_scan, vecs, nbrs = x_scan[0], vecs[0], nbrs[0]
     rmq, dist_c, order = rmq[0], dist_c[0], order[0]
-    n = vecs.shape[0]
+    n, d = vecs.shape
     out_i = jnp.full((nq + 1, k), -1, jnp.int32)
     out_d = jnp.full((nq + 1, k), jnp.inf, jnp.float32)
     slo, shi = resolve.clip_interval_jax(scan_lo, scan_hi, rank0[0], n)
     lens = jnp.clip(shi - slo + 1, 0, bucket)            # shard-local window
     starts = jnp.clip(slo, 0, n - 1)                     # (len 0 when empty)
-    ids_s, d_s = range_scan(x_pad, starts, lens, scan_q,
-                            bucket=bucket, k=k, n_valid=n)
+    if precision == "f32":
+        ids_s, d_s = range_scan(x_scan, starts, lens, scan_q,
+                                bucket=bucket, k=k, n_valid=n)
+    else:
+        rq = rerank_depth(k, ef, cap=ROW_TILE)
+        ids_q, _ = range_scan(x_scan, starts, lens, scan_q,
+                              bucket=bucket, k=rq, n_valid=n,
+                              scale=scale if precision == "int8" else None)
+        ids_s, d_s = rerank_pool(vecs, ids_q, scan_q[:, :d], k,
+                                 use_kernel=False)
     d_s = jnp.where(ids_s >= 0, d_s, jnp.inf)
     out_i = out_i.at[scan_dst].set(resolve.remap_ids_jax(order, ids_s))
     out_d = out_d.at[scan_dst].set(d_s)
     nd = jnp.zeros((), jnp.int32)
     if has_beam:
+        if precision == "f32":
+            quant = None
+        else:
+            quant = (xq[0], scale[:d] if precision == "int8" else None)
         slo, shi = resolve.clip_interval_jax(beam_lo, beam_hi, rank0[0], n)
         entry = resolve.select_entry(rmq, dist_c, slo, shi, n)
         ids_b, d_b, st = beam_search_batch(vecs, nbrs, beam_q, slo, shi,
                                            entry, k=k, ef=ef,
-                                           beam_width=beam_width)
+                                           beam_width=beam_width,
+                                           quant=quant)
         d_b = jnp.where(ids_b >= 0, d_b, jnp.inf)
         out_i = out_i.at[beam_dst].set(resolve.remap_ids_jax(order, ids_b))
         out_d = out_d.at[beam_dst].set(d_b)
@@ -606,16 +725,57 @@ class MeshSubstrate:
         self.calibrate = calibrate
         self.metrics = metrics      # optional MetricsRegistry (obs layer)
         self._x_pad = None          # padded scan corpus, built on first scan
+        self._quant: Dict[str, dict] = {}   # precision -> quantized slots
+        self._ones = None           # dummy replicated scale row (f32/bf16)
         self._fns: Dict[Tuple, object] = {}
 
     @property
     def index_bytes(self) -> int:
         return self._nbrs.nbytes + self._rmq.nbytes + self._dist_c.nbytes
 
+    # --------------------------------------------------- quantized corpus
+    def install_quantized(self, precision: str) -> None:
+        """Eagerly build the per-shard quantized corpus copies (lazy build
+        on first quantized request otherwise)."""
+        if precision != "f32":
+            self._quant.pop(precision, None)
+            self._quant_for(precision)
+
+    def _ones_scale(self):
+        """Replicated dummy scale row for precisions without one — keeps
+        the traced bodies' operand list uniform across precisions."""
+        if self._ones is None:
+            self._ones = jnp.ones((self.d_pad,), jnp.float32)
+        return self._ones
+
+    def _quant_for(self, precision: str) -> Optional[dict]:
+        """Per-shard quantized slots (lazy, cached).  The int8 scale is
+        computed over the **whole** corpus (all shards jointly), so every
+        shard dequantizes with the same replicated (d_pad,) row and merged
+        distances are comparable across shards."""
+        if precision == "f32":
+            return None
+        slot = self._quant.get(precision)
+        if slot is None:
+            s, per, d = self.n_shards, self.per, self.d
+            qc = quantize_corpus(self._vecs.reshape(s * per, d), precision)
+            data = qc.data.reshape(s, per, d)
+            per_pad = -(-per // self.tb) * self.tb
+            data_pad = jnp.pad(data, ((0, 0), (0, per_pad - per),
+                                      (0, self.d_pad - d)))
+            scale_pad = (self._ones_scale() if qc.scale is None else
+                         jnp.pad(qc.scale, (0, self.d_pad - d),
+                                 constant_values=1.0))
+            slot = dict(data=data, data_pad=data_pad, scale_pad=scale_pad,
+                        bytes_per_vector=qc.bytes_per_vector)
+            self._quant[precision] = slot
+        return slot
+
     # ------------------------------------------------------------- planning
     def plan_strategies(self, lo: np.ndarray, hi: np.ndarray, *, k: int,
-                        ef: int, mode: str,
-                        beam_width: int = 1) -> Tuple[np.ndarray, np.ndarray]:
+                        ef: int, mode: str, beam_width: int = 1,
+                        precision: str = "f32"
+                        ) -> Tuple[np.ndarray, np.ndarray]:
         """Host half of mesh dispatch: (strategy (Q,) int8, lens_eff (Q,)).
 
         ``lens_eff`` is each query's **widest shard-local clip** of its
@@ -634,7 +794,8 @@ class MeshSubstrate:
         if mode == "beam":
             return np.full(len(lo), BEAM, np.int8), lens_eff
         return (self.planner.choose_strategy_batch(lens_eff, k=k, ef=ef,
-                                                   beam_width=beam_width),
+                                                   beam_width=beam_width,
+                                                   precision=precision),
                 lens_eff)
 
     # ---------------------------------------------------------------- run
@@ -650,6 +811,7 @@ class MeshSubstrate:
         hi = np.asarray(req.hi, np.int64)
         k, ef = int(req.k), max(int(req.ef), int(req.k))
         bw = int(req.beam_width)
+        prec = req.precision
         tr = req.trace
         met = self.metrics
         nq = len(qv)
@@ -661,18 +823,23 @@ class MeshSubstrate:
         if met is not None:
             met.counter("queries_total").inc(nq)
             met.counter("mesh_queries_total").inc(nq)
+            met.counter(f"queries_{prec}_total").inc(nq)
         cache = self.cache
         cache_info = dict(cache_enabled=cache is not None,
                           cache_hits=0, cache_misses=nq, batch_dedup=0)
         if cache is None:
             res = self._run_uncached(qv, lo, hi, k, ef, req.strategy, bw,
-                                     trace=tr, cache_info=cache_info)
+                                     prec, trace=tr, cache_info=cache_info)
             res.trace = tr
             return res
         epoch = cache.epoch             # fences stores vs invalidate()
+        cal_epoch = (self.planner.calibration_epoch
+                     if req.strategy == "auto" else None)
         keys, hit_rows, miss, dups = cache.split(qv, lo, hi, k, ef,
                                                  req.strategy, ns="mesh",
-                                                 beam_width=bw)
+                                                 beam_width=bw,
+                                                 precision=prec,
+                                                 cal_epoch=cal_epoch)
         cache_info.update(cache_hits=len(hit_rows), cache_misses=len(miss),
                           batch_dedup=len(dups))
         if met is not None:
@@ -689,9 +856,10 @@ class MeshSubstrate:
             res.trace = tr
             return res
         miss_res = self._run_uncached(qv[miss], lo[miss], hi[miss], k, ef,
-                                      req.strategy, bw, trace=tr,
+                                      req.strategy, bw, prec, trace=tr,
                                       cache_info=cache_info)
-        cache.store_batch([keys[i] for i in miss], miss_res, epoch=epoch)
+        cache.store_batch([keys[i] for i in miss], miss_res, epoch=epoch,
+                          cal_epoch=cal_epoch)
         if not hit_rows and not dups:
             miss_res.stats["cache_hits"] = 0
             miss_res.trace = tr
@@ -711,8 +879,8 @@ class MeshSubstrate:
         return np.stack(w)
 
     def _run_uncached(self, qv, lo, hi, k: int, ef: int, mode: str,
-                      beam_width: int = 1, trace=None,
-                      cache_info=None) -> SearchResult:
+                      beam_width: int = 1, precision: str = "f32",
+                      trace=None, cache_info=None) -> SearchResult:
         nq = len(qv)
         met = self.metrics
         if mode == "graph":
@@ -725,11 +893,13 @@ class MeshSubstrate:
                 sp.attrs.update(cache_info or {})
                 sp.attrs.update(strategy_mode=mode, ns="mesh",
                                 dispatched=nq, beam_width=beam_width,
+                                precision=precision,
                                 shard_clip_widths=self._shard_clip_widths(
                                     lo, hi) if trace is not None else None)
                 ids, dists = self._call_graph(qv, lo, hi, k, ef,
                                               calibrate=False,
-                                              beam_width=beam_width)
+                                              beam_width=beam_width,
+                                              precision=precision)
             with maybe_span(trace, "stitch", ns="mesh"):
                 res = SearchResult(ids, dists,
                                    {"strategy": np.ones(nq, np.int8),
@@ -738,17 +908,21 @@ class MeshSubstrate:
         if trace is None:
             strategy, lens_eff = self.plan_strategies(lo, hi, k=k, ef=ef,
                                                       mode=mode,
-                                                      beam_width=beam_width)
+                                                      beam_width=beam_width,
+                                                      precision=precision)
         else:
             with trace.span("plan") as psp:
                 strategy, lens_eff = self.plan_strategies(
-                    lo, hi, k=k, ef=ef, mode=mode, beam_width=beam_width)
+                    lo, hi, k=k, ef=ef, mode=mode, beam_width=beam_width,
+                    precision=precision)
                 sc, bc = self.planner.predict_costs(lens_eff, k=k, ef=ef,
-                                                    beam_width=beam_width)
+                                                    beam_width=beam_width,
+                                                    precision=precision)
                 psp.attrs.update(strategy_mode=mode,
                                  strategy=strategy.copy(),
                                  lens_eff=lens_eff.copy(),
                                  beam_width=beam_width,
+                                 precision=precision,
                                  scan_frac=float((strategy == SCAN).mean()),
                                  predicted_scan_units=sc,
                                  predicted_beam_units=bc)
@@ -765,12 +939,14 @@ class MeshSubstrate:
                 sp.attrs.update(cache_info or {})
                 sp.attrs.update(strategy_mode=mode, ns="mesh",
                                 dispatched=nq, beam_width=beam_width,
+                                precision=precision,
                                 uniform_beam_fast_path=True,
                                 shard_clip_widths=self._shard_clip_widths(
                                     lo, hi) if trace is not None else None)
                 ids, dists = self._call_graph(qv, lo, hi, k, ef,
                                               calibrate=self.calibrate,
-                                              beam_width=beam_width)
+                                              beam_width=beam_width,
+                                              precision=precision)
             with maybe_span(trace, "stitch", ns="mesh"):
                 res = SearchResult(ids, dists,
                                    {"strategy": strategy, "scan_frac": 0.0})
@@ -783,10 +959,19 @@ class MeshSubstrate:
             for ln in lens_eff[scan_idx])
         pad_s = pad_pow2(len(scan_idx))
         pad_b = pad_pow2(len(beam_idx)) if len(beam_idx) else 0
-        key = ("planned", k, ef, bucket, pad_s, pad_b, nq, beam_width)
+        key = ("planned", k, ef, bucket, pad_s, pad_b, nq, beam_width,
+               precision)
         warm = key in self._fns
         fn = self._planned_fn(k=k, ef=ef, bucket=bucket, pad_s=pad_s,
-                              pad_b=pad_b, nq=nq, beam_width=beam_width)
+                              pad_b=pad_b, nq=nq, beam_width=beam_width,
+                              precision=precision)
+        slot = self._quant_for(precision)
+        if slot is None:
+            x_scan, xq, scale = (self._scan_corpus(), self._vecs,
+                                 self._ones_scale())
+        else:
+            x_scan, xq, scale = (slot["data_pad"], slot["data"],
+                                 slot["scale_pad"])
         scan_ops = self._group_operands(qv, lo, hi, scan_idx, pad_s, nq,
                                         lane_pad=True)
         beam_ops = self._group_operands(qv, lo, hi, beam_idx, pad_b, nq,
@@ -799,15 +984,16 @@ class MeshSubstrate:
             sp.attrs.update(cache_info or {})
             sp.attrs.update(strategy_mode=mode, ns="mesh", dispatched=nq,
                             beam_width=beam_width, warm=warm, bucket=bucket,
+                            precision=precision,
                             pad_scan=pad_s, pad_beam=pad_b,
                             pad_rows=pad_rows,
                             shard_clip_widths=self._shard_clip_widths(
                                 lo, hi) if trace is not None else None)
             with annotate("rnsg.mesh_planned_dispatch"):
-                ids, dists, nd_g = fn(self._scan_corpus(), self._vecs,
+                ids, dists, nd_g = fn(x_scan, self._vecs,
                                       self._nbrs, self._rmq, self._dist_c,
-                                      self._order, self._rank0, *scan_ops,
-                                      *beam_ops)
+                                      self._order, self._rank0, xq, scale,
+                                      *scan_ops, *beam_ops)
                 ids = np.asarray(ids)
                 dists = np.asarray(dists)
         if met is not None:
@@ -825,7 +1011,7 @@ class MeshSubstrate:
             self.planner.cost.observe_wall_mixed(
                 window_rows(bucket, self.tb) * pad_s,
                 self.planner.cost.ndist_per_ef_at(beam_width) * ef * n_beam,
-                dt, pad_s, n_beam)
+                dt, pad_s, n_beam, precision=precision)
             if len(beam_idx):
                 # all-gathered per-shard ndist sums: pad lanes carry empty
                 # windows (ndist 0), so normalize by the real beam count —
@@ -841,16 +1027,20 @@ class MeshSubstrate:
         return res
 
     def _call_graph(self, qv, lo, hi, k: int, ef: int, *, calibrate: bool,
-                    beam_width: int = 1):
+                    beam_width: int = 1, precision: str = "f32"):
         """One graph-body mesh dispatch (+ optional warm-call beam
         calibration for routed uniform-beam batches: wall time and the
         all-gathered per-shard ndist feed the cost model)."""
-        warm = ("graph", k, max(ef, k), beam_width) in self._fns
-        fn = self.graph_fn(k, ef, beam_width)
+        warm = ("graph", k, max(ef, k), beam_width, precision) in self._fns
+        fn = self.graph_fn(k, ef, beam_width, precision)
+        slot = self._quant_for(precision)
+        xq = self._vecs if slot is None else slot["data"]
+        scale = self._ones_scale() if slot is None else slot["scale_pad"]
         t0 = time.perf_counter()
         with annotate("rnsg.mesh_graph_dispatch"):
             ids, dists, nd_g = fn(self._vecs, self._nbrs, self._rmq,
                                   self._dist_c, self._order, self._rank0,
+                                  xq, scale,
                                   jnp.asarray(qv),
                                   jnp.asarray(np.asarray(lo).astype(np.int32)),
                                   jnp.asarray(np.asarray(hi).astype(np.int32)))
@@ -872,7 +1062,7 @@ class MeshSubstrate:
                     "beam",
                     max(self.planner.cost.ndist_per_ef_at(beam_width) * ef,
                         1.0),
-                    dt, n_real)
+                    dt, n_real, precision=precision)
                 nd_mean = float(np.asarray(nd_g).mean()) / n_real
                 self.planner.cost.update_beam(nd_mean, ef,
                                               beam_width=beam_width)
@@ -910,34 +1100,39 @@ class MeshSubstrate:
         return self._x_pad
 
     # ---------------------------------------------------------- traced fns
-    def graph_fn(self, k: int, ef: int, beam_width: int = 1):
+    def graph_fn(self, k: int, ef: int, beam_width: int = 1,
+                 precision: str = "f32"):
         """Jitted graph-strategy mesh fn (also the dry-run lowering target).
-        Returns (ids, dists, ndist_per_shard)."""
-        key = ("graph", k, max(ef, k), beam_width)
+        Operands: 6 sharded index arrays + sharded ``xq`` + replicated
+        ``(scale, qv, lo, hi)`` — under f32 pass ``vecs`` again as ``xq``
+        and any (d_pad,) f32 row as ``scale`` (both ignored).  Returns
+        (ids, dists, ndist_per_shard)."""
+        key = ("graph", k, max(ef, k), beam_width, precision)
         fn = self._fns.get(key)
         if fn is None:
             body = partial(_shard_graph, k=k, ef=max(ef, k), axis=self.axis,
-                           beam_width=beam_width)
+                           beam_width=beam_width, precision=precision)
             shard, rep = P(self.axis), P()
             fn = jax.jit(shard_map_compat(
                 body, self.mesh,
-                in_specs=(shard,) * 6 + (rep, rep, rep),
+                in_specs=(shard,) * 7 + (rep,) * 4,
                 out_specs=(rep, rep, rep)))
             self._fns[key] = fn
         return fn
 
     def _planned_fn(self, *, k, ef, bucket, pad_s, pad_b, nq,
-                    beam_width: int = 1):
-        key = ("planned", k, ef, bucket, pad_s, pad_b, nq, beam_width)
+                    beam_width: int = 1, precision: str = "f32"):
+        key = ("planned", k, ef, bucket, pad_s, pad_b, nq, beam_width,
+               precision)
         fn = self._fns.get(key)
         if fn is None:
             body = partial(_shard_planned, k=k, ef=ef, bucket=bucket, nq=nq,
                            has_beam=pad_b > 0, axis=self.axis,
-                           beam_width=beam_width)
+                           beam_width=beam_width, precision=precision)
             shard, rep = P(self.axis), P()
             fn = jax.jit(shard_map_compat(
                 body, self.mesh,
-                in_specs=(shard,) * 7 + (rep,) * 8,
+                in_specs=(shard,) * 8 + (rep,) * 9,
                 out_specs=(rep, rep, rep)))
             self._fns[key] = fn
         return fn

@@ -138,8 +138,19 @@ class DistributedRFANN:
         if self._mesh_sub is not None:
             self._mesh_sub.metrics = metrics
 
+    def install_quantized(self, precision: str) -> None:
+        """Pre-build the quantized corpus copies on every execution path."""
+        if precision == "f32":
+            return
+        if self.mesh is not None:
+            self.mesh_substrate.install_quantized(precision)
+        else:
+            for sub in self.substrates:
+                sub.install_quantized(precision)
+
     def _search_local(self, qv, lo, hi, *, k: int, ef: int, plan: str,
-                      beam_width: int = 1, trace=None):
+                      beam_width: int = 1, precision: str = "f32",
+                      trace=None):
         """Per-shard substrate dispatch, merged by the same ``merge_topk``
         the mesh path uses — identical ids by construction.  With
         ``async_dispatch`` every shard's work is enqueued before any block
@@ -165,7 +176,8 @@ class DistributedRFANN:
             # shards sequentially so appends never race
             req = SearchRequest(queries=qv, lo=slo, hi=shi,
                                 k=k, ef=ef, strategy=plan,
-                                beam_width=beam_width, trace=trace)
+                                beam_width=beam_width, precision=precision,
+                                trace=trace)
             p = sub.dispatch(req, defer=self.async_dispatch,
                              q_digests=digests)
             if not self.async_dispatch:
@@ -203,7 +215,7 @@ class DistributedRFANN:
 
     def search_ranks(self, queries, lo, hi, *, k: int = 10, ef: int = 64,
                      plan: str = "graph", beam_width: int = 1,
-                     trace=None) -> SearchResult:
+                     precision: str = "f32", trace=None) -> SearchResult:
         """Rank-space entry point (resolve already done): dispatch on the
         mesh path when a mesh is attached, else the (async) local path."""
         qv = np.asarray(queries, np.float32)
@@ -212,15 +224,16 @@ class DistributedRFANN:
             ids, dists, stats = self._search_local(qv, lo, hi, k=k, ef=ef,
                                                    plan=plan,
                                                    beam_width=beam_width,
+                                                   precision=precision,
                                                    trace=trace)
             return SearchResult(ids, dists, stats, trace=trace)
         return self.mesh_substrate.run(SearchRequest(
             queries=qv, lo=lo, hi=hi, k=k, ef=ef, strategy=plan,
-            beam_width=beam_width, trace=trace))
+            beam_width=beam_width, precision=precision, trace=trace))
 
     def search(self, queries: np.ndarray, attr_ranges: np.ndarray, *,
                k: int = 10, ef: int = 64, plan: str = "graph",
-               beam_width: int = 1,
+               beam_width: int = 1, precision: str = "f32",
                trace=None) -> Tuple[np.ndarray, np.ndarray]:
         from repro.obs import maybe_span
         with maybe_span(trace, "resolve") as sp:
@@ -231,17 +244,23 @@ class DistributedRFANN:
                     np.asarray(hi, np.int64) - np.asarray(lo, np.int64) + 1,
                     0, None) if trace is not None else None)
         res = self.search_ranks(queries, lo, hi, k=k, ef=ef, plan=plan,
-                                beam_width=beam_width, trace=trace)
+                                beam_width=beam_width, precision=precision,
+                                trace=trace)
         return res.ids, res.dists
 
     # ------------------------------------------------------------------
-    def lower_for_dryrun(self, nq: int, d: int, k: int = 10, ef: int = 64):
+    def lower_for_dryrun(self, nq: int, d: int, k: int = 10, ef: int = 64,
+                         precision: str = "f32"):
         """Compile-only proof that the sharded search lowers on a real mesh."""
-        fn = self.mesh_substrate.graph_fn(k, ef)
+        ms = self.mesh_substrate
+        fn = ms.graph_fn(k, ef, precision=precision)
+        slot = ms._quant_for(precision)
+        xq = self.vecs if slot is None else slot["data"]
+        scale = ms._ones_scale() if slot is None else slot["scale_pad"]
         args = (self.vecs, self.nbrs, self.rmq, self.dist_c, self.order,
-                self.rank0,
+                self.rank0, xq, scale,
                 jax.ShapeDtypeStruct((nq, d), jnp.float32),
                 jax.ShapeDtypeStruct((nq,), jnp.int32),
                 jax.ShapeDtypeStruct((nq,), jnp.int32))
-        sds = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in args[:6]]
-        return jax.jit(fn).lower(*sds, *args[6:])
+        sds = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in args[:8]]
+        return jax.jit(fn).lower(*sds, *args[8:])

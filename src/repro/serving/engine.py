@@ -102,6 +102,7 @@ class RFANNEngine:
     def __init__(self, index, *, k: int = 10, ef: int = 64,
                  max_batch: int = 64, max_wait_ms: float = 2.0,
                  plan: str = "auto", beam_width: int = 1,
+                 precision: str = "f32",
                  calibration_path: Optional[str] = None,
                  cache_bytes: int = 0,
                  pipeline_depth: int = 2,
@@ -112,6 +113,9 @@ class RFANNEngine:
         self.k, self.ef = k, ef
         self.plan = plan
         self.beam_width = int(beam_width)
+        self.precision = str(precision)
+        if self.precision != "f32" and hasattr(index, "install_quantized"):
+            index.install_quantized(self.precision)   # pay build cost once
         self.max_batch = max_batch
         self.max_wait = max_wait_ms / 1000.0
         self.calibration_path = calibration_path
@@ -280,6 +284,8 @@ class RFANNEngine:
             kw = dict(k=self.k, ef=self.ef, plan=self.plan)
             if self.beam_width != 1:
                 kw["beam_width"] = self.beam_width
+            if self.precision != "f32":     # same omission back-compat rule
+                kw["precision"] = self.precision
             if trace is not None:
                 kw["trace"] = trace
             try:
