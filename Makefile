@@ -3,8 +3,8 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test test-fast verify lint docs-check bench-quick bench-planner \
         bench-substrate bench-mesh bench-cache bench-beam bench-beam-smoke \
-        bench-quant bench-quant-smoke bench-all bench-full quickstart \
-        obs-smoke profile
+        bench-quant bench-quant-smoke bench-stream bench-stream-smoke \
+        bench-all bench-full quickstart obs-smoke profile
 
 # tier-1 verify (the command CI runs)
 test:
@@ -65,6 +65,15 @@ bench-quant:
 # and the beam recall envelope, all in Pallas interpret mode
 bench-quant-smoke:
 	$(PY) -m benchmarks.run --only quantized --n 1024
+
+# streaming ingest: QPS/recall vs delta fraction {0,1%,5%,20%} + compaction
+# pause p99 (results/bench/streaming.csv + BENCH_stream.json)
+bench-stream:
+	$(PY) -m benchmarks.run --only streaming
+
+# tiny-scale CI smoke of the same trajectory (interpret-mode kernels)
+bench-stream-smoke:
+	$(PY) -m benchmarks.run --only streaming --n 1024
 
 # smoke-sized perf trajectory: writes BENCH_substrate.json, BENCH_beam.json
 # and BENCH_quant.json at the repo root so the numbers are tracked per PR

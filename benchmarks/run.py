@@ -551,6 +551,75 @@ def bench_quantized(n, d, nq, quick):
     return rows
 
 
+def bench_streaming(n, d, nq, quick):
+    """Streaming ingest trajectory: QPS + recall as the mutable delta
+    segment grows to {0, 1%, 5%, 20%} of the live corpus, with a
+    compaction (and its pause-time histogram sample) folding the delta
+    into the base between fraction points.
+
+    Emits results/bench/streaming.csv plus BENCH_stream.json (repo root +
+    results/bench copy): per-fraction QPS/recall rows, compaction pause
+    p50/p99 from the obs histograms, and the post-compaction identity
+    check (a compacted index must answer exactly like its base — the
+    delta is empty).  Interpret-mode wall times on CPU are correctness
+    trajectories, not hardware numbers."""
+    from repro.data.ann import selectivity_ranges
+    from repro.obs import MetricsRegistry
+    from repro.streaming import StreamingRFANN
+
+    vecs, attrs = dataset(n, d)
+    m = 16 if quick else 32
+    s = StreamingRFANN(vecs, attrs, m=m, ef_spatial=m, ef_attribute=2 * m,
+                       max_delta=10**9)
+    reg = MetricsRegistry()
+    s.install_metrics(reg)
+    rng = np.random.default_rng(41)
+    k, ef = 10, 64
+    fractions = (0.0, 0.01, 0.05, 0.20)
+    rows = []
+    for frac in fractions:
+        live_now = s.stats()["n_live"]
+        target = int(round(frac * live_now / max(1.0 - frac, 1e-9)))
+        for _ in range(target - s.stats()["n_delta"]):
+            s.insert(rng.standard_normal(d).astype(np.float32),
+                     float(rng.random()))
+        lv, la, li = s.live_items()
+        ranges = selectivity_ranges(la, nq, 0.10, seed=23)
+        qv = dataset(nq, d, seed=91)[0]
+        gt_rows = gt_for(lv, la, qv, ranges, k)
+        gt = np.where(gt_rows >= 0, li[np.maximum(gt_rows, 0)], -1)
+        res, qps = timed_search(s, qv, ranges, k, ef, plan="auto")
+        rec = recall_at_k(np.asarray(res.ids), gt)
+        st = s.stats()
+        rows.append(dict(delta_frac_target=frac,
+                         delta_frac=round(st["delta_frac"], 4),
+                         n_live=st["n_live"], n_delta=st["n_delta"],
+                         recall=round(rec, 4), qps=round(qps, 1)))
+        if st["n_delta"]:       # fold in before the next fraction point
+            s.compact(wait=True)
+    assert s.stats()["n_delta"] == 0 and s.stats()["tombstones"] == 0
+    emit("streaming", rows, quiet=True)
+    snap = reg.snapshot()
+    pause = snap["histograms"].get("stream_compaction_pause_ms", {})
+    build = snap["histograms"].get("stream_compaction_build_ms", {})
+    summary = {
+        "n": n, "d": d, "nq": nq, "k": k, "ef": ef,
+        "fractions": list(fractions),
+        "rows": rows,
+        "compactions": s.compactions,
+        "compaction_pause_ms": {"p50": round(pause.get("p50", 0.0), 3),
+                                "p99": round(pause.get("p99", 0.0), 3)},
+        "compaction_build_ms": {"p50": round(build.get("p50", 0.0), 3),
+                                "p99": round(build.get("p99", 0.0), 3)},
+        "recall_floor": min(r["recall"] for r in rows),
+        "note": ("pause = locked swap only; the rebuild runs off-lock on "
+                 "the worker thread (build histogram)"),
+    }
+    emit_bench_json("stream", summary)
+    s.close()
+    return rows
+
+
 def bench_kernels(quick):
     """Kernel microbench (interpret mode on CPU: correctness + derived
     roofline terms; wall numbers are *not* TPU times)."""
@@ -592,7 +661,7 @@ def bench_kernels(quick):
 
 ALL = ["qps_recall", "construction_time", "index_size", "param_sensitivity",
        "vary_k", "scalability", "planner", "search_substrate", "mesh_auto",
-       "async_cache", "beam_width", "quantized", "kernels"]
+       "async_cache", "beam_width", "quantized", "streaming", "kernels"]
 
 
 def main() -> None:
@@ -723,6 +792,17 @@ def main() -> None:
               f"narrow_scan_int8_speedup={i8['qps']/max(f32['qps'],1e-9):.2f}x"
               f"_recall={i8['recall']}vs{f32['recall']}"
               f"_bytes={i8['bytes_per_vector']}vs{f32['bytes_per_vector']}")
+    if "streaming" in only:
+        rows = bench_streaming(n, d, nq, quick)
+        print("delta_frac_target,delta_frac,n_live,n_delta,recall,qps")
+        for r in rows:
+            print(f"{r['delta_frac_target']},{r['delta_frac']},{r['n_live']},"
+                  f"{r['n_delta']},{r['recall']},{r['qps']}")
+        r0 = rows[0]
+        r20 = rows[-1]
+        print(f"streaming,{1e6/r20['qps']:.1f},"
+              f"recall_delta0={r0['recall']}_delta20pct={r20['recall']}"
+              f"_qps_ratio={r20['qps']/max(r0['qps'],1e-9):.2f}x")
     if "kernels" in only:
         rows = bench_kernels(quick)
         for r in rows:

@@ -127,13 +127,32 @@ def rerank_pool(vecs, pool_ids, qv, k: int, use_kernel: bool):
     return ids, -neg
 
 
+def _pool_finish(cand_d, cand_ids, live, k: int, quant):
+    """Final per-query pool stage shared by both expansion paths: drop
+    tombstoned candidates (``live`` (n,) bool — FreshDiskANN semantics:
+    deleted nodes stay *traversable* routing nodes all through the search,
+    they just never leave it), then slice the top-k, or hand the pool to
+    the f32 rerank.  The argsort after masking is stable, so surviving
+    candidates keep their ascending-distance / tie-toward-lower-rank
+    order."""
+    if live is not None:
+        dead = (cand_ids < 0) | ~live[jnp.maximum(cand_ids, 0)]
+        cand_d = jnp.where(dead, INF, cand_d)
+        o = jnp.argsort(cand_d)
+        cand_d, cand_ids = cand_d[o], cand_ids[o]
+    if quant is not None:           # return the full pool for the f32 rerank
+        return jnp.where(jnp.isfinite(cand_d), cand_ids, -1), cand_d
+    return (jnp.where(jnp.isfinite(cand_d[:k]), cand_ids[:k], -1),
+            cand_d[:k])
+
+
 @partial(jax.jit, static_argnames=("k", "ef", "max_steps", "use_kernel",
                                    "early_stop", "beam_width"))
 def beam_search_batch(vecs: jax.Array, nbrs: jax.Array, qv: jax.Array,
                       lo: jax.Array, hi: jax.Array, entry: jax.Array,
                       *, k: int = 10, ef: int = 64, max_steps: int = 0,
                       use_kernel: bool = False, early_stop: bool = True,
-                      beam_width: int = 1, quant=None):
+                      beam_width: int = 1, quant=None, live=None):
     """vecs:(n,d) f32; nbrs:(n,m) i32; qv:(Q,d); lo/hi/entry:(Q,) rank ids.
     Returns (ids:(Q,k) i32 rank ids (-1 pad), dists:(Q,k), stats dict).
 
@@ -159,15 +178,22 @@ def beam_search_batch(vecs: jax.Array, nbrs: jax.Array, qv: jax.Array,
     ``ef`` are clamped — the pool only ever holds ``ef`` candidates);
     ``hops`` in the stats then counts *iterations* (≈ node expansions / B),
     while ``ndist`` stays the number of scored neighbors and is comparable
-    across widths."""
+    across widths.
+
+    ``live`` ((n,) bool, optional) is the streaming tombstone mask: dead
+    nodes are traversed exactly like live ones (they keep the graph
+    navigable — removing them would break the heredity argument) but are
+    filtered out of the final pool before the top-k / rerank."""
     n, m = nbrs.shape
     steps_cap = max_steps or 8 * ef + 64
+    if live is not None:
+        live = live.astype(bool)
 
     if beam_width > 1:
         return _beam_batched(vecs, nbrs, qv, lo, hi, entry, k=k, ef=ef,
                              steps_cap=steps_cap, use_kernel=use_kernel,
                              early_stop=early_stop, beam_width=beam_width,
-                             quant=quant)
+                             quant=quant, live=live)
 
     # traversal scores against the quantized copy when one is given (the
     # dtype is trace-static, so the scale branch costs nothing at runtime)
@@ -240,11 +266,7 @@ def beam_search_batch(vecs: jax.Array, nbrs: jax.Array, qv: jax.Array,
         st = (cand_d, expanded, cand_ids, visited,
               jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
         cand_d, _, cand_ids, _, steps, ndist = jax.lax.while_loop(cond, body, st)
-        if quant is not None:       # return the full pool for the f32 rerank
-            pool = jnp.where(jnp.isfinite(cand_d), cand_ids, -1)
-            return pool, cand_d, steps, ndist
-        out_ids = jnp.where(jnp.isfinite(cand_d[:k]), cand_ids[:k], -1)
-        out_d = cand_d[:k]
+        out_ids, out_d = _pool_finish(cand_d, cand_ids, live, k, quant)
         return out_ids, out_d, steps, ndist
 
     ids, dists, steps, ndist = jax.vmap(one_query)(qv, lo, hi, entry)
@@ -258,7 +280,7 @@ def beam_search_batch(vecs: jax.Array, nbrs: jax.Array, qv: jax.Array,
 # ======================================================================
 def _beam_batched(vecs, nbrs, qv, lo, hi, entry, *, k: int, ef: int,
                   steps_cap: int, use_kernel: bool, early_stop: bool,
-                  beam_width: int, quant=None):
+                  beam_width: int, quant=None, live=None):
     n, m = nbrs.shape
     score_x, score_scale = (vecs, None) if quant is None else quant
     # the pool holds ef candidates, so at most ef can be unexpanded — a
@@ -371,11 +393,8 @@ def _beam_batched(vecs, nbrs, qv, lo, hi, entry, *, k: int, ef: int,
               jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
         cand_d, _, cand_ids, _, steps, ndist = jax.lax.while_loop(
             cond, body, st)
-        if quant is not None:       # return the full pool for the f32 rerank
-            pool = jnp.where(jnp.isfinite(cand_d), cand_ids, -1)
-            return pool, cand_d, steps, ndist
-        out_ids = jnp.where(jnp.isfinite(cand_d[:k]), cand_ids[:k], -1)
-        return out_ids, cand_d[:k], steps, ndist
+        out_ids, out_d = _pool_finish(cand_d, cand_ids, live, k, quant)
+        return out_ids, out_d, steps, ndist
 
     ids, dists, steps, ndist = jax.vmap(one_query)(qv, lo, hi, entry)
     if quant is not None:

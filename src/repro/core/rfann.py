@@ -75,7 +75,7 @@ class RNSGIndex:
     def search(self, queries: np.ndarray, attr_ranges: np.ndarray, *,
                k: int = 10, ef: int = 64, use_kernel: bool = False,
                plan: str = "graph", beam_width: int = 1,
-               precision: str = "f32", trace=None):
+               precision: str = "f32", trace=None, live=None):
         """queries:(Q,d); attr_ranges:(Q,2) attribute values (inclusive).
         plan: "graph" (pure beam search) | "auto" (cost-based scan/beam
         routing) | "scan" / "beam" (forced strategy).
@@ -97,15 +97,17 @@ class RNSGIndex:
         return self.search_ranks(queries, lo, hi, k=k, ef=ef,
                                  use_kernel=use_kernel, plan=plan,
                                  beam_width=beam_width, precision=precision,
-                                 trace=trace)
+                                 trace=trace, live=live)
 
     def search_ranks(self, queries, lo, hi, *, k=10, ef=64, use_kernel=False,
-                     plan="graph", beam_width=1, precision="f32", trace=None):
+                     plan="graph", beam_width=1, precision="f32", trace=None,
+                     live=None):
         from repro.search import SearchRequest
         return self.substrate.run(SearchRequest(
             queries=np.asarray(queries, np.float32), lo=lo, hi=hi,
             k=k, ef=ef, strategy=plan, use_kernel=use_kernel,
-            beam_width=beam_width, precision=precision, trace=trace))
+            beam_width=beam_width, precision=precision, trace=trace,
+            live=live))
 
     # ------------------------------------------------------------------
     @property

@@ -47,11 +47,13 @@ def gather_rerank(x: jax.Array, ids: jax.Array, q: jax.Array, *, k: int):
 
 def range_scan(x: jax.Array, starts: jax.Array, lens: jax.Array,
                q: jax.Array, *, bucket: int, k: int, n_valid: int = 0,
-               scale: jax.Array | None = None):
+               scale: jax.Array | None = None,
+               live: jax.Array | None = None):
     """Per-query masked scan + top-k over contiguous rank slices of x.
     ``n_valid`` masks the zero rows padding x to a row-tile multiple
     (0 = trust the window contract, i.e. all of x is real).  ``x`` may be
-    a quantized corpus copy; ``scale`` dequantizes int8 rows in VMEM."""
+    a quantized corpus copy; ``scale`` dequantizes int8 rows in VMEM.
+    ``live`` ((1, n_pad) i32) masks tombstoned rows (streaming deletes)."""
     return range_scan_pallas(x, starts, lens, q, bucket=bucket, k=k,
-                             n_valid=n_valid, scale=scale,
+                             n_valid=n_valid, scale=scale, live=live,
                              interpret=_interpret())

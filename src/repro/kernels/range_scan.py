@@ -40,8 +40,8 @@ def window_rows(bucket: int, tb: int = 128) -> int:
     return (-(-bucket // tb) + 1) * tb
 
 
-def _body(starts_ref, lens_ref, x_ref, scale_ref, q_ref, od_ref, oi_ref,
-          acc_ref, *, nd: int, tb: int, k: int, n_valid: int):
+def _body(starts_ref, lens_ref, x_ref, scale_ref, live_ref, q_ref, od_ref,
+          oi_ref, acc_ref, *, nd: int, tb: int, k: int, n_valid: int):
     i = pl.program_id(0)          # query
     j = pl.program_id(1)          # row block within the window
     kd = pl.program_id(2)         # d-chunk
@@ -72,6 +72,8 @@ def _body(starts_ref, lens_ref, x_ref, scale_ref, q_ref, od_ref, oi_ref,
         base = (start // tb) * tb
         rank = base + j * tb + jax.lax.broadcasted_iota(jnp.int32, (1, tb), 1)
         valid = (rank >= start) & (rank < start + ln) & (rank < n_valid)
+        if live_ref is not None:              # per-row tombstone mask
+            valid &= live_ref[...] != 0       # (1, tb), same row block as x
         d_blk = jnp.where(valid, jnp.maximum(acc_ref[...], 0.0), jnp.inf)
         # union of the running top-k and this block; blocks arrive in
         # ascending-rank order and the running half comes first, so the
@@ -94,16 +96,21 @@ def _body(starts_ref, lens_ref, x_ref, scale_ref, q_ref, od_ref, oi_ref,
         oi_ref[...] = new_i
 
 
-def _kernel(starts_ref, lens_ref, x_ref, q_ref, od_ref, oi_ref, acc_ref,
-            **kw):
-    _body(starts_ref, lens_ref, x_ref, None, q_ref, od_ref, oi_ref, acc_ref,
-          **kw)
+def _make_kernel(has_scale: bool, has_live: bool):
+    """Kernel entry point for one (scale, live) operand combination; the
+    optional refs arrive positionally between x and q in operand order."""
+    def kernel(starts_ref, lens_ref, x_ref, *rest, **kw):
+        rest = list(rest)
+        scale_ref = rest.pop(0) if has_scale else None
+        live_ref = rest.pop(0) if has_live else None
+        q_ref, od_ref, oi_ref, acc_ref = rest
+        _body(starts_ref, lens_ref, x_ref, scale_ref, live_ref, q_ref,
+              od_ref, oi_ref, acc_ref, **kw)
+    return kernel
 
 
-def _kernel_scaled(starts_ref, lens_ref, x_ref, scale_ref, q_ref, od_ref,
-                   oi_ref, acc_ref, **kw):
-    _body(starts_ref, lens_ref, x_ref, scale_ref, q_ref, od_ref, oi_ref,
-          acc_ref, **kw)
+_KERNELS = {(s, lv): _make_kernel(s, lv)
+            for s in (False, True) for lv in (False, True)}
 
 
 @functools.partial(jax.jit,
@@ -112,7 +119,8 @@ def _kernel_scaled(starts_ref, lens_ref, x_ref, scale_ref, q_ref, od_ref,
 def range_scan_pallas(x: jax.Array, starts: jax.Array, lens: jax.Array,
                       q: jax.Array, *, bucket: int, k: int, tb: int = 128,
                       td: int = 512, interpret: bool = False,
-                      n_valid: int = 0, scale: jax.Array | None = None):
+                      n_valid: int = 0, scale: jax.Array | None = None,
+                      live: jax.Array | None = None):
     """x:(n_pad,d_pad) rank-ordered, n_pad % tb == 0, d_pad % 128 == 0;
     starts/lens:(Q,) i32 per-query rank windows (len ≤ bucket); q:(Q,d_pad).
     Returns (ids:(Q,k) i32 absolute ranks (-1 pad), dists:(Q,k) f32).
@@ -126,7 +134,13 @@ def range_scan_pallas(x: jax.Array, starts: jax.Array, lens: jax.Array,
     a window nominally covers them.  Shard-local dispatch (the mesh substrate
     traces this kernel per shard with windows clipped to the shard's rank
     slice) passes the shard's true row count so the zero rows padding the
-    corpus to a row-tile multiple can never win."""
+    corpus to a row-tile multiple can never win.
+
+    ``live`` ((1, n_pad) i32, optional) is the per-row generalization of
+    ``n_valid``: rows whose lane is 0 never enter the top-k.  The streaming
+    layer threads tombstone masks through it (base segment: deleted ranks;
+    delta segment: the pad tail beyond the current row count) — being an
+    operand rather than a static arg, mask churn never retraces."""
     n_pad, d_pad = x.shape
     Q = q.shape[0]
     n_valid = int(n_valid) or n_pad
@@ -135,7 +149,8 @@ def range_scan_pallas(x: jax.Array, starts: jax.Array, lens: jax.Array,
         # back to the materializing oracle (rare: k > 128)
         from repro.kernels.ref import range_scan_ref
         return range_scan_ref(x, starts, lens, q, bucket=bucket, k=k, tb=tb,
-                              n_valid=n_valid, scale=scale)
+                              n_valid=n_valid, scale=scale,
+                              live=None if live is None else live[0])
     td = d_pad if d_pad <= td else 128
     nd = d_pad // td
     w = window_rows(bucket, tb)
@@ -148,13 +163,20 @@ def range_scan_pallas(x: jax.Array, starts: jax.Array, lens: jax.Array,
                           lambda i, j, kd, s_ref, l_ref:
                           (jnp.minimum(s_ref[i] // tb + j, max_blk), kd))
     q_spec = pl.BlockSpec((1, td), lambda i, j, kd, s_ref, l_ref: (i, kd))
-    if scale is None:
-        kernel, in_specs, ops = _kernel, [x_spec, q_spec], (x, q)
-    else:
-        s_spec = pl.BlockSpec((1, td), lambda i, j, kd, s_ref, l_ref: (0, kd))
-        kernel = _kernel_scaled
-        in_specs = [x_spec, s_spec, q_spec]
-        ops = (x, scale.astype(jnp.float32)[None, :], q)
+    kernel = _KERNELS[(scale is not None, live is not None)]
+    in_specs, ops = [x_spec], [x]
+    if scale is not None:
+        in_specs.append(pl.BlockSpec((1, td),
+                                     lambda i, j, kd, s_ref, l_ref: (0, kd)))
+        ops.append(scale.astype(jnp.float32)[None, :])
+    if live is not None:
+        # same row block as x: lanes line up with the ranks scored there
+        in_specs.append(pl.BlockSpec(
+            (1, tb), lambda i, j, kd, s_ref, l_ref:
+            (0, jnp.minimum(s_ref[i] // tb + j, max_blk))))
+        ops.append(live.astype(jnp.int32))
+    in_specs.append(q_spec)
+    ops.append(q)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(Q, nb, nd),

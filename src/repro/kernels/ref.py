@@ -48,10 +48,12 @@ def gather_rerank_ref(x: jax.Array, ids: jax.Array, q: jax.Array, *, k: int):
 
 def range_scan_ref(x: jax.Array, starts: jax.Array, lens: jax.Array,
                    q: jax.Array, *, bucket: int, k: int, tb: int = 128,
-                   n_valid: int = 0, scale: jax.Array | None = None):
+                   n_valid: int = 0, scale: jax.Array | None = None,
+                   live: jax.Array | None = None):
     """Oracle for ``range_scan_pallas``: same window/alignment/n_valid
     contract.  x:(n_pad,d); starts/lens:(Q,); q:(Q,d) -> (ids, dists).
-    ``scale`` ((d,) f32) dequantizes int8 rows, matching the kernel."""
+    ``scale`` ((d,) f32) dequantizes int8 rows, matching the kernel.
+    ``live`` ((n_pad,) i32/bool) masks tombstoned rows out of the top-k."""
     from repro.kernels.range_scan import window_rows
     n_pad = x.shape[0]
     n_valid = int(n_valid) or n_pad
@@ -65,6 +67,8 @@ def range_scan_ref(x: jax.Array, starts: jax.Array, lens: jax.Array,
     d2 = jnp.sum(diff * diff, axis=-1)
     valid = ((rank >= starts[:, None]) & (rank < (starts + lens)[:, None])
              & (rank < n_valid))
+    if live is not None:
+        valid &= live[jnp.clip(rank, 0, n_pad - 1)] != 0
     d2 = jnp.where(valid, d2, jnp.inf)
     neg, idx = jax.lax.top_k(-d2, k)
     ids = jnp.where(jnp.isfinite(neg), base[:, None] + idx, -1)

@@ -38,9 +38,27 @@ def serve_rfann(args):
     attrs = make_attrs(args.n, seed=0)
     qv = make_vectors(args.requests, args.dim, seed=7)
     ranges, _ = mixed_workload(attrs, args.requests, seed=3)
-    print("[serve] building RNSG index ...")
-    idx = RNSGIndex.build(vecs, attrs, m=args.m, ef_spatial=32, ef_attribute=48)
-    print(f"[serve] {idx.stats()}")
+    streaming = args.max_delta > 0 or args.compact_every > 0
+    rng = np.random.default_rng(0)
+    if streaming:
+        # streaming serve: seed the base with 80% of the corpus, churn the
+        # held-out tail (inserts) plus random deletes through the engine
+        # while the first half of the requests stream in, then measure
+        # recall on the second half against the *final* live set
+        from repro.streaming import StreamingRFANN
+        n0 = max(args.n * 4 // 5, 256)
+        print(f"[serve] building streaming RNSG base (n0={n0}) ...")
+        idx = StreamingRFANN(vecs[:n0], attrs[:n0], m=args.m,
+                             ef_spatial=32, ef_attribute=48,
+                             max_delta=args.max_delta or 1024,
+                             compact_every=args.compact_every)
+        pending_ins = list(range(n0, args.n))
+        print(f"[serve] {idx.stats()}")
+    else:
+        print("[serve] building RNSG index ...")
+        idx = RNSGIndex.build(vecs, attrs, m=args.m, ef_spatial=32,
+                              ef_attribute=48)
+        print(f"[serve] {idx.stats()}")
     if args.precision != "f32":
         idx.install_quantized(args.precision)   # build quantized corpus once
     warm = idx.search(qv[:8], ranges[:8], k=args.k, ef=args.ef,
@@ -55,17 +73,28 @@ def serve_rfann(args):
                          calibration_path=args.calibration or None,
                          cache_bytes=args.cache_mb << 20,
                          log_interval_s=args.log_interval,
-                         trace_sample_every=args.trace_sample_every)
-    rng = np.random.default_rng(0)
+                         trace_sample_every=args.trace_sample_every,
+                         max_delta=args.max_delta or None,
+                         compact_every=args.compact_every or None)
     futs = []
+    churn_until = args.requests // 2
     t0 = time.perf_counter()
     for i in range(args.requests):
         futs.append(engine.submit(qv[i], ranges[i]))
+        if streaming and i < churn_until:
+            if pending_ins:
+                j = pending_ins.pop()
+                engine.insert(vecs[j], float(attrs[j]), ext_id=j)
+            if i % 4 == 3:          # one delete per four churn steps
+                live = list(engine.index._id_loc)
+                engine.delete(int(live[rng.integers(len(live))]))
         if args.rate > 0:
             time.sleep(rng.exponential(1.0 / args.rate))
     results = np.stack([f.result().ids for f in futs])      # per-request SearchResult
     dt = time.perf_counter() - t0
     engine.close()
+    if streaming:
+        idx.close()                 # drain any in-flight compaction
     if engine.cache is not None:
         print(f"[serve] result cache: {engine.cache.snapshot()}")
     if args.calibration:
@@ -80,10 +109,21 @@ def serve_rfann(args):
                       default=float)
         print(f"[serve] metrics written to {args.metrics_path} (+.json)")
 
-    order = np.argsort(attrs, kind="stable")
-    gt_r, _ = ground_truth(vecs[order], attrs[order], qv, ranges, args.k)
-    gt = np.where(gt_r >= 0, order[np.maximum(gt_r, 0)], -1)
-    rec = recall_at_k(results, gt)
+    if streaming:
+        # score only the post-churn half against the final live set (the
+        # requests that raced mutations have no single ground truth)
+        lv, la, li = idx.live_items()
+        order = np.argsort(la, kind="stable")
+        gt_r, _ = ground_truth(lv[order], la[order], qv[churn_until:],
+                               ranges[churn_until:], args.k)
+        gt = np.where(gt_r >= 0, li[order][np.maximum(gt_r, 0)], -1)
+        rec = recall_at_k(results[churn_until:], gt)
+        print(f"[serve] streaming: {idx.stats()}")
+    else:
+        order = np.argsort(attrs, kind="stable")
+        gt_r, _ = ground_truth(vecs[order], attrs[order], qv, ranges, args.k)
+        gt = np.where(gt_r >= 0, order[np.maximum(gt_r, 0)], -1)
+        rec = recall_at_k(results, gt)
     print(f"[serve] served {args.requests} reqs in {dt:.2f}s "
           f"({args.requests/dt:.0f} QPS) recall@{args.k}={rec:.4f}")
     print(f"[serve] {engine.stats.summary()}")
@@ -148,6 +188,12 @@ def main(argv=None):
                     help="seconds between one-line stats logs (0 = off)")
     ap.add_argument("--trace-sample-every", type=int, default=0,
                     help="attach a QueryTrace to every Nth batch (0 = off)")
+    ap.add_argument("--max-delta", type=int, default=0,
+                    help="streaming mode: compact when the delta segment "
+                         "reaches this many rows (0 = static index)")
+    ap.add_argument("--compact-every", type=int, default=0,
+                    help="streaming mode: compact every N mutations "
+                         "(0 = size-triggered only)")
     ap.add_argument("--new-tokens", type=int, default=16)
     args = ap.parse_args(argv)
     if args.mode == "rfann":

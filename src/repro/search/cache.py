@@ -19,6 +19,18 @@ per-entry overhead), so a long-running server holds a bounded working set
 regardless of query-stream cardinality.  ``invalidate()`` empties the cache
 wholesale — required whenever the index contents or the calibration that
 results were computed under change (``RFANNEngine.swap_index`` wires this).
+``invalidate_segment(ns)`` is the surgical variant for multi-segment indexes:
+it drops only rows whose namespace matches and bumps that namespace's
+**segment epoch**, so a streaming compaction that replaces the base segment
+leaves every other segment's rows (other shards, the mesh) warm.  Stores made
+by dispatches that split before the bump carry the old ``(global, segment)``
+epoch pair and are fenced exactly like a wholesale invalidation.
+
+Requests that carry a per-row liveness mask (``SearchRequest.live``) are
+cached under the same keys as unmasked ones: the mask is corpus state, not a
+request parameter, and the owner of the mask (the streaming layer) must call
+``invalidate_segment`` on every mask change — that is the per-segment epoch
+invalidation invariant (see docs/streaming.md).
 
 The cache is installed at the single substrate choke point: both
 ``SearchSubstrate.dispatch`` and ``MeshSubstrate.run`` split each request
@@ -125,11 +137,13 @@ class SearchCache:
         self._lock = threading.Lock()
         self.bytes = 0
         self.epoch = 0          # bumped by invalidate(); fences late stores
+        self._seg_epochs: Dict[object, int] = {}   # ns -> segment epoch
         self.hits = 0
         self.misses = 0
         self.dedup_hits = 0     # intra-batch duplicates served by one dispatch
         self.evictions = 0
         self.invalidations = 0
+        self.seg_invalidations = 0
         self.expired = 0        # TTL / calibration-epoch expiries
 
     def __len__(self) -> int:
@@ -164,16 +178,26 @@ class SearchCache:
             return e
 
     def store(self, key: Tuple, entry: CacheEntry,
-              epoch: Optional[int] = None) -> None:
+              epoch=None) -> None:
         """Insert one entry.  ``epoch`` (captured at lookup/split time)
         fences stores against a concurrent ``invalidate``: a dispatch that
         was in flight when the cache was invalidated — e.g. a batch still
         executing on a just-swapped-out index — must not repopulate the
         cache with rows of the old corpus.  The check runs under the same
-        lock ``invalidate`` takes, so no stale store can slip through."""
+        lock ``invalidate`` takes, so no stale store can slip through.
+
+        ``epoch`` is either the legacy global ``int`` or the
+        ``(global, segment)`` pair from :meth:`epoch_for`; the pair
+        additionally fences stores against a concurrent
+        ``invalidate_segment`` of this key's namespace (``key[0]``)."""
         with self._lock:
-            if epoch is not None and epoch != self.epoch:
-                return
+            if epoch is not None:
+                if isinstance(epoch, tuple):
+                    if (epoch[0] != self.epoch or
+                            epoch[1] != self._seg_epochs.get(key[0], 0)):
+                        return
+                elif epoch != self.epoch:
+                    return
             entry.stamp = self.clock()
             old = self._d.pop(key, None)
             if old is not None:
@@ -198,12 +222,36 @@ class SearchCache:
             self.epoch += 1
             self.invalidations += 1
 
+    def invalidate_segment(self, ns=None) -> None:
+        """Drop only the rows of one namespace and bump its segment epoch.
+        The hot-swap primitive for multi-segment indexes: a streaming
+        compaction replaces the base segment's corpus, so only base-keyed
+        rows (``key[0] == ns``) are wrong — rows of other segments stay
+        warm.  In-flight dispatches on the old segment captured the old
+        ``(global, segment)`` epoch pair via :meth:`epoch_for` and their
+        late stores are dropped by :meth:`store`."""
+        with self._lock:
+            dead = [k for k in self._d if k[0] == ns]
+            for k in dead:
+                self.bytes -= self._d.pop(k).nbytes
+            self._seg_epochs[ns] = self._seg_epochs.get(ns, 0) + 1
+            self.seg_invalidations += 1
+
+    def epoch_for(self, ns=None) -> Tuple[int, int]:
+        """The ``(global, segment)`` epoch pair to capture before a dispatch
+        whose stores should be fenced against both wholesale and
+        per-segment invalidation of ``ns``."""
+        with self._lock:
+            return (self.epoch, self._seg_epochs.get(ns, 0))
+
     def snapshot(self) -> dict:
         return dict(entries=len(self._d), bytes=self.bytes,
                     max_bytes=self.max_bytes, hits=self.hits,
                     misses=self.misses, dedup_hits=self.dedup_hits,
                     evictions=self.evictions,
-                    invalidations=self.invalidations, expired=self.expired)
+                    invalidations=self.invalidations,
+                    seg_invalidations=self.seg_invalidations,
+                    expired=self.expired)
 
     # ------------------------------------------------- batch split / stitch
     def split(self, qv: np.ndarray, lo: np.ndarray, hi: np.ndarray, k: int,
@@ -249,7 +297,7 @@ class SearchCache:
         return keys, hit_rows, np.asarray(miss, np.int64), dups
 
     def store_batch(self, keys: List[Tuple], res: SearchResult,
-                    epoch: Optional[int] = None,
+                    epoch=None,
                     cal_epoch: Optional[int] = None) -> None:
         """Store every row of a finished miss-batch result (rows are copied
         so the cache never pins the batch arrays).  Pass the ``epoch``

@@ -51,6 +51,14 @@ class SearchRequest:
               (resolve / plan / dispatch / stitch) and the trace comes back
               on the ``SearchResult``.  ``None`` (the default) keeps the
               hot path to a single ``is None`` check.
+    live    : optional (n,) bool per-**rank** liveness mask (the streaming
+              layer's tombstones; ``False`` = deleted).  Dead rows never
+              appear in results but stay traversable routing nodes on the
+              beam path; the scan path masks them in-kernel.  The mask is
+              corpus state, not part of the cache key — a caller that
+              mutates it owns invalidating the substrate's cache segment
+              (``SearchCache.invalidate_segment``); the streaming layer
+              does this on every delete/compaction.
     """
     queries: np.ndarray
     lo: np.ndarray
@@ -62,8 +70,12 @@ class SearchRequest:
     beam_width: int = 1
     precision: str = "f32"
     trace: Optional[Any] = None
+    live: Optional[np.ndarray] = None
 
     def __post_init__(self):
+        if self.live is not None and np.ndim(self.live) != 1:
+            raise _invalid("live", getattr(self.live, "shape", self.live),
+                           "expected a 1-D per-rank mask")
         if self.strategy not in STRATEGIES:
             raise _invalid("strategy", self.strategy,
                            f"expected one of {STRATEGIES}")

@@ -133,6 +133,7 @@ class SearchSubstrate:
         self.planner = planner
         self._x_pad = None          # padded scan copy, built on first scan
         self._quant: Dict[str, dict] = {}   # precision -> quantized slots
+        self._live_memo = None      # (mask, (n,) bool dev, (1,n_pad) i32 dev)
         self._warm: Set[Tuple] = set()
 
     @classmethod
@@ -178,15 +179,20 @@ class SearchSubstrate:
         if met is not None and nq:
             met.counter("queries_total").inc(nq)
             met.counter(f"queries_{prec}_total").inc(nq)
+        live = req.live
         cache = self.cache
         cache_info = dict(cache_enabled=cache is not None,
                           cache_hits=0, cache_misses=nq, batch_dedup=0)
         if cache is None or nq == 0:
             fin = self._dispatch_all(qv, lo, hi, k, ef, req.strategy,
                                      req.use_kernel, defer, bw, prec,
-                                     trace=tr, cache_info=cache_info)
+                                     trace=tr, cache_info=cache_info,
+                                     live=live)
             return PendingSearch(self._stitched(fin, tr))
-        epoch = cache.epoch             # fences stores vs invalidate()
+        # (global, segment) epoch pair: fences stores vs both invalidate()
+        # and invalidate_segment(self.cache_ns) — the streaming layer bumps
+        # the segment epoch on every tombstone change / compaction
+        epoch = cache.epoch_for(self.cache_ns)
         cal_epoch = (self.planner.calibration_epoch
                      if req.strategy == "auto" else None)
         keys, hit_rows, miss, dups = cache.split(
@@ -208,7 +214,8 @@ class SearchSubstrate:
                 lambda: cache.assemble(nq, k, hit_rows, None, miss), tr))
         fin = self._dispatch_all(qv[miss], lo[miss], hi[miss], k, ef,
                                  req.strategy, req.use_kernel, defer, bw,
-                                 prec, trace=tr, cache_info=cache_info)
+                                 prec, trace=tr, cache_info=cache_info,
+                                 live=live)
         miss_keys = [keys[i] for i in miss]
 
         def finalize() -> SearchResult:
@@ -248,7 +255,7 @@ class SearchSubstrate:
     def _dispatch_all(self, qv, lo, hi, k, ef, strategy, use_kernel,
                       defer: bool, beam_width: int = 1,
                       precision: str = "f32", trace=None,
-                      cache_info=None) -> Callable[[], SearchResult]:
+                      cache_info=None, live=None) -> Callable[[], SearchResult]:
         """Enqueue the uncached work for one (sub-)batch; the returned
         closure blocks, stitches, and remaps rank ids to original ids.
         The dispatch span covers the enqueue (plus, on the ``defer=False``
@@ -268,12 +275,12 @@ class SearchSubstrate:
                 if met is not None and len(qv):
                     met.counter("graph_queries_total").inc(len(qv))
                 fin = self._dispatch_graph(qv, lo, hi, k, ef, use_kernel,
-                                           beam_width, precision)
+                                           beam_width, precision, live=live)
             else:
                 fin = self._dispatch_planned(qv, lo, hi, k, ef, strategy,
                                              use_kernel, defer, beam_width,
                                              precision,
-                                             trace=trace, span=sp)
+                                             trace=trace, span=sp, live=live)
 
         def finalize() -> SearchResult:
             ids, dists, stats = fin()
@@ -283,7 +290,7 @@ class SearchSubstrate:
 
     # ------------------------------------------------------ graph strategy
     def _dispatch_graph(self, qv, lo, hi, k, ef, use_kernel, beam_width=1,
-                        precision="f32"):
+                        precision="f32", live=None):
         """The paper's path: one beam-search dispatch over the full batch.
         Non-f32 precisions score the traversal against the quantized corpus
         and rerank the final pool in f32 inside ``beam_search_batch``."""
@@ -294,12 +301,13 @@ class SearchSubstrate:
                                      self.n)
         slot = self._quant_for(precision)
         quant = None if slot is None else (slot["data"], slot["scale"])
+        live_b, _ = self._live_ops(live)
         t0 = time.perf_counter()
         with annotate("rnsg.graph_beam_dispatch"):
             ids, dists, st = beam_search_batch(
                 self._vecs, self._nbrs, qj, lo_j, hi_j, entry,
                 k=k, ef=max(ef, k), use_kernel=use_kernel,
-                beam_width=beam_width, quant=quant)
+                beam_width=beam_width, quant=quant, live=live_b)
         met = self.metrics
 
         def finalize():
@@ -316,7 +324,7 @@ class SearchSubstrate:
     def _dispatch_planned(self, qv, lo, hi, k, ef, mode, use_kernel,
                           defer: bool, beam_width: int = 1,
                           precision: str = "f32", trace=None,
-                          span=None):
+                          span=None, live=None):
         """Routing policy: plan the batch, dispatch each fixed-shape
         partition, stitch back in request order.  ``defer=False`` blocks
         each partition before dispatching the next (today's calibrated
@@ -359,7 +367,8 @@ class SearchSubstrate:
                 fin = self._dispatch_scan(qv, lo, hi, part.indices,
                                           part.param, part.pad_q, k, ef,
                                           calibrate_wall=not defer,
-                                          precision=precision, trace=trace)
+                                          precision=precision, trace=trace,
+                                          live=live)
             else:
                 fin = self._dispatch_beam(qv, lo, hi, part.indices,
                                           part.param, part.pad_q, k,
@@ -367,7 +376,7 @@ class SearchSubstrate:
                                           calibrate_wall=not defer,
                                           use_kernel=use_kernel,
                                           beam_width=beam_width,
-                                          precision=precision)
+                                          precision=precision, live=live)
             if not defer:
                 val = fin()
                 fin = (lambda v: lambda: v)(val)
@@ -404,14 +413,44 @@ class SearchSubstrate:
                 self._vecs, ((0, n_pad - self.n), (0, self.d_pad - self.d)))
         return self._x_pad
 
+    # ------------------------------------------------------- liveness mask
+    def _live_ops(self, live):
+        """Device forms of a per-rank liveness mask: ((n,) bool for the beam
+        paths, (1, n_pad) i32 row for the scan kernel).  Memoized by object
+        identity — the streaming layer publishes one immutable mask array
+        per corpus version, so ``is`` is a sound cache key and mask reuse
+        costs no re-upload."""
+        if live is None:
+            return None, None
+        memo = self._live_memo
+        if memo is not None and memo[0] is live:
+            return memo[1], memo[2]
+        lv = np.asarray(live, bool)
+        if lv.shape != (self.n,):
+            raise ValueError(
+                f"live mask shape {lv.shape} does not match corpus ({self.n},)")
+        n_pad = -(-self.n // self.tb) * self.tb
+        row = np.zeros((1, n_pad), np.int32)
+        row[0, :self.n] = lv
+        out = (jnp.asarray(lv), jnp.asarray(row))
+        self._live_memo = (live,) + out
+        return out
+
     # --------------------------------------------------- quantized corpus
     def install_quantized(self, precision: str) -> None:
         """Build (or rebuild) the quantized corpus copies for one precision
         ahead of serving, so the first quantized request pays no build cost.
-        Lazy build happens anyway on first use (``_quant_for``)."""
+        Lazy build happens anyway on first use (``_quant_for``).
+
+        Rebuilding the quantized slots changes what a non-f32 request scores
+        against, so any installed cache must go cold for this substrate:
+        rows stored before the switch would otherwise stay servable under
+        unchanged keys."""
         if precision != "f32":
             self._quant.pop(precision, None)
             self._quant_for(precision)
+            if self.cache is not None:
+                self.cache.invalidate_segment(self.cache_ns)
 
     def _quant_for(self, precision: str) -> Optional[dict]:
         """Quantized scoring slots for one precision (lazy, cached):
@@ -439,7 +478,7 @@ class SearchSubstrate:
 
     def _dispatch_scan(self, qv, lo, hi, idx, bucket: int, pad_q: int,
                        k: int, ef: int, *, calibrate_wall: bool,
-                       precision: str = "f32", trace=None):
+                       precision: str = "f32", trace=None, live=None):
         nq = len(idx)
         starts = np.zeros(pad_q, np.int32)
         lens = np.zeros(pad_q, np.int32)
@@ -448,7 +487,8 @@ class SearchSubstrate:
         qp = np.zeros((pad_q, self.d_pad), np.float32)
         qp[:nq, :self.d] = qv[idx]
         slot = self._quant_for(precision)
-        sig = ("scan", bucket, pad_q, k, precision)
+        _, live_row = self._live_ops(live)
+        sig = ("scan", bucket, pad_q, k, precision, live is not None)
         warm = sig in self._warm
         self._warm.add(sig)
         t0 = time.perf_counter()
@@ -457,15 +497,17 @@ class SearchSubstrate:
             if slot is None:
                 ids, d = range_scan(self._scan_corpus(), jnp.asarray(starts),
                                     jnp.asarray(lens), jnp.asarray(qp),
-                                    bucket=bucket, k=k)
+                                    bucket=bucket, k=k, live=live_row)
             else:
                 # quantized scan keeps rerank_depth survivors (clamped to
-                # the slice via lens ≤ bucket masking) ...
+                # the slice via lens ≤ bucket masking; tombstoned rows are
+                # masked here, so the survivor pool is live-only) ...
                 rq = rerank_depth(k, ef, cap=self.tb)
                 ids_q, _ = range_scan(slot["data_pad"], jnp.asarray(starts),
                                       jnp.asarray(lens), jnp.asarray(qp),
                                       bucket=bucket, k=rq,
-                                      scale=slot["scale_pad"])
+                                      scale=slot["scale_pad"],
+                                      live=live_row)
                 # ... then a fused f32 rescore of those ids restores the
                 # exact top-k (candidates rank-sorted so ties break exactly
                 # as the oracle's)
@@ -497,7 +539,7 @@ class SearchSubstrate:
     def _dispatch_beam(self, qv, lo, hi, idx, ef: int, pad_q: int, k: int, *,
                        calibrate: bool, calibrate_wall: bool = True,
                        use_kernel: bool = False, beam_width: int = 1,
-                       precision: str = "f32"):
+                       precision: str = "f32", live=None):
         nq = len(idx)
         if nq == 0:                 # empty partition: nothing to dispatch
             empty = np.zeros(0, np.int32)
@@ -512,7 +554,8 @@ class SearchSubstrate:
         qp = jnp.asarray(qv[pad])
         slot = self._quant_for(precision)
         quant = None if slot is None else (slot["data"], slot["scale"])
-        sig = ("beam", ef, pad_q, k, beam_width, precision)
+        live_b, _ = self._live_ops(live)
+        sig = ("beam", ef, pad_q, k, beam_width, precision, live is not None)
         warm = sig in self._warm
         self._warm.add(sig)
         t0 = time.perf_counter()
@@ -522,7 +565,7 @@ class SearchSubstrate:
                 jnp.asarray(lo[pad].astype(np.int32)),
                 jnp.asarray(hi[pad].astype(np.int32)),
                 entry, k=k, ef=max(ef, k), use_kernel=use_kernel,
-                beam_width=beam_width, quant=quant)
+                beam_width=beam_width, quant=quant, live=live_b)
         met = self.metrics
 
         def finalize():
@@ -557,9 +600,9 @@ class SearchSubstrate:
 # ======================================================================
 # Mesh path: traced per-device bodies + the host-planned mesh substrate.
 # ======================================================================
-def _shard_graph(vecs, nbrs, rmq, dist_c, order, rank0, xq, scale, qv, lo,
-                 hi, *, k: int, ef: int, axis: str, beam_width: int = 1,
-                 precision: str = "f32"):
+def _shard_graph(vecs, nbrs, rmq, dist_c, order, rank0, xq, scale, live, qv,
+                 lo, hi, *, k: int, ef: int, axis: str, beam_width: int = 1,
+                 precision: str = "f32", use_live: bool = False):
     """Per-device graph body (the paper's mesh path): clip the replicated
     global rank interval to this shard, one beam dispatch over the full
     batch, then the cross-shard merge.  Leading shard dim of size 1.
@@ -571,6 +614,11 @@ def _shard_graph(vecs, nbrs, rmq, dist_c, order, rank0, xq, scale, qv, lo,
     body shape serves every precision.  Quantized traversals rerank their
     final pool in f32 inside ``beam_search_batch``, so the merged id set
     matches the f32 body's.
+
+    ``live`` is the sharded (1, per) shard-local liveness mask, same uniform
+    -operand idiom: under ``use_live=False`` the caller passes an all-ones
+    array and the trace never touches it; under ``use_live=True`` the beam
+    filters tombstoned candidates out of its final pool.
 
     Besides the merged top-k, the body all-gathers each shard's **summed
     ndist** (one scalar per shard) so the host can feed the cost model's
@@ -587,7 +635,8 @@ def _shard_graph(vecs, nbrs, rmq, dist_c, order, rank0, xq, scale, qv, lo,
     entry = resolve.select_entry(rmq, dist_c, slo, shi, n)
     ids, dists, st = beam_search_batch(vecs, nbrs, qv, slo, shi, entry,
                                        k=k, ef=ef, beam_width=beam_width,
-                                       quant=quant)
+                                       quant=quant,
+                                       live=live[0] if use_live else None)
     orig = resolve.remap_ids_jax(order, ids)
     dists = jnp.where(ids >= 0, dists, jnp.inf)
     ids_g = jax.lax.all_gather(orig, axis)               # (S, Q, k)
@@ -598,11 +647,11 @@ def _shard_graph(vecs, nbrs, rmq, dist_c, order, rank0, xq, scale, qv, lo,
 
 
 def _shard_planned(x_scan, vecs, nbrs, rmq, dist_c, order, rank0, xq, scale,
-                   scan_q, scan_lo, scan_hi, scan_dst,
+                   live, scan_q, scan_lo, scan_hi, scan_dst,
                    beam_q, beam_lo, beam_hi, beam_dst, *,
                    k: int, ef: int, bucket: int, nq: int,
                    has_beam: bool, axis: str, beam_width: int = 1,
-                   precision: str = "f32"):
+                   precision: str = "f32", use_live: bool = False):
     """Per-device planned body: branchless strategy dispatch.
 
     The host already split the batch into scan/beam sub-batches (replicated
@@ -624,10 +673,22 @@ def _shard_planned(x_scan, vecs, nbrs, rmq, dist_c, order, rank0, xq, scale,
     ones and are ignored.
 
     The scan group is always non-empty here — uniform-beam batches dispatch
-    the graph body instead (``MeshSubstrate.run`` fast path)."""
+    the graph body instead (``MeshSubstrate.run`` fast path).
+
+    ``live`` is the sharded (1, per) shard-local liveness mask (all-ones and
+    untouched under ``use_live=False``): the scan masks dead rows in-kernel
+    (a (1, per_pad) i32 row built in-trace), the beam filters its final
+    pool."""
     x_scan, vecs, nbrs = x_scan[0], vecs[0], nbrs[0]
     rmq, dist_c, order = rmq[0], dist_c[0], order[0]
     n, d = vecs.shape
+    if use_live:
+        live_sh = live[0]                                # (per,) shard-local
+        live_row = jnp.pad(live_sh.astype(jnp.int32),
+                           (0, x_scan.shape[0] - n))[None, :]
+        live_beam = live_sh.astype(bool)
+    else:
+        live_row = live_beam = None
     out_i = jnp.full((nq + 1, k), -1, jnp.int32)
     out_d = jnp.full((nq + 1, k), jnp.inf, jnp.float32)
     slo, shi = resolve.clip_interval_jax(scan_lo, scan_hi, rank0[0], n)
@@ -635,12 +696,13 @@ def _shard_planned(x_scan, vecs, nbrs, rmq, dist_c, order, rank0, xq, scale,
     starts = jnp.clip(slo, 0, n - 1)                     # (len 0 when empty)
     if precision == "f32":
         ids_s, d_s = range_scan(x_scan, starts, lens, scan_q,
-                                bucket=bucket, k=k, n_valid=n)
+                                bucket=bucket, k=k, n_valid=n, live=live_row)
     else:
         rq = rerank_depth(k, ef, cap=ROW_TILE)
         ids_q, _ = range_scan(x_scan, starts, lens, scan_q,
                               bucket=bucket, k=rq, n_valid=n,
-                              scale=scale if precision == "int8" else None)
+                              scale=scale if precision == "int8" else None,
+                              live=live_row)
         ids_s, d_s = rerank_pool(vecs, ids_q, scan_q[:, :d], k,
                                  use_kernel=False)
     d_s = jnp.where(ids_s >= 0, d_s, jnp.inf)
@@ -657,7 +719,7 @@ def _shard_planned(x_scan, vecs, nbrs, rmq, dist_c, order, rank0, xq, scale,
         ids_b, d_b, st = beam_search_batch(vecs, nbrs, beam_q, slo, shi,
                                            entry, k=k, ef=ef,
                                            beam_width=beam_width,
-                                           quant=quant)
+                                           quant=quant, live=live_beam)
         d_b = jnp.where(ids_b >= 0, d_b, jnp.inf)
         out_i = out_i.at[beam_dst].set(resolve.remap_ids_jax(order, ids_b))
         out_d = out_d.at[beam_dst].set(d_b)
@@ -727,6 +789,8 @@ class MeshSubstrate:
         self._x_pad = None          # padded scan corpus, built on first scan
         self._quant: Dict[str, dict] = {}   # precision -> quantized slots
         self._ones = None           # dummy replicated scale row (f32/bf16)
+        self._live_memo = None      # (mask, (S, per) bool device copy)
+        self._live_ones = None      # dummy all-live mask (uniform operands)
         self._fns: Dict[Tuple, object] = {}
 
     @property
@@ -736,10 +800,35 @@ class MeshSubstrate:
     # --------------------------------------------------- quantized corpus
     def install_quantized(self, precision: str) -> None:
         """Eagerly build the per-shard quantized corpus copies (lazy build
-        on first quantized request otherwise)."""
+        on first quantized request otherwise).  Rebuilding changes what
+        non-f32 requests score against, so the mesh cache segment goes
+        cold (same invariant as ``SearchSubstrate.install_quantized``)."""
         if precision != "f32":
             self._quant.pop(precision, None)
             self._quant_for(precision)
+            if self.cache is not None:
+                self.cache.invalidate_segment("mesh")
+
+    # ------------------------------------------------------- liveness mask
+    def _live_shards(self, live):
+        """(n,) global rank-space mask -> (S, per) sharded device copy,
+        memoized by object identity (one immutable array per corpus
+        version)."""
+        if live is None:
+            if self._live_ones is None:
+                self._live_ones = jnp.ones((self.n_shards, self.per), bool)
+            return self._live_ones
+        memo = self._live_memo
+        if memo is not None and memo[0] is live:
+            return memo[1]
+        lv = np.asarray(live, bool)
+        if lv.shape != (self.n_shards * self.per,):
+            raise ValueError(
+                f"live mask shape {lv.shape} does not match corpus "
+                f"({self.n_shards * self.per},)")
+        dev = jnp.asarray(lv.reshape(self.n_shards, self.per))
+        self._live_memo = (live, dev)
+        return dev
 
     def _ones_scale(self):
         """Replicated dummy scale row for precisions without one — keeps
@@ -824,15 +913,18 @@ class MeshSubstrate:
             met.counter("queries_total").inc(nq)
             met.counter("mesh_queries_total").inc(nq)
             met.counter(f"queries_{prec}_total").inc(nq)
+        live = req.live
         cache = self.cache
         cache_info = dict(cache_enabled=cache is not None,
                           cache_hits=0, cache_misses=nq, batch_dedup=0)
         if cache is None:
             res = self._run_uncached(qv, lo, hi, k, ef, req.strategy, bw,
-                                     prec, trace=tr, cache_info=cache_info)
+                                     prec, trace=tr, cache_info=cache_info,
+                                     live=live)
             res.trace = tr
             return res
-        epoch = cache.epoch             # fences stores vs invalidate()
+        # fences stores vs invalidate() / invalidate_segment("mesh")
+        epoch = cache.epoch_for("mesh")
         cal_epoch = (self.planner.calibration_epoch
                      if req.strategy == "auto" else None)
         keys, hit_rows, miss, dups = cache.split(qv, lo, hi, k, ef,
@@ -857,7 +949,7 @@ class MeshSubstrate:
             return res
         miss_res = self._run_uncached(qv[miss], lo[miss], hi[miss], k, ef,
                                       req.strategy, bw, prec, trace=tr,
-                                      cache_info=cache_info)
+                                      cache_info=cache_info, live=live)
         cache.store_batch([keys[i] for i in miss], miss_res, epoch=epoch,
                           cal_epoch=cal_epoch)
         if not hit_rows and not dups:
@@ -880,7 +972,7 @@ class MeshSubstrate:
 
     def _run_uncached(self, qv, lo, hi, k: int, ef: int, mode: str,
                       beam_width: int = 1, precision: str = "f32",
-                      trace=None, cache_info=None) -> SearchResult:
+                      trace=None, cache_info=None, live=None) -> SearchResult:
         nq = len(qv)
         met = self.metrics
         if mode == "graph":
@@ -899,7 +991,7 @@ class MeshSubstrate:
                 ids, dists = self._call_graph(qv, lo, hi, k, ef,
                                               calibrate=False,
                                               beam_width=beam_width,
-                                              precision=precision)
+                                              precision=precision, live=live)
             with maybe_span(trace, "stitch", ns="mesh"):
                 res = SearchResult(ids, dists,
                                    {"strategy": np.ones(nq, np.int8),
@@ -946,7 +1038,7 @@ class MeshSubstrate:
                 ids, dists = self._call_graph(qv, lo, hi, k, ef,
                                               calibrate=self.calibrate,
                                               beam_width=beam_width,
-                                              precision=precision)
+                                              precision=precision, live=live)
             with maybe_span(trace, "stitch", ns="mesh"):
                 res = SearchResult(ids, dists,
                                    {"strategy": strategy, "scan_frac": 0.0})
@@ -959,12 +1051,13 @@ class MeshSubstrate:
             for ln in lens_eff[scan_idx])
         pad_s = pad_pow2(len(scan_idx))
         pad_b = pad_pow2(len(beam_idx)) if len(beam_idx) else 0
+        use_live = live is not None
         key = ("planned", k, ef, bucket, pad_s, pad_b, nq, beam_width,
-               precision)
+               precision, use_live)
         warm = key in self._fns
         fn = self._planned_fn(k=k, ef=ef, bucket=bucket, pad_s=pad_s,
                               pad_b=pad_b, nq=nq, beam_width=beam_width,
-                              precision=precision)
+                              precision=precision, use_live=use_live)
         slot = self._quant_for(precision)
         if slot is None:
             x_scan, xq, scale = (self._scan_corpus(), self._vecs,
@@ -993,6 +1086,7 @@ class MeshSubstrate:
                 ids, dists, nd_g = fn(x_scan, self._vecs,
                                       self._nbrs, self._rmq, self._dist_c,
                                       self._order, self._rank0, xq, scale,
+                                      self._live_shards(live),
                                       *scan_ops, *beam_ops)
                 ids = np.asarray(ids)
                 dists = np.asarray(dists)
@@ -1027,12 +1121,14 @@ class MeshSubstrate:
         return res
 
     def _call_graph(self, qv, lo, hi, k: int, ef: int, *, calibrate: bool,
-                    beam_width: int = 1, precision: str = "f32"):
+                    beam_width: int = 1, precision: str = "f32", live=None):
         """One graph-body mesh dispatch (+ optional warm-call beam
         calibration for routed uniform-beam batches: wall time and the
         all-gathered per-shard ndist feed the cost model)."""
-        warm = ("graph", k, max(ef, k), beam_width, precision) in self._fns
-        fn = self.graph_fn(k, ef, beam_width, precision)
+        use_live = live is not None
+        warm = ("graph", k, max(ef, k), beam_width, precision,
+                use_live) in self._fns
+        fn = self.graph_fn(k, ef, beam_width, precision, use_live=use_live)
         slot = self._quant_for(precision)
         xq = self._vecs if slot is None else slot["data"]
         scale = self._ones_scale() if slot is None else slot["scale_pad"]
@@ -1040,7 +1136,7 @@ class MeshSubstrate:
         with annotate("rnsg.mesh_graph_dispatch"):
             ids, dists, nd_g = fn(self._vecs, self._nbrs, self._rmq,
                                   self._dist_c, self._order, self._rank0,
-                                  xq, scale,
+                                  xq, scale, self._live_shards(live),
                                   jnp.asarray(qv),
                                   jnp.asarray(np.asarray(lo).astype(np.int32)),
                                   jnp.asarray(np.asarray(hi).astype(np.int32)))
@@ -1101,38 +1197,42 @@ class MeshSubstrate:
 
     # ---------------------------------------------------------- traced fns
     def graph_fn(self, k: int, ef: int, beam_width: int = 1,
-                 precision: str = "f32"):
+                 precision: str = "f32", use_live: bool = False):
         """Jitted graph-strategy mesh fn (also the dry-run lowering target).
         Operands: 6 sharded index arrays + sharded ``xq`` + replicated
-        ``(scale, qv, lo, hi)`` — under f32 pass ``vecs`` again as ``xq``
-        and any (d_pad,) f32 row as ``scale`` (both ignored).  Returns
-        (ids, dists, ndist_per_shard)."""
-        key = ("graph", k, max(ef, k), beam_width, precision)
+        ``scale`` + sharded ``live`` + replicated ``(qv, lo, hi)`` — under
+        f32 pass ``vecs`` again as ``xq`` and any (d_pad,) f32 row as
+        ``scale``; under ``use_live=False`` pass any (S, per) array as
+        ``live`` (all ignored).  Returns (ids, dists, ndist_per_shard)."""
+        key = ("graph", k, max(ef, k), beam_width, precision, use_live)
         fn = self._fns.get(key)
         if fn is None:
             body = partial(_shard_graph, k=k, ef=max(ef, k), axis=self.axis,
-                           beam_width=beam_width, precision=precision)
+                           beam_width=beam_width, precision=precision,
+                           use_live=use_live)
             shard, rep = P(self.axis), P()
             fn = jax.jit(shard_map_compat(
                 body, self.mesh,
-                in_specs=(shard,) * 7 + (rep,) * 4,
+                in_specs=(shard,) * 7 + (rep,) + (shard,) + (rep,) * 3,
                 out_specs=(rep, rep, rep)))
             self._fns[key] = fn
         return fn
 
     def _planned_fn(self, *, k, ef, bucket, pad_s, pad_b, nq,
-                    beam_width: int = 1, precision: str = "f32"):
+                    beam_width: int = 1, precision: str = "f32",
+                    use_live: bool = False):
         key = ("planned", k, ef, bucket, pad_s, pad_b, nq, beam_width,
-               precision)
+               precision, use_live)
         fn = self._fns.get(key)
         if fn is None:
             body = partial(_shard_planned, k=k, ef=ef, bucket=bucket, nq=nq,
                            has_beam=pad_b > 0, axis=self.axis,
-                           beam_width=beam_width, precision=precision)
+                           beam_width=beam_width, precision=precision,
+                           use_live=use_live)
             shard, rep = P(self.axis), P()
             fn = jax.jit(shard_map_compat(
                 body, self.mesh,
-                in_specs=(shard,) * 8 + (rep,) * 9,
+                in_specs=(shard,) * 8 + (rep,) + (shard,) + (rep,) * 8,
                 out_specs=(rep, rep, rep)))
             self._fns[key] = fn
         return fn

@@ -150,7 +150,7 @@ class DistributedRFANN:
 
     def _search_local(self, qv, lo, hi, *, k: int, ef: int, plan: str,
                       beam_width: int = 1, precision: str = "f32",
-                      trace=None):
+                      trace=None, live=None):
         """Per-shard substrate dispatch, merged by the same ``merge_topk``
         the mesh path uses — identical ids by construction.  With
         ``async_dispatch`` every shard's work is enqueued before any block
@@ -177,7 +177,9 @@ class DistributedRFANN:
             req = SearchRequest(queries=qv, lo=slo, hi=shi,
                                 k=k, ef=ef, strategy=plan,
                                 beam_width=beam_width, precision=precision,
-                                trace=trace)
+                                trace=trace,
+                                live=None if live is None
+                                else live[s * self.per:(s + 1) * self.per])
             p = sub.dispatch(req, defer=self.async_dispatch,
                              q_digests=digests)
             if not self.async_dispatch:
@@ -215,9 +217,13 @@ class DistributedRFANN:
 
     def search_ranks(self, queries, lo, hi, *, k: int = 10, ef: int = 64,
                      plan: str = "graph", beam_width: int = 1,
-                     precision: str = "f32", trace=None) -> SearchResult:
+                     precision: str = "f32", trace=None,
+                     live=None) -> SearchResult:
         """Rank-space entry point (resolve already done): dispatch on the
-        mesh path when a mesh is attached, else the (async) local path."""
+        mesh path when a mesh is attached, else the (async) local path.
+        ``live`` is the *global* (n,) per-rank liveness mask; the local
+        path slices it per shard, the mesh path reshapes it across the
+        data axis."""
         qv = np.asarray(queries, np.float32)
         ef = max(ef, k)
         if self.mesh is None:
@@ -225,16 +231,17 @@ class DistributedRFANN:
                                                    plan=plan,
                                                    beam_width=beam_width,
                                                    precision=precision,
-                                                   trace=trace)
+                                                   trace=trace, live=live)
             return SearchResult(ids, dists, stats, trace=trace)
         return self.mesh_substrate.run(SearchRequest(
             queries=qv, lo=lo, hi=hi, k=k, ef=ef, strategy=plan,
-            beam_width=beam_width, precision=precision, trace=trace))
+            beam_width=beam_width, precision=precision, trace=trace,
+            live=live))
 
     def search(self, queries: np.ndarray, attr_ranges: np.ndarray, *,
                k: int = 10, ef: int = 64, plan: str = "graph",
                beam_width: int = 1, precision: str = "f32",
-               trace=None) -> Tuple[np.ndarray, np.ndarray]:
+               trace=None, live=None) -> Tuple[np.ndarray, np.ndarray]:
         from repro.obs import maybe_span
         with maybe_span(trace, "resolve") as sp:
             lo, hi = self.rank_range(attr_ranges)
@@ -245,7 +252,7 @@ class DistributedRFANN:
                     0, None) if trace is not None else None)
         res = self.search_ranks(queries, lo, hi, k=k, ef=ef, plan=plan,
                                 beam_width=beam_width, precision=precision,
-                                trace=trace)
+                                trace=trace, live=live)
         return res.ids, res.dists
 
     # ------------------------------------------------------------------
@@ -257,10 +264,11 @@ class DistributedRFANN:
         slot = ms._quant_for(precision)
         xq = self.vecs if slot is None else slot["data"]
         scale = ms._ones_scale() if slot is None else slot["scale_pad"]
+        live = ms._live_shards(None)        # all-ones dummy (uniform operand)
         args = (self.vecs, self.nbrs, self.rmq, self.dist_c, self.order,
-                self.rank0, xq, scale,
+                self.rank0, xq, scale, live,
                 jax.ShapeDtypeStruct((nq, d), jnp.float32),
                 jax.ShapeDtypeStruct((nq,), jnp.int32),
                 jax.ShapeDtypeStruct((nq,), jnp.int32))
-        sds = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in args[:8]]
-        return jax.jit(fn).lower(*sds, *args[8:])
+        sds = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in args[:9]]
+        return jax.jit(fn).lower(*sds, *args[9:])

@@ -108,7 +108,9 @@ class RFANNEngine:
                  pipeline_depth: int = 2,
                  metrics: Optional[MetricsRegistry] = None,
                  log_interval_s: float = 0.0,
-                 trace_sample_every: int = 0):
+                 trace_sample_every: int = 0,
+                 max_delta: Optional[int] = None,
+                 compact_every: Optional[int] = None):
         self.index = index
         self.k, self.ef = k, ef
         self.plan = plan
@@ -116,6 +118,10 @@ class RFANNEngine:
         self.precision = str(precision)
         if self.precision != "f32" and hasattr(index, "install_quantized"):
             index.install_quantized(self.precision)   # pay build cost once
+        if ((max_delta is not None or compact_every is not None)
+                and hasattr(index, "set_compaction_policy")):
+            index.set_compaction_policy(max_delta=max_delta,
+                                        compact_every=compact_every)
         self.max_batch = max_batch
         self.max_wait = max_wait_ms / 1000.0
         self.calibration_path = calibration_path
@@ -198,27 +204,53 @@ class RFANNEngine:
                      np.asarray(attr_range, np.float32), time.perf_counter(), fut))
         return fut
 
-    def swap_index(self, new_index) -> None:
+    def swap_index(self, new_index, *, segment=None) -> None:
         """Hot-swap the served index.  The result cache is detached from the
         old index, invalidated, and installed on the new one — cached rows
         hold corpus ids of the *old* index and must never be served
         afterwards.  A dispatch already in flight on the old index is fenced
         by the cache's epoch (captured at its hit/miss split, checked under
         the store lock), so its late stores are dropped rather than
-        repopulating the cache with old-corpus rows."""
+        repopulating the cache with old-corpus rows.
+
+        ``segment=<ns>`` scopes the invalidation to one cache namespace
+        (``SearchCache.invalidate_segment``): a streaming compaction swaps
+        only the base segment, so only base-keyed rows go cold — any other
+        namespace sharing the cache keeps its rows."""
         with self._index_lock:
             old = self.index
             if self.cache is not None:
-                if hasattr(old, "install_cache"):
+                if old is not new_index and hasattr(old, "install_cache"):
                     old.install_cache(None)     # old index: cache off
-                self.cache.invalidate()
+                if segment is None:
+                    self.cache.invalidate()
+                else:
+                    self.cache.invalidate_segment(segment)
             self.index = new_index
             if self.cache is not None and hasattr(new_index, "install_cache"):
                 new_index.install_cache(self.cache)
-            if hasattr(old, "install_metrics"):
-                old.install_metrics(None)
-            if hasattr(new_index, "install_metrics"):
-                new_index.install_metrics(self.registry)
+            if old is not new_index:
+                if hasattr(old, "install_metrics"):
+                    old.install_metrics(None)
+                if hasattr(new_index, "install_metrics"):
+                    new_index.install_metrics(self.registry)
+
+    # ------------------------------------------------- streaming delegation
+    def insert(self, vector: np.ndarray, attr: float, ext_id=None) -> int:
+        """Delegate one insert to a streaming index (``StreamingRFANN``).
+        The index publishes a new snapshot atomically, so in-flight batches
+        keep their captured view; no cache action is needed (delta results
+        are never cached)."""
+        with self._index_lock:
+            index = self.index
+        return index.insert(vector, attr, ext_id)
+
+    def delete(self, ext_id: int) -> None:
+        """Delegate one delete to a streaming index.  The index owns the
+        base-segment cache invalidation (per-segment epoch bump)."""
+        with self._index_lock:
+            index = self.index
+        index.delete(ext_id)
 
     # ------------------------------------------------------- stage 1: batch+resolve
     def _resolve_loop(self):

@@ -1,0 +1,6 @@
+"""Streaming ingest over the RNSG index: delta segment + tombstones +
+background compaction.  See docs/streaming.md."""
+from repro.streaming.delta import DeltaView
+from repro.streaming.streaming import BASE_NS, SegmentView, StreamingRFANN
+
+__all__ = ["BASE_NS", "DeltaView", "SegmentView", "StreamingRFANN"]

@@ -1,0 +1,406 @@
+"""Streaming RFANN: a mutable delta segment layered over the immutable
+attribute-sorted RNSG base, with tombstoned deletes and background
+compaction.
+
+Segment lifecycle (FreshDiskANN-style window-to-window):
+
+* **base** — an RNSG graph over a frozen snapshot, served through the
+  unified ``SearchSubstrate``.  Deletes of base points flip a per-rank
+  ``live`` bit (copy-on-write mask, threaded into the kernels as an
+  operand): dead nodes remain *traversable* routing nodes for the beam —
+  the graph stays navigable — but never leave a search.
+* **delta** — a brute-force attribute-sorted buffer (``DeltaView``)
+  absorbing inserts, searched exactly via the ``range_scan`` kernel.
+  Delta deletes remove the row physically.
+* **compaction** — when the delta or the tombstone count outgrows policy,
+  a worker thread rebuilds the base from the live set (``build_rnsg`` is
+  deterministic: stable attribute argsort over ``live_items()`` order), and
+  a short locked swap publishes it.  Mutations that landed during the
+  rebuild survive: inserts stay in a residual delta, deletes become
+  tombstones on the new base.
+
+Consistency: every search captures one immutable ``SegmentView`` — base
+substrate, live mask, delta snapshot — so queries racing mutations or the
+compaction swap see a point-in-time corpus, never a torn one.  Per-query
+results from both segments combine through the shared ``merge_topk``.
+
+Cache invariant: the live mask is **corpus state, not cache-key state**.
+The streaming layer owns a ``SearchCache`` segment (namespace ``"base"``)
+and bumps its per-segment epoch (``invalidate_segment``) on every
+base-tombstone change and on every compaction; delta results are never
+cached.  A compaction therefore invalidates *only* base-keyed rows — other
+namespaces sharing the cache (e.g. a co-served static index) keep theirs.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.construction import build_rnsg
+from repro.search import (SearchRequest, SearchResult, SearchSubstrate,
+                          merge_topk)
+from repro.streaming.delta import DeltaView
+
+BASE_NS = "base"        # the cache namespace every base dispatch keys under
+
+
+class SegmentView:
+    """One immutable published snapshot of the two-segment corpus."""
+
+    __slots__ = ("sub", "base_vecs", "base_attrs", "base_ids", "base_live",
+                 "n_tombstones", "delta", "version")
+
+    def __init__(self, sub: SearchSubstrate, base_vecs, base_attrs, base_ids,
+                 base_live, n_tombstones: int, delta: DeltaView,
+                 version: int):
+        self.sub = sub
+        self.base_vecs = base_vecs      # (nb, d) f32, rank order
+        self.base_attrs = base_attrs    # (nb,) f32 ascending
+        self.base_ids = base_ids        # (nb,) int32 external ids
+        self.base_live = base_live      # (nb,) bool — False = tombstoned
+        self.n_tombstones = n_tombstones
+        self.delta = delta
+        self.version = version
+
+    @property
+    def n_live(self) -> int:
+        return int(len(self.base_ids)) - self.n_tombstones + self.delta.count
+
+
+class StreamingRFANN:
+    """Streaming wrapper: RNSG base + brute-force delta + compaction.
+
+    Deliberately exposes **no** ``rank_range`` — ranks shift with every
+    mutation, so the engine's pipelined resolver must not resolve ahead of
+    the snapshot; ``RFANNEngine`` detects this and falls back to
+    ``search(queries, attr_ranges)``, which resolves both segments
+    atomically under one captured view.
+    """
+
+    def __init__(self, vectors: np.ndarray, attrs: np.ndarray, *,
+                 ids: Optional[np.ndarray] = None,
+                 max_delta: int = 1024, compact_every: int = 0,
+                 **build_kw):
+        vectors = np.asarray(vectors, np.float32)
+        attrs = np.asarray(attrs, np.float32)
+        n, d = vectors.shape
+        ext = (np.arange(n, dtype=np.int32) if ids is None
+               else np.asarray(ids, np.int32))
+        self.d = d
+        self._build_kw = dict(build_kw)
+        self._lock = threading.RLock()
+        self._cache = None
+        self._metrics = None
+        self._precisions: set = set()
+        self.max_delta = int(max_delta)
+        self.compact_every = int(compact_every)
+        self._ops_since_compact = 0
+        self._next_id = int(ext.max()) + 1 if n else 0
+        self._compacting = threading.Event()
+        self._worker: Optional[threading.Thread] = None
+        self.compactions = 0
+        self.build_seconds = 0.0
+        self._view = self._build_view(vectors, attrs, ext,
+                                      DeltaView.empty(d), version=0)
+        self._id_loc: Dict[int, int] = {}   # ext id -> base rank | -1 (delta)
+        self._reindex(self._view)
+
+    # ------------------------------------------------------------ builders
+    def _build_view(self, vectors, attrs, ext_ids, delta: DeltaView, *,
+                    version: int, old_sub: Optional[SearchSubstrate] = None,
+                    base_live: Optional[np.ndarray] = None) -> SegmentView:
+        """Build an RNSG base over (vectors, attrs) and wrap it in a view.
+        ``build_rnsg`` stable-sorts by attribute, so the result — and every
+        search over it — is a deterministic function of the input order."""
+        g = build_rnsg(vectors, attrs, **self._build_kw)
+        self.build_seconds += g.build_seconds
+        base_ids = np.asarray(ext_ids, np.int32)[g.order]
+        sub = SearchSubstrate(g.vecs, g.nbrs, g.rmq, g.dist_c,
+                              order=base_ids, attrs=g.attrs,
+                              cache=self._cache, cache_ns=BASE_NS,
+                              metrics=self._metrics)
+        if old_sub is not None:     # carry the calibrated cost model across
+            sub.planner.cost = old_sub.planner.cost
+            sub.planner.calibration_epoch = old_sub.planner.calibration_epoch
+        for prec in self._precisions:
+            sub.install_quantized(prec)
+        if base_live is None:
+            base_live = np.ones(len(base_ids), bool)
+        return SegmentView(sub, g.vecs, g.attrs, base_ids, base_live,
+                           int((~base_live).sum()), delta, version)
+
+    def _reindex(self, v: SegmentView) -> None:
+        loc = {int(e): r for r, e in enumerate(v.base_ids)
+               if v.base_live[r]}
+        for e in v.delta.ids:
+            loc[int(e)] = -1
+        self._id_loc = loc
+
+    # ----------------------------------------------------------- plumbing
+    @property
+    def planner(self):
+        return self._view.sub.planner
+
+    def install_cache(self, cache) -> None:
+        with self._lock:
+            self._cache = cache
+            self._view.sub.cache = cache
+
+    def install_metrics(self, metrics) -> None:
+        with self._lock:
+            self._metrics = metrics
+            self._view.sub.metrics = metrics
+            if metrics is not None:
+                m = metrics
+                self._m_ins = m.counter("stream_inserts_total",
+                                        "streaming inserts")
+                self._m_del = m.counter("stream_deletes_total",
+                                        "streaming deletes")
+                self._m_comp = m.counter("stream_compactions_total",
+                                         "delta->base compactions")
+                self._m_dsize = m.gauge("stream_delta_size",
+                                        "rows in the delta segment")
+                self._m_tomb = m.gauge("stream_tombstones",
+                                       "tombstoned base rows")
+                self._m_dfrac = m.histogram(
+                    "stream_delta_frac",
+                    "delta fraction of the live corpus at search time",
+                    lo=1e-4, hi=1.0, growth=1.5)
+                self._m_pause = m.histogram(
+                    "stream_compaction_pause_ms",
+                    "locked swap pause per compaction (ms)")
+                self._m_build = m.histogram(
+                    "stream_compaction_build_ms",
+                    "off-lock rebuild wall per compaction (ms)")
+                m.register_producer("streaming", self.stats)
+
+    def install_quantized(self, precision: str) -> None:
+        """Record the precision (compaction re-installs it on every rebuilt
+        base) and build the quantized corpus on the current base."""
+        if precision == "f32":
+            return
+        with self._lock:
+            self._precisions.add(precision)
+            self._view.sub.install_quantized(precision)
+
+    def set_compaction_policy(self, max_delta: Optional[int] = None,
+                              compact_every: Optional[int] = None) -> None:
+        if max_delta is not None:
+            self.max_delta = int(max_delta)
+        if compact_every is not None:
+            self.compact_every = int(compact_every)
+
+    # ---------------------------------------------------------- mutations
+    def insert(self, vector: np.ndarray, attr: float,
+               ext_id: Optional[int] = None) -> int:
+        """Append one point to the delta segment; returns its external id.
+        O(delta) host work (stable re-sort); no base cache invalidation —
+        delta results are never cached."""
+        with self._lock:
+            if ext_id is None:
+                ext_id = self._next_id
+            ext_id = int(ext_id)
+            if ext_id in self._id_loc:
+                raise ValueError(f"id {ext_id} is already live")
+            self._next_id = max(self._next_id, ext_id + 1)
+            v = self._view
+            delta = v.delta.with_inserted(np.asarray(vector, np.float32),
+                                          float(attr), ext_id)
+            self._view = SegmentView(v.sub, v.base_vecs, v.base_attrs,
+                                     v.base_ids, v.base_live,
+                                     v.n_tombstones, delta, v.version + 1)
+            self._id_loc[ext_id] = -1
+            self._ops_since_compact += 1
+            if self._metrics is not None:
+                self._m_ins.inc()
+                self._m_dsize.set(delta.count)
+        self._maybe_compact()
+        return ext_id
+
+    def delete(self, ext_id: int) -> None:
+        """Remove one live point.  Base points tombstone (the node stays a
+        routing node until the next compaction) and invalidate the base
+        cache segment; delta points vanish physically."""
+        with self._lock:
+            ext_id = int(ext_id)
+            loc = self._id_loc.pop(ext_id, None)
+            if loc is None:
+                raise KeyError(f"id {ext_id} is not live")
+            v = self._view
+            if loc < 0:             # delta row: physical remove
+                delta = v.delta.without(ext_id)
+                self._view = SegmentView(v.sub, v.base_vecs, v.base_attrs,
+                                         v.base_ids, v.base_live,
+                                         v.n_tombstones, delta,
+                                         v.version + 1)
+                if self._metrics is not None:
+                    self._m_dsize.set(delta.count)
+            else:                   # base rank: copy-on-write tombstone
+                live = v.base_live.copy()
+                live[loc] = False
+                self._view = SegmentView(v.sub, v.base_vecs, v.base_attrs,
+                                         v.base_ids, live,
+                                         v.n_tombstones + 1, v.delta,
+                                         v.version + 1)
+                if self._cache is not None:
+                    self._cache.invalidate_segment(BASE_NS)
+                if self._metrics is not None:
+                    self._m_tomb.set(v.n_tombstones + 1)
+            self._ops_since_compact += 1
+            if self._metrics is not None:
+                self._m_del.inc()
+        self._maybe_compact()
+
+    # ------------------------------------------------------------- search
+    def search(self, queries: np.ndarray, attr_ranges: np.ndarray, *,
+               k: int = 10, ef: int = 64, plan: str = "auto",
+               beam_width: int = 1, precision: str = "f32",
+               use_kernel: bool = False, trace=None) -> SearchResult:
+        """Range-filtered kNN over base ∪ delta at one captured snapshot.
+        Returns external ids.  Resolve happens per segment *inside* the
+        snapshot (this is why there is no ``rank_range``)."""
+        v = self._view                      # lock-free snapshot capture
+        qv = np.atleast_2d(np.asarray(queries, np.float32))
+        ar = np.atleast_2d(np.asarray(attr_ranges, np.float32))
+        ef = max(ef, k)
+        lo, hi = v.sub.resolve(ar)
+        req = SearchRequest(
+            queries=qv, lo=lo, hi=hi, k=k, ef=ef, strategy=plan,
+            use_kernel=use_kernel, beam_width=beam_width,
+            precision=precision, trace=trace,
+            live=v.base_live if v.n_tombstones else None)
+        pending = v.sub.dispatch(req, defer=True)
+        delta_res = v.delta.search(qv, ar, k)
+        base = pending.result()
+        if self._metrics is not None and v.n_live:
+            self._m_dfrac.observe(v.delta.count / v.n_live)
+        stats = dict(base.stats)
+        stats.update(delta_size=v.delta.count, tombstones=v.n_tombstones,
+                     version=v.version)
+        if delta_res is None:
+            return SearchResult(base.ids, base.dists, stats,
+                                trace=base.trace)
+        di, dd = delta_res
+        all_i = np.stack([np.asarray(base.ids, np.int32), di])
+        all_d = np.stack([np.where(base.ids >= 0, base.dists, np.inf), dd])
+        ids, dists = merge_topk(jnp.asarray(all_i), jnp.asarray(all_d), k)
+        return SearchResult(np.asarray(ids), np.asarray(dists), stats,
+                            trace=base.trace)
+
+    # --------------------------------------------------------- compaction
+    def _maybe_compact(self) -> None:
+        if self._compacting.is_set():
+            return
+        v = self._view
+        due = (v.delta.count >= self.max_delta
+               or (self.compact_every
+                   and self._ops_since_compact >= self.compact_every))
+        if due:
+            self.compact(wait=False)
+
+    def compact(self, wait: bool = True) -> bool:
+        """Rebuild the base from the live set on a worker thread and
+        hot-swap it.  Returns False when a compaction is already running
+        or there is nothing to fold in."""
+        with self._lock:
+            if self._compacting.is_set():
+                if wait and self._worker is not None:
+                    w = self._worker
+                else:
+                    return False
+            else:
+                v = self._view
+                if v.delta.count == 0 and v.n_tombstones == 0:
+                    return False
+                if v.n_live < 8:    # tombstone masks stay correct; a graph
+                    return False    # over <8 points is not worth building
+                self._compacting.set()
+                self._ops_since_compact = 0
+                w = threading.Thread(target=self._compact_run, args=(v,),
+                                     daemon=True)
+                self._worker = w
+                w.start()
+        if wait:
+            w.join()
+        return True
+
+    def _compact_run(self, v0: SegmentView) -> None:
+        try:
+            t0 = time.perf_counter()
+            keep = v0.base_live
+            cat_vecs = np.concatenate([v0.base_vecs[keep], v0.delta.vecs])
+            cat_attrs = np.concatenate([v0.base_attrs[keep],
+                                        v0.delta.attrs])
+            cat_ids = np.concatenate([v0.base_ids[keep], v0.delta.ids])
+            # slow part — entirely off-lock; mutations keep landing on the
+            # published view and are reconciled at the swap below
+            new = self._build_view(cat_vecs, cat_attrs, cat_ids,
+                                   DeltaView.empty(self.d),
+                                   version=0, old_sub=v0.sub)
+            build_ms = (time.perf_counter() - t0) * 1e3
+            t1 = time.perf_counter()
+            with self._lock:
+                cur = self._view
+                # ids live *now* (deletes during the rebuild win)
+                live_now = np.concatenate(
+                    [cur.base_ids[cur.base_live], cur.delta.ids])
+                base_live = np.isin(new.base_ids, live_now)
+                # inserts during the rebuild stay as the residual delta
+                folded = np.isin(cur.delta.ids, cat_ids)
+                residual = cur.delta.subset(~folded)
+                swapped = SegmentView(new.sub, new.base_vecs,
+                                      new.base_attrs, new.base_ids,
+                                      base_live, int((~base_live).sum()),
+                                      residual, cur.version + 1)
+                v0.sub.cache = None     # old segment: no new lookups;
+                if self._cache is not None:     # late stores are fenced by
+                    self._cache.invalidate_segment(BASE_NS)  # the epoch bump
+                self._view = swapped
+                self._reindex(swapped)
+                self.compactions += 1
+            pause_ms = (time.perf_counter() - t1) * 1e3
+            if self._metrics is not None:
+                self._m_comp.inc()
+                self._m_pause.observe(pause_ms)
+                self._m_build.observe(build_ms)
+                self._m_dsize.set(residual.count)
+                self._m_tomb.set(swapped.n_tombstones)
+        finally:
+            self._compacting.clear()
+
+    def close(self) -> None:
+        """Wait out any in-flight compaction (tests and serve teardown)."""
+        w = self._worker
+        if w is not None and w.is_alive():
+            w.join(timeout=30.0)
+
+    # ------------------------------------------------------------- export
+    def live_items(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(vecs, attrs, ids) of every live point, in exactly the order a
+        compaction would feed ``build_rnsg`` — a fresh offline build on
+        this tuple is bit-identical to the post-compaction base."""
+        v = self._view
+        keep = v.base_live
+        return (np.concatenate([v.base_vecs[keep], v.delta.vecs]),
+                np.concatenate([v.base_attrs[keep], v.delta.attrs]),
+                np.concatenate([v.base_ids[keep], v.delta.ids]))
+
+    def stats(self) -> dict:
+        v = self._view
+        nb = len(v.base_ids)
+        return dict(n_base=nb, n_delta=v.delta.count,
+                    tombstones=v.n_tombstones, n_live=v.n_live,
+                    delta_frac=v.delta.count / max(v.n_live, 1),
+                    version=v.version, compactions=self.compactions,
+                    build_seconds=self.build_seconds)
+
+    @property
+    def index_bytes(self) -> int:
+        v = self._view
+        sub = v.sub
+        return int(sub._nbrs.nbytes + sub._rmq.nbytes + sub._dist_c.nbytes
+                   + v.delta.vecs.nbytes)

@@ -116,6 +116,55 @@ def test_distributed_rfann_shard_map_matches_local():
     assert "OK" in out
 
 
+def test_distributed_delta_tombstone_parity_8_shards():
+    """Streaming segments on the sharded paths (subprocess, 8 forced host
+    devices): a rank-space tombstone mask threaded through ``live=`` must
+    give identical merged top-k on the mesh and local paths, and merging
+    either with the same brute-force delta segment through the shared
+    ``merge_topk`` stays identical — with no tombstoned id ever surfacing."""
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.data.ann import make_vectors, make_attrs, mixed_workload
+        from repro.search import merge_topk
+        from repro.serving.distributed import DistributedRFANN
+        from repro.streaming import DeltaView
+        vecs = make_vectors(1024, 8, seed=0); attrs = make_attrs(1024, seed=0)
+        rng = np.random.default_rng(3)
+        live = rng.random(1024) > 0.2           # rank-space tombstones
+        qv = make_vectors(12, 8, seed=5)
+        rg, _ = mixed_workload(attrs, 12, seed=1, levels=4)
+        mesh = jax.make_mesh((8,), ("data",))
+        kw = dict(n_shards=8, m=16, ef_spatial=16, ef_attribute=16)
+        d_local = DistributedRFANN(vecs, attrs, **kw)
+        d_mesh = DistributedRFANN(vecs, attrs, mesh=mesh, **kw)
+        # a delta segment of 64 fresh points, searched once and merged with
+        # both paths' base results through the one shared merge_topk
+        dv = make_vectors(64, 8, seed=9); da_ = make_attrs(64, seed=9)
+        o = np.argsort(da_, kind="stable")
+        delta = DeltaView(dv[o], da_[o],
+                          np.arange(2048, 2048 + 64, dtype=np.int32)[o])
+        order = np.argsort(attrs, kind="stable")
+        dead = set(order[~live].tolist())
+        for plan in ("graph", "auto"):
+            ia, da = d_local.search(qv, rg, k=5, ef=64, plan=plan, live=live)
+            ib, db = d_mesh.search(qv, rg, k=5, ef=64, plan=plan, live=live)
+            assert np.array_equal(ia, ib), plan
+            di, dd = delta.search(qv, rg, 5)
+            merged = []
+            for ids, ds in ((ia, da), (ib, db)):
+                mi, _ = merge_topk(
+                    jnp.asarray(np.stack([ids.astype(np.int32), di])),
+                    jnp.asarray(np.stack([np.where(ids >= 0, ds, np.inf),
+                                          dd])), 5)
+                merged.append(np.asarray(mi))
+            assert np.array_equal(merged[0], merged[1]), plan
+            got = set(int(x) for x in merged[0].ravel() if x >= 0)
+            assert not (got & dead), (plan, got & dead)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
 @pytest.mark.slow
 def test_async_local_dispatch_matches_sequential_8_shards():
     """Concurrency acceptance (subprocess, 8 forced host devices): the async
