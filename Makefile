@@ -4,7 +4,8 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 .PHONY: test test-fast verify lint docs-check bench-quick bench-planner \
         bench-substrate bench-mesh bench-cache bench-beam bench-beam-smoke \
         bench-quant bench-quant-smoke bench-stream bench-stream-smoke \
-        bench-all bench-full quickstart obs-smoke profile
+        bench-build bench-build-smoke bench-all bench-full quickstart \
+        obs-smoke profile
 
 # tier-1 verify (the command CI runs)
 test:
@@ -74,6 +75,18 @@ bench-stream:
 # tiny-scale CI smoke of the same trajectory (interpret-mode kernels)
 bench-stream-smoke:
 	$(PY) -m benchmarks.run --only streaming --n 1024
+
+# sharded construction + persistence: build wall vs shard count (asserting
+# bit-identity to the single-host build per point) and save/restore wall vs
+# rebuild (results/bench/build.csv + BENCH_build.json); re-execs itself
+# under 8 forced host devices
+bench-build:
+	$(PY) -m benchmarks.run --only build
+
+# tiny-scale CI smoke of the same trajectory: sharded-parity + directory
+# save/restore round-trip under the 8-device re-exec
+bench-build-smoke:
+	$(PY) -m benchmarks.run --only build --n 1024
 
 # smoke-sized perf trajectory: writes BENCH_substrate.json, BENCH_beam.json
 # and BENCH_quant.json at the repo root so the numbers are tracked per PR

@@ -103,17 +103,25 @@ class CheckpointManager:
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        z = np.load(self._path(step))
         leaves_with_path = jax.tree_util.tree_leaves_with_path(state_like)
         flat_keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                              for p in path) for path, _ in leaves_with_path]
         arrays = []
-        for key, (path, leaf) in zip(flat_keys, leaves_with_path):
-            a = z[key]
-            want = getattr(leaf, "dtype", None)
-            if want is not None and str(a.dtype) != str(want):
-                a = a.astype(want)
-            arrays.append(a)
+        # context-manage the npz: np.load keeps the zip member file open
+        # until closed, so a bare handle leaks one fd per restore
+        with np.load(self._path(step)) as z:
+            for key, (path, leaf) in zip(flat_keys, leaves_with_path):
+                if key not in z.files:
+                    raise KeyError(
+                        f"checkpoint step {step} ({self._path(step)}) has no "
+                        f"entry for tree path {key!r}; the restore template "
+                        f"does not match the saved state (saved keys: "
+                        f"{sorted(k for k in z.files if k != '__meta__')})")
+                a = z[key]
+                want = getattr(leaf, "dtype", None)
+                if want is not None and str(a.dtype) != str(want):
+                    a = a.astype(want)
+                arrays.append(a)
         tree = jax.tree_util.tree_unflatten(
             jax.tree_util.tree_structure(state_like), arrays)
         if shardings is not None:
@@ -122,5 +130,42 @@ class CheckpointManager:
 
     def meta(self, step: Optional[int] = None) -> Dict:
         step = step if step is not None else self.latest_step()
-        z = np.load(self._path(step))
-        return json.loads(bytes(z["__meta__"]).decode())
+        with np.load(self._path(step)) as z:
+            if "__meta__" not in z.files:
+                raise KeyError(f"checkpoint step {step} ({self._path(step)}) "
+                               f"has no __meta__ entry")
+            return json.loads(bytes(z["__meta__"]).decode())
+
+    def restore_flat(self, step: Optional[int] = None) -> Dict[str, np.ndarray]:
+        """Every saved array keyed by tree path — the template-free restore
+        used by :meth:`restore_index` (the saved manifest, not the caller,
+        knows the tree shape)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        with np.load(self._path(step)) as z:
+            return {k: z[k] for k in z.files if k != "__meta__"}
+
+    # ------------------------------------------------------------------
+    # Index checkpointing: RNSGGraph / RNSGIndex (incl. installed quantized
+    # corpora) and StreamingRFANN delta/tombstone state ride through the
+    # same atomic-npz step machinery as model state.  The array tree and
+    # its manifest come from ``repro.index.io``; the heavy sharded on-disk
+    # format (mmap/parallel restore) lives there too — this path is the
+    # single-file "checkpoint step" flavor.
+    def save_index(self, step: int, index, *, blocking: bool = True,
+                   extra: Optional[Dict[str, Any]] = None) -> None:
+        from repro.index.io import index_state
+        flat, manifest = index_state(index)
+        self.save(step, flat, blocking=blocking,
+                  extra=dict(extra or {}, index=manifest))
+
+    def restore_index(self, step: Optional[int] = None):
+        from repro.index.io import index_from_state
+        meta = self.meta(step)
+        if "index" not in meta:
+            raise KeyError(f"checkpoint step "
+                           f"{step if step is not None else self.latest_step()}"
+                           f" was not written by save_index (no index "
+                           f"manifest in __meta__)")
+        return index_from_state(self.restore_flat(step), meta["index"])

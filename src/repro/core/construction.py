@@ -8,6 +8,8 @@ vectorized Algorithm-1 pruning engine.  Ids are attribute ranks throughout.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import time
 from dataclasses import dataclass
 from typing import Optional, Tuple
@@ -50,14 +52,47 @@ class RNSGGraph:
         return self.nbrs.nbytes + self.rmq.nbytes + self.dist_c.nbytes
 
     def save(self, path: str) -> None:
-        np.savez_compressed(path, **{f.name: getattr(self, f.name)
-                                     for f in dataclasses.fields(self)
-                                     if f.name != "meta"})
+        """Atomic single-file save: the npz is written to a sibling temp
+        file, fsynced, and renamed over ``path`` — a crash mid-save never
+        corrupts the only copy of the index (same idiom as
+        ``QueryPlanner.save_calibration``).  ``meta`` and ``build_seconds``
+        ride along as a JSON sidecar entry so ``load`` round-trips them."""
+        if not path.endswith(".npz"):
+            path += ".npz"          # match np.savez's implicit suffix
+        arrays = {f.name: np.asarray(getattr(self, f.name))
+                  for f in dataclasses.fields(self)
+                  if f.name not in ("meta", "build_seconds")}
+        info = json.dumps(dict(build_seconds=float(self.build_seconds),
+                               meta=self.meta))
+        tmp = f"{path}.tmp.{os.getpid()}"
+        try:
+            with open(tmp, "wb") as f:
+                np.savez_compressed(
+                    f, __meta__=np.frombuffer(info.encode(), np.uint8),
+                    **arrays)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.remove(tmp)
 
     @classmethod
     def load(cls, path: str) -> "RNSGGraph":
-        z = np.load(path)
-        return cls(**{k: z[k] for k in z.files}, meta={})
+        if not os.path.exists(path) and os.path.exists(path + ".npz"):
+            path += ".npz"          # save() appends the suffix
+        with np.load(path) as z:    # context manager: no leaked npz handle
+            arrays = {k: z[k] for k in z.files
+                      if k not in ("__meta__", "build_seconds")}
+            if "__meta__" in z.files:
+                info = json.loads(bytes(z["__meta__"]).decode())
+                return cls(**arrays,
+                           build_seconds=float(info.get("build_seconds", 0.0)),
+                           meta=dict(info.get("meta", {})))
+            # legacy layout: build_seconds stored as a 0-d array, no meta
+            bs = (float(z["build_seconds"])
+                  if "build_seconds" in z.files else 0.0)
+            return cls(**arrays, build_seconds=bs, meta={})
 
 
 def _gap_sorted_side(n: int, knn_ids: np.ndarray, ef_attribute: int,
@@ -71,7 +106,12 @@ def _gap_sorted_side(n: int, knn_ids: np.ndarray, ef_attribute: int,
     win = ids - win_off if side == "l" else ids + win_off          # (n, ef)
     win_ok = (win >= 0) & (win < n)
     kn = knn_ids.copy()
-    kn_ok = (kn >= 0) & ((kn < ids) if side == "l" else (kn > ids))
+    # kn < n guards against out-of-range candidates (e.g. pad-row ids from a
+    # k >= n exact_knn, or a caller-supplied approximate KNN graph): an id
+    # >= n would flow into prune_all_jax's vector gathers and the final
+    # adjacency, corrupting the index
+    kn_ok = ((kn >= 0) & (kn < n)
+             & ((kn < ids) if side == "l" else (kn > ids)))
     cand = np.concatenate([np.where(win_ok, win, -1),
                            np.where(kn_ok, kn, -1)], axis=1)        # (n, ch)
     gap = np.where(cand >= 0, np.abs(cand - ids), np.iinfo(np.int64).max // 2)
@@ -107,10 +147,15 @@ def build_rnsg(vectors: np.ndarray, attrs: np.ndarray, *, m: int = 32,
     vs, as_ = vectors[order], attrs[order]
 
     if knn_ids is None:
-        if knn_method == "exact":
-            _, knn_ids = exact_knn(vs, ef_spatial)
+        # a corpus has at most n-1 true neighbors per node; asking for more
+        # only returns pad/duplicate rows (tiny-corpus regression)
+        k_eff = min(ef_spatial, n - 1)
+        if k_eff < 1:
+            knn_ids = np.full((n, 0), -1, np.int32)
+        elif knn_method == "exact":
+            _, knn_ids = exact_knn(vs, k_eff)
         else:
-            _, knn_ids = nndescent(vs, ef_spatial, iters=knn_iters, seed=seed)
+            _, knn_ids = nndescent(vs, k_eff, iters=knn_iters, seed=seed)
     cand_l = _gap_sorted_side(n, knn_ids, ef_attribute, "l")
     cand_r = _gap_sorted_side(n, knn_ids, ef_attribute, "r")
     nbrs = prune_all_jax(vs, cand_l, cand_r, m)

@@ -51,10 +51,12 @@ def rrng_prune_np(x: int, cands: np.ndarray, vecs: np.ndarray, m: int) -> List[i
 
 
 # ----------------------------------------------------------------------
-@partial(jax.jit, static_argnames=("m_half",))
-def _prune_side_batch(x_vecs, cand_ids, cand_vecs, m_half: int):
+def prune_side(x_vecs, cand_ids, cand_vecs, m_half: int):
     """x_vecs: (B,d); cand_ids: (B,C) gap-sorted, -1 pad; cand_vecs: (B,C,d).
-    Returns kept mask (B,C) honoring the sequential RRNG rule + cap."""
+    Returns kept mask (B,C) honoring the sequential RRNG rule + cap.
+    Pure traceable body — also inlined per slab by the sharded builder
+    (``repro.core.build_sharded``); every op is row-independent, so block
+    and shard partitioning cannot change any row's result."""
     d_xc = jnp.sum(jnp.square(cand_vecs - x_vecs[:, None, :]), axis=-1)   # (B,C)
     # candidate-candidate distance tiles
     cn = jnp.sum(cand_vecs * cand_vecs, axis=-1)
@@ -77,24 +79,54 @@ def _prune_side_batch(x_vecs, cand_ids, cand_vecs, m_half: int):
     return kept
 
 
+_prune_side_batch = partial(jax.jit, static_argnames=("m_half",))(prune_side)
+
+
+def pack_kept(cand_l, kept_l, cand_r, kept_r, m: int):
+    """Compact the kept candidates of both sides into (B, m) neighbor ids,
+    -1 padded — left-side keeps first (in gap order), then right, truncated
+    at m.  A stable argsort on the ~kept mask is the vectorized equivalent
+    of the per-row ``concatenate(cand[kept])`` pack (stability preserves
+    the within-side candidate order and the left-before-right concat
+    order), so the output is bit-identical to the sequential pack."""
+    cand = jnp.concatenate([cand_l, cand_r], axis=1)
+    kept = jnp.concatenate([kept_l, kept_r], axis=1)
+    order = jnp.argsort(~kept, axis=1, stable=True)
+    cand = jnp.take_along_axis(cand, order, axis=1)
+    kept = jnp.take_along_axis(kept, order, axis=1)
+    c2 = cand.shape[1]
+    if c2 < m:
+        cand = jnp.pad(cand, ((0, 0), (0, m - c2)), constant_values=-1)
+        kept = jnp.pad(kept, ((0, 0), (0, m - c2)))
+    return jnp.where(kept[:, :m], cand[:, :m], -1).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("m", "m_half"))
+def _prune_pack_block(x_vecs, cand_l, cv_l, cand_r, cv_r, m: int,
+                      m_half: int):
+    kept_l = prune_side(x_vecs, cand_l, cv_l, m_half)
+    kept_r = prune_side(x_vecs, cand_r, cv_r, m_half)
+    return pack_kept(cand_l, kept_l, cand_r, kept_r, m)
+
+
 def prune_all_jax(vecs: np.ndarray, cand_l: np.ndarray, cand_r: np.ndarray,
                   m: int, block: int = 2048) -> np.ndarray:
     """Run Algorithm 1 for every node. cand_l/cand_r: (n, Ch) rank-gap-sorted
-    candidate ids per side (-1 padded). Returns (n, m) neighbor ids (-1 pad)."""
+    candidate ids per side (-1 padded). Returns (n, m) neighbor ids (-1 pad).
+    The keep/prune recurrence and the kept→adjacency pack both run on
+    device (``_prune_pack_block``); the host loop only blocks rows."""
     n = vecs.shape[0]
     half = max(m // 2, 1)
     v = jnp.asarray(vecs, jnp.float32)
-    out = np.full((n, m), -1, np.int32)
+    out = []
     for lo in range(0, n, block):
         hi = min(lo + block, n)
         xv = v[lo:hi]
-        sides = []
-        for cand in (cand_l, cand_r):
-            ci = jnp.asarray(cand[lo:hi], jnp.int32)
-            cv = v[jnp.maximum(ci, 0)]
-            kept = np.asarray(_prune_side_batch(xv, ci, cv, half))
-            sides.append((cand[lo:hi], kept))
-        for b in range(hi - lo):
-            ids = np.concatenate([s[0][b][s[1][b]] for s in sides])
-            out[lo + b, :len(ids)] = ids[:m]
-    return out
+        ci_l = jnp.asarray(cand_l[lo:hi], jnp.int32)
+        ci_r = jnp.asarray(cand_r[lo:hi], jnp.int32)
+        out.append(np.asarray(_prune_pack_block(
+            xv, ci_l, v[jnp.maximum(ci_l, 0)],
+            ci_r, v[jnp.maximum(ci_r, 0)], m, half)))
+    if not out:
+        return np.full((0, m), -1, np.int32)
+    return np.concatenate(out)

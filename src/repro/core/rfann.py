@@ -22,11 +22,35 @@ class RNSGIndex:
     def build(cls, vectors: np.ndarray, attrs: np.ndarray, **kw) -> "RNSGIndex":
         return cls(build_rnsg(vectors, attrs, **kw))
 
-    def save(self, path: str) -> None:
-        self.g.save(path)
+    @classmethod
+    def build_sharded(cls, vectors: np.ndarray, attrs: np.ndarray,
+                      **kw) -> "RNSGIndex":
+        """Multi-device construction (``core.build_sharded``) — bit-identical
+        to :meth:`build` with exact KNN; ``n_shards=`` picks the slab count
+        (defaults to every local device)."""
+        from repro.core.build_sharded import build_rnsg_sharded
+        return cls(build_rnsg_sharded(vectors, attrs, **kw))
+
+    def save(self, path: str, *, shards: int = 0) -> None:
+        """``shards=0``: legacy atomic single-npz (graph only).  ``shards>=1``:
+        the sharded directory format (``repro.index.io``) — also captures
+        installed quantized corpora and mmap/parallel-restores."""
+        if shards:
+            from repro.index import io
+            io.save_index(self, path, shards=shards)
+        else:
+            self.g.save(path)
 
     @classmethod
     def load(cls, path: str) -> "RNSGIndex":
+        from repro.index import io
+        if io.is_index_dir(path):
+            idx = io.load_index(path)
+            if not isinstance(idx, cls):
+                raise TypeError(f"index at {path} is "
+                                f"{type(idx).__name__}, not RNSGIndex — "
+                                f"load it with repro.index.io.load_index")
+            return idx
         return cls(RNSGGraph.load(path))
 
     # ------------------------------------------------------------------

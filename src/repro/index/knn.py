@@ -39,14 +39,23 @@ def _exact_knn_jit(vecs: jax.Array, k: int, block: int):
 
 
 def exact_knn(vecs: np.ndarray, k: int, block: int = 512) -> Tuple[np.ndarray, np.ndarray]:
-    """Exact KNN (ids exclude self). Pads n to a block multiple internally."""
+    """Exact KNN (ids exclude self). Pads n to a block multiple internally.
+
+    When ``k >= n`` the top-k necessarily spills into the pad rows; those
+    slots come back masked (id -1, distance +inf) instead of leaking
+    out-of-range pad-row ids into callers' gathers."""
     n = vecs.shape[0]
     pad = (-n) % block
     if pad:  # padded rows sit far away and never enter any real row's top-k
         vecs = np.concatenate(
             [vecs, 1e9 * np.ones((pad, vecs.shape[1]), np.float32)])
     d, i = _exact_knn_jit(jnp.asarray(vecs, jnp.float32), k, block)
-    return np.asarray(d[:n]), np.asarray(i[:n])
+    d, i = np.asarray(d[:n]), np.asarray(i[:n])
+    oob = i >= n                     # pad-row ids: only reachable when k >= n
+    if oob.any():
+        i = np.where(oob, -1, i)
+        d = np.where(oob, np.inf, d)
+    return d, i
 
 
 # ----------------------------------------------------------------------

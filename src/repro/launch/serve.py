@@ -12,6 +12,12 @@ QPS, recall and latency percentiles.
 Prometheus text exposition at the given path plus a JSON sibling
 (``out.prom.json``); ``--log-interval S`` turns on the engine's periodic
 one-line stats log while serving.
+
+``--index-path DIR`` makes startup stateful: the first run builds the index
+and persists it (sharded directory format, ``repro.index.io``) on
+shutdown; later runs restore it in seconds instead of rebuilding.
+``--build-shards S`` routes a fresh static build through the multi-device
+sharded constructor (bit-identical output).
 """
 from __future__ import annotations
 
@@ -33,6 +39,31 @@ from repro.models.params import ShardPlan
 from repro.serving.engine import RFANNEngine
 
 
+def _restore_index(args, streaming: bool):
+    """Restore a prebuilt index from ``--index-path`` (sharded directory
+    format) when one is there and matches the requested mode/corpus shape;
+    returns ``None`` when a fresh build is needed."""
+    from repro.index import io
+    if not (args.index_path and io.is_index_dir(args.index_path)):
+        return None
+    t0 = time.perf_counter()
+    idx = io.load_index(args.index_path)
+    from repro.streaming import StreamingRFANN
+    if isinstance(idx, StreamingRFANN) != streaming:
+        print(f"[serve] index at {args.index_path} is the wrong kind for "
+              f"this mode — rebuilding")
+        return None
+    d = idx.d if streaming else idx.g.vecs.shape[1]
+    n_ok = streaming or idx.g.n == args.n
+    if d != args.dim or not n_ok:
+        print(f"[serve] index at {args.index_path} does not match the "
+              f"requested corpus (n={args.n}, dim={args.dim}) — rebuilding")
+        return None
+    print(f"[serve] restored index from {args.index_path} "
+          f"in {time.perf_counter() - t0:.2f}s (no rebuild)")
+    return idx
+
+
 def serve_rfann(args):
     vecs = make_vectors(args.n, args.dim, seed=0)
     attrs = make_attrs(args.n, seed=0)
@@ -40,7 +71,13 @@ def serve_rfann(args):
     ranges, _ = mixed_workload(attrs, args.requests, seed=3)
     streaming = args.max_delta > 0 or args.compact_every > 0
     rng = np.random.default_rng(0)
-    if streaming:
+    idx = _restore_index(args, streaming)
+    if idx is not None and streaming:
+        pending_ins = [j for j in range(args.n) if j not in idx._id_loc]
+        print(f"[serve] {idx.stats()}")
+    elif idx is not None:
+        print(f"[serve] {idx.stats()}")
+    elif streaming:
         # streaming serve: seed the base with 80% of the corpus, churn the
         # held-out tail (inserts) plus random deletes through the engine
         # while the first half of the requests stream in, then measure
@@ -55,9 +92,17 @@ def serve_rfann(args):
         pending_ins = list(range(n0, args.n))
         print(f"[serve] {idx.stats()}")
     else:
-        print("[serve] building RNSG index ...")
-        idx = RNSGIndex.build(vecs, attrs, m=args.m, ef_spatial=32,
-                              ef_attribute=48)
+        if args.build_shards:
+            print(f"[serve] building RNSG index "
+                  f"({args.build_shards} shards) ...")
+            idx = RNSGIndex.build_sharded(vecs, attrs,
+                                          n_shards=args.build_shards,
+                                          m=args.m, ef_spatial=32,
+                                          ef_attribute=48)
+        else:
+            print("[serve] building RNSG index ...")
+            idx = RNSGIndex.build(vecs, attrs, m=args.m, ef_spatial=32,
+                                  ef_attribute=48)
         print(f"[serve] {idx.stats()}")
     if args.precision != "f32":
         idx.install_quantized(args.precision)   # build quantized corpus once
@@ -75,7 +120,9 @@ def serve_rfann(args):
                          log_interval_s=args.log_interval,
                          trace_sample_every=args.trace_sample_every,
                          max_delta=args.max_delta or None,
-                         compact_every=args.compact_every or None)
+                         compact_every=args.compact_every or None,
+                         index_path=args.index_path or None,
+                         index_save_shards=args.index_shards)
     futs = []
     churn_until = args.requests // 2
     t0 = time.perf_counter()
@@ -99,6 +146,9 @@ def serve_rfann(args):
         print(f"[serve] result cache: {engine.cache.snapshot()}")
     if args.calibration:
         print(f"[serve] cost-model calibration persisted to {args.calibration}")
+    if args.index_path:
+        print(f"[serve] index persisted to {args.index_path} "
+              f"({args.index_shards} shards) — restored on next startup")
     if args.metrics_path:
         # final snapshot on shutdown, alongside the calibration save:
         # Prometheus text at the given path, JSON snapshot as a sibling
@@ -176,6 +226,18 @@ def main(argv=None):
                     help="distance-scoring precision: quantized corpora "
                          "(int8/bf16) scan cheaper and rerank the survivors "
                          "in exact f32 (same ids as f32)")
+    ap.add_argument("--index-path", default="",
+                    help="index directory: restore the index from here at "
+                         "startup (skipping the build) and persist it on "
+                         "shutdown (repro.index.io sharded format)")
+    ap.add_argument("--index-shards", type=int, default=1,
+                    help="row-shard count for --index-path saves (restore "
+                         "fills shards with parallel reads)")
+    ap.add_argument("--build-shards", type=int, default=0,
+                    help="static mode: build the graph with the sharded "
+                         "multi-device constructor over this many device "
+                         "slabs (0 = single-host build; results are "
+                         "bit-identical either way)")
     ap.add_argument("--calibration", default="",
                     help="JSON path: load cost-model calibration at startup, "
                          "persist it on shutdown")

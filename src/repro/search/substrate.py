@@ -59,7 +59,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.beam import beam_search_batch, rerank_pool
 from repro.kernels.ops import range_scan
-from repro.kernels.quantize import quantize_corpus, rerank_depth
+from repro.kernels.quantize import (QuantizedCorpus, quantize_corpus,
+                                    rerank_depth)
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.profiler import annotate
 from repro.obs.trace import maybe_span
@@ -463,18 +464,39 @@ class SearchSubstrate:
             return None
         slot = self._quant.get(precision)
         if slot is None:
-            qc = quantize_corpus(self._vecs, precision)
-            n_pad = -(-self.n // self.tb) * self.tb
-            data_pad = jnp.pad(qc.data, ((0, n_pad - self.n),
-                                         (0, self.d_pad - self.d)))
-            scale_pad = (None if qc.scale is None else
-                         jnp.pad(qc.scale, (0, self.d_pad - self.d),
-                                 constant_values=1.0))
-            slot = dict(data=qc.data, data_pad=data_pad,
-                        scale=qc.scale, scale_pad=scale_pad,
-                        bytes_per_vector=qc.bytes_per_vector)
+            slot = self._slot_of(quantize_corpus(self._vecs, precision))
             self._quant[precision] = slot
         return slot
+
+    def _slot_of(self, qc: QuantizedCorpus) -> dict:
+        """Scoring slots from one quantized corpus copy (shared between the
+        lazy quantize path and the restore preload path)."""
+        n_pad = -(-self.n // self.tb) * self.tb
+        data_pad = jnp.pad(qc.data, ((0, n_pad - self.n),
+                                     (0, self.d_pad - self.d)))
+        scale_pad = (None if qc.scale is None else
+                     jnp.pad(qc.scale, (0, self.d_pad - self.d),
+                             constant_values=1.0))
+        return dict(data=qc.data, data_pad=data_pad,
+                    scale=qc.scale, scale_pad=scale_pad,
+                    bytes_per_vector=qc.bytes_per_vector)
+
+    def preload_quantized(self, precision: str, data, scale=None) -> None:
+        """Attach a prebuilt quantized corpus copy (the index-restore path,
+        ``repro.index.io``) without re-quantizing.  ``data`` may arrive as
+        the checkpoint's exact f32 upcast — it is narrowed back to the
+        precision's dtype here, which round-trips bit-exactly.  Same cache
+        rule as :meth:`install_quantized`: the scored corpus changed, so
+        this substrate's cache segment goes cold."""
+        if precision == "f32":
+            return
+        dt = jnp.bfloat16 if precision == "bf16" else jnp.int8
+        qc = QuantizedCorpus(precision, jnp.asarray(data).astype(dt),
+                             None if scale is None
+                             else jnp.asarray(scale, jnp.float32))
+        self._quant[precision] = self._slot_of(qc)
+        if self.cache is not None:
+            self.cache.invalidate_segment(self.cache_ns)
 
     def _dispatch_scan(self, qv, lo, hi, idx, bucket: int, pad_q: int,
                        k: int, ef: int, *, calibrate_wall: bool,

@@ -27,7 +27,11 @@ If ``calibration_path`` is given, the planner's online-calibrated cost model
 is restored from it at startup and persisted (atomically: temp file +
 rename) at ``close()`` — a restarted server starts from steady-state
 routing instead of the prior, and a crash mid-shutdown can never leave a
-truncated file behind.
+truncated file behind.  ``index_path`` does the same for the index itself:
+``close()`` writes the served index (graph + quantized corpora + streaming
+segment state) to the sharded directory format (``repro.index.io``), which
+``launch/serve --index-path`` restores at the next startup instead of
+rebuilding.
 
 Observability: the engine owns a ``MetricsRegistry`` (``repro.obs``) —
 pass one in to share it, or read the default via :meth:`metrics`.  It is
@@ -110,10 +114,14 @@ class RFANNEngine:
                  log_interval_s: float = 0.0,
                  trace_sample_every: int = 0,
                  max_delta: Optional[int] = None,
-                 compact_every: Optional[int] = None):
+                 compact_every: Optional[int] = None,
+                 index_path: Optional[str] = None,
+                 index_save_shards: int = 1):
         self.index = index
         self.k, self.ef = k, ef
         self.plan = plan
+        self.index_path = index_path
+        self.index_save_shards = int(index_save_shards)
         self.beam_width = int(beam_width)
         self.precision = str(precision)
         if self.precision != "f32" and hasattr(index, "install_quantized"):
@@ -392,3 +400,11 @@ class RFANNEngine:
             planner = getattr(self.index, "planner", None)
             if planner is not None:
                 planner.save_calibration(self.calibration_path)
+        if self.index_path:
+            # persist the served index (sharded directory format) so the
+            # next startup restores in seconds instead of rebuilding —
+            # save_index snapshots under the index lock, so a streaming
+            # index racing mutations/compaction saves a consistent view
+            from repro.index import io
+            io.save_index(self.index, self.index_path,
+                          shards=self.index_save_shards)

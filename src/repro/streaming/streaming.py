@@ -109,6 +109,57 @@ class StreamingRFANN:
         self._id_loc: Dict[int, int] = {}   # ext id -> base rank | -1 (delta)
         self._reindex(self._view)
 
+    # ------------------------------------------------------------ restore
+    @classmethod
+    def from_state(cls, *, base_vecs, base_attrs, base_ids, base_live,
+                   base_nbrs, base_rmq, base_dist_c,
+                   delta_vecs, delta_attrs, delta_ids,
+                   next_id: int, max_delta: int = 1024,
+                   compact_every: int = 0, precisions=(),
+                   build_kw=None) -> "StreamingRFANN":
+        """Rehydrate from checkpointed segment state (``repro.index.io``)
+        **without rebuilding the base graph** — the saved adjacency / RMQ /
+        entry arrays go straight into a fresh ``SearchSubstrate``, so
+        restore cost is array upload, not O(n²) construction.
+
+        ``precisions`` are recorded for compaction re-install; the caller
+        preloads saved quantized corpora via ``sub.preload_quantized`` (or
+        first quantized use lazily rebuilds them — identical either way,
+        quantization is deterministic in the base vectors).  Tombstones and
+        the delta snapshot resume exactly; compaction counters restart at
+        zero (they are run-scoped observability, not corpus state)."""
+        base_vecs = np.asarray(base_vecs, np.float32)
+        self = cls.__new__(cls)
+        self.d = int(base_vecs.shape[1])
+        self._build_kw = dict(build_kw or {})
+        self._lock = threading.RLock()
+        self._cache = None
+        self._metrics = None
+        self._precisions = set(precisions)
+        self.max_delta = int(max_delta)
+        self.compact_every = int(compact_every)
+        self._ops_since_compact = 0
+        self._compacting = threading.Event()
+        self._worker = None
+        self.compactions = 0
+        self.build_seconds = 0.0
+        base_ids = np.asarray(base_ids, np.int32)
+        sub = SearchSubstrate(base_vecs, base_nbrs, base_rmq, base_dist_c,
+                              order=base_ids, attrs=base_attrs,
+                              cache=None, cache_ns=BASE_NS, metrics=None)
+        delta = DeltaView(np.asarray(delta_vecs, np.float32),
+                          np.asarray(delta_attrs, np.float32),
+                          np.asarray(delta_ids, np.int32))
+        live = np.asarray(base_live, bool)
+        self._view = SegmentView(sub, base_vecs,
+                                 np.asarray(base_attrs, np.float32),
+                                 base_ids, live, int((~live).sum()),
+                                 delta, version=0)
+        self._next_id = int(next_id)
+        self._id_loc = {}
+        self._reindex(self._view)
+        return self
+
     # ------------------------------------------------------------ builders
     def _build_view(self, vectors, attrs, ext_ids, delta: DeltaView, *,
                     version: int, old_sub: Optional[SearchSubstrate] = None,

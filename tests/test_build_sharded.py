@@ -1,0 +1,114 @@
+"""Sharded construction: bit-identity to the single-host build, and
+restore-then-query parity through the sharded on-disk format.
+
+The multi-shard cases run in subprocesses with
+``--xla_force_host_platform_device_count`` (same pattern as
+test_multidevice.py) so the fake-device flag never leaks into the suite.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.build_sharded import build_rnsg_sharded
+from repro.core.construction import build_rnsg
+from repro.core.rfann import RNSGIndex
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str, devices: int = 8):
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       env=env, capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    return r.stdout
+
+
+def _corpus(n, d=24, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.normal(size=(n, d)).astype(np.float32),
+            rng.normal(size=n).astype(np.float32))
+
+
+FIELDS = ("vecs", "attrs", "nbrs", "order", "centroid", "dist_c", "rmq")
+
+
+def _assert_graph_equal(a, b):
+    for f in FIELDS:
+        assert np.array_equal(getattr(a, f), getattr(b, f)), f
+
+
+@pytest.mark.parametrize("n", [700, 37, 1024])
+def test_sharded_build_one_shard_bit_identical(n):
+    v, a = _corpus(n)
+    ref = build_rnsg(v, a, m=16, ef_spatial=16, ef_attribute=24)
+    got = build_rnsg_sharded(v, a, n_shards=1, m=16, ef_spatial=16,
+                             ef_attribute=24)
+    _assert_graph_equal(ref, got)
+    assert got.meta["shards"] == 1
+    assert got.meta["knn"] == "exact"
+
+
+def test_sharded_build_tiny_corpus_degenerate():
+    # n=1 short-circuits to the host builder (k_eff < 1) but keeps the
+    # shard annotation
+    v, a = _corpus(1)
+    g = build_rnsg_sharded(v, a, n_shards=1, m=8)
+    assert g.nbrs.shape[0] == 1 and (g.nbrs < 1).all()
+    assert g.meta["shards"] == 1
+
+
+def test_sharded_build_rejects_bad_shard_count():
+    v, a = _corpus(64)
+    with pytest.raises(ValueError, match="exceeds"):
+        build_rnsg_sharded(v, a, n_shards=9999)
+
+
+@pytest.mark.slow
+def test_sharded_build_multi_shard_bit_identical():
+    _run("""
+        import numpy as np
+        from repro.core.build_sharded import build_rnsg_sharded
+        from repro.core.construction import build_rnsg
+        for n in (1500, 512):
+            rng = np.random.default_rng(n)
+            v = rng.normal(size=(n, 24)).astype(np.float32)
+            a = rng.normal(size=n).astype(np.float32)
+            ref = build_rnsg(v, a, m=16, ef_spatial=16, ef_attribute=24)
+            for S in (1, 2, 8):
+                g = build_rnsg_sharded(v, a, n_shards=S, m=16,
+                                       ef_spatial=16, ef_attribute=24)
+                for f in ("vecs", "attrs", "nbrs", "order", "centroid",
+                          "dist_c", "rmq"):
+                    assert np.array_equal(getattr(ref, f), getattr(g, f)), \\
+                        (n, S, f)
+                assert g.meta["shards"] == S
+        print("OK")
+    """)
+
+
+def test_sharded_build_restore_query_parity(tmp_path):
+    """Build sharded -> save (sharded dir) -> load -> every strategy
+    returns the same ids/dists as the never-persisted single-host index."""
+    v, a = _corpus(900)
+    ref = RNSGIndex.build(v, a, m=16, ef_spatial=16, ef_attribute=24)
+    idx = RNSGIndex(build_rnsg_sharded(v, a, n_shards=1, m=16,
+                                       ef_spatial=16, ef_attribute=24))
+    idx.save(str(tmp_path / "dir"), shards=4)
+    got = RNSGIndex.load(str(tmp_path / "dir"))
+    _assert_graph_equal(ref.g, got.g)
+
+    rng = np.random.default_rng(5)
+    q = rng.normal(size=(24, v.shape[1])).astype(np.float32)
+    r = np.sort(rng.normal(size=(24, 2)).astype(np.float32), axis=1)
+    for plan in ("graph", "scan", "auto", "beam"):
+        want = ref.search(q, r, k=5, ef=32, plan=plan)
+        have = got.search(q, r, k=5, ef=32, plan=plan)
+        assert np.array_equal(want.ids, have.ids), plan
+        assert np.allclose(want.dists, have.dists, equal_nan=True), plan

@@ -1,0 +1,218 @@
+"""Persistence-path hardening: OOB-KNN regressions, atomic graph save,
+checkpoint fd/KeyError fixes, and the index state/directory round trips
+(``repro.index.io``)."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.core.construction import RNSGGraph, build_rnsg
+from repro.core.rfann import RNSGIndex
+from repro.index import io
+from repro.index.knn import exact_knn
+from repro.streaming.streaming import StreamingRFANN
+
+
+def _corpus(n, d=16, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.normal(size=(n, d)).astype(np.float32),
+            rng.normal(size=n).astype(np.float32))
+
+
+# ------------------------------------------------------- OOB KNN ids
+def test_exact_knn_masks_pad_rows_when_k_exceeds_n():
+    v, _ = _corpus(10)
+    d, i = exact_knn(v, 32)
+    assert i.max() < 10                      # pre-fix: pad-row ids leaked
+    assert ((i == -1) == np.isinf(d)).all()
+    # each row still has its n-1 real neighbors, all distinct
+    for row in i:
+        real = row[row >= 0]
+        assert len(real) == 9 and len(set(real.tolist())) == 9
+
+
+def test_build_rnsg_tiny_corpus_ids_in_bounds():
+    # n < ef_spatial: pre-fix the adjacency contained ids >= n
+    v, a = _corpus(10)
+    g = build_rnsg(v, a, m=8, ef_spatial=32, ef_attribute=16)
+    assert g.nbrs.max() < 10 and g.nbrs.min() >= -1
+    idx = RNSGIndex(g)
+    q, r = v[:4], np.sort(np.random.default_rng(1)
+                          .normal(size=(4, 2)).astype(np.float32), axis=1)
+    for plan in ("graph", "scan"):
+        res = idx.search(q, r, k=3, plan=plan)
+        assert res.ids.shape == (4, 3)
+
+
+@pytest.mark.parametrize("n", [1, 2, 3])
+def test_build_rnsg_degenerate_corpora(n):
+    v, a = _corpus(n)
+    g = build_rnsg(v, a, m=4, ef_spatial=8, ef_attribute=4)
+    assert g.nbrs.shape[0] == n and g.nbrs.max() < n
+
+
+# --------------------------------------------------- atomic graph save
+def test_graph_save_roundtrips_meta_and_is_atomic(tmp_path):
+    v, a = _corpus(64)
+    g = build_rnsg(v, a, m=8, ef_spatial=8, ef_attribute=8)
+    g.meta["note"] = "hello"
+    path = str(tmp_path / "g.npz")
+    g.save(path)
+    # no tmp litter; the target exists
+    assert os.listdir(tmp_path) == ["g.npz"]
+    g2 = RNSGGraph.load(path)
+    assert g2.meta == g.meta                 # pre-fix: meta was dropped
+    assert isinstance(g2.build_seconds, float)   # pre-fix: 0-d ndarray
+    assert g2.build_seconds == pytest.approx(g.build_seconds)
+    for f in ("vecs", "attrs", "nbrs", "order", "centroid", "dist_c", "rmq"):
+        assert np.array_equal(getattr(g, f), getattr(g2, f)), f
+
+
+def test_graph_save_appends_npz_suffix(tmp_path):
+    v, a = _corpus(32)
+    g = build_rnsg(v, a, m=8, ef_spatial=8, ef_attribute=8)
+    g.save(str(tmp_path / "idx"))            # np.savez would add .npz
+    assert (tmp_path / "idx.npz").exists()
+    g2 = RNSGGraph.load(str(tmp_path / "idx"))
+    assert np.array_equal(g.nbrs, g2.nbrs)
+
+
+def test_graph_load_legacy_layout(tmp_path):
+    # files written before the __meta__ sidecar must still load
+    v, a = _corpus(32)
+    g = build_rnsg(v, a, m=8, ef_spatial=8, ef_attribute=8)
+    legacy = tmp_path / "old.npz"
+    np.savez(legacy, vecs=g.vecs, attrs=g.attrs, nbrs=g.nbrs,
+             order=g.order, centroid=g.centroid, dist_c=g.dist_c,
+             rmq=g.rmq, build_seconds=np.float64(1.5))
+    g2 = RNSGGraph.load(str(legacy))
+    assert g2.build_seconds == 1.5 and g2.meta == {}
+    assert np.array_equal(g.nbrs, g2.nbrs)
+
+
+# --------------------------------------------------------- checkpoints
+def test_checkpoint_restore_mismatch_names_path_and_step(tmp_path):
+    cm = CheckpointManager(str(tmp_path))
+    cm.save(7, {"w": np.zeros(3)}, blocking=True)
+    with pytest.raises(KeyError, match=r"step 7 .*no entry for tree path "
+                                       r"'missing'"):
+        cm.restore({"missing": np.zeros(3)}, step=7)
+
+
+def test_checkpoint_restore_does_not_leak_fds(tmp_path):
+    cm = CheckpointManager(str(tmp_path))
+    cm.save(1, {"w": np.arange(8.0)}, blocking=True)
+    fd_dir = "/proc/self/fd"
+    before = len(os.listdir(fd_dir))
+    for _ in range(32):
+        cm.restore({"w": np.zeros(8)})
+        cm.meta()
+        cm.restore_flat()
+    assert len(os.listdir(fd_dir)) <= before + 2    # pre-fix: +1 fd per call
+
+
+def test_checkpoint_index_roundtrip_with_quantized(tmp_path):
+    v, a = _corpus(300)
+    idx = RNSGIndex.build(v, a, m=8, ef_spatial=8, ef_attribute=12)
+    idx.install_quantized("int8")
+    idx.install_quantized("bf16")
+    cm = CheckpointManager(str(tmp_path))
+    cm.save_index(5, idx)
+    got = cm.restore_index()
+    assert isinstance(got, RNSGIndex)
+    assert np.array_equal(got.g.nbrs, idx.g.nbrs)
+    assert got.g.meta == idx.g.meta
+    # quantized corpora restored bit-exactly (bf16 via the f32 upcast)
+    for p in ("int8", "bf16"):
+        want = np.asarray(idx.substrate._quant[p]["data"])
+        have = np.asarray(got.substrate._quant[p]["data"])
+        assert np.array_equal(want.view(np.uint8), have.view(np.uint8)), p
+    s8 = idx.substrate._quant["int8"]["scale"]
+    assert np.array_equal(np.asarray(s8),
+                          np.asarray(got.substrate._quant["int8"]["scale"]))
+
+
+def test_checkpoint_restore_index_requires_index_manifest(tmp_path):
+    cm = CheckpointManager(str(tmp_path))
+    cm.save(1, {"w": np.zeros(2)}, blocking=True)
+    with pytest.raises(KeyError, match="save_index"):
+        cm.restore_index()
+
+
+# ------------------------------------------------------ directory format
+@pytest.mark.parametrize("shards", [1, 4])
+def test_dir_format_roundtrip_and_query_parity(tmp_path, shards):
+    v, a = _corpus(400)
+    idx = RNSGIndex.build(v, a, m=8, ef_spatial=8, ef_attribute=12)
+    idx.install_quantized("int8")
+    p = str(tmp_path / "idx")
+    idx.save(p, shards=shards)
+    man = json.loads((tmp_path / "idx" / "manifest.json").read_text())
+    n_files = {len(am["files"]) for am in man["arrays"].values()}
+    if shards > 1:
+        assert shards in n_files             # row arrays actually sharded
+    got = RNSGIndex.load(p)
+    rng = np.random.default_rng(2)
+    q = rng.normal(size=(12, v.shape[1])).astype(np.float32)
+    r = np.sort(rng.normal(size=(12, 2)).astype(np.float32), axis=1)
+    for plan in ("graph", "scan", "auto"):
+        for prec in ("f32", "int8"):
+            want = idx.search(q, r, k=4, plan=plan, precision=prec)
+            have = got.search(q, r, k=4, plan=plan, precision=prec)
+            assert np.array_equal(want.ids, have.ids), (plan, prec)
+
+
+def test_dir_format_generations_gc(tmp_path):
+    v, a = _corpus(128)
+    idx = RNSGIndex.build(v, a, m=8, ef_spatial=8, ef_attribute=8)
+    p = str(tmp_path / "d")
+    m0 = io.save_index(idx, p, shards=2)
+    m1 = io.save_index(idx, p, shards=3)
+    assert (m0["gen"], m1["gen"]) == (0, 1)
+    files = [f for f in os.listdir(p) if f != "manifest.json"]
+    assert files and all(".g1." in f for f in files)    # gen-0 collected
+    got = io.load_index(p)
+    assert np.array_equal(got.g.nbrs, idx.g.nbrs)
+
+
+def test_streaming_state_roundtrip(tmp_path):
+    v, a = _corpus(256)
+    s = StreamingRFANN(v, a, m=8, ef_spatial=8, ef_attribute=8,
+                       max_delta=10**6)
+    s.install_quantized("int8")
+    rng = np.random.default_rng(3)
+    for _ in range(12):
+        s.insert(rng.normal(size=16).astype(np.float32),
+                 float(rng.normal()))
+    for e in (1, 5, 260):                    # two base rows + one delta row
+        s.delete(e)
+    p = str(tmp_path / "s")
+    io.save_index(s, p, shards=2)
+    s2 = io.load_index(p)
+    assert isinstance(s2, StreamingRFANN)
+    assert s2._next_id == s._next_id
+    assert s2._view.n_tombstones == s._view.n_tombstones == 2
+    assert s2._view.delta.count == s._view.delta.count
+    assert s2._precisions == {"int8"}
+    q = rng.normal(size=(10, 16)).astype(np.float32)
+    r = np.sort(rng.normal(size=(10, 2)).astype(np.float32), axis=1)
+    for prec in ("f32", "int8"):
+        want = s.search(q, r, k=4, plan="auto", precision=prec)
+        have = s2.search(q, r, k=4, plan="auto", precision=prec)
+        assert np.array_equal(want.ids, have.ids), prec
+        assert np.allclose(want.dists, have.dists, equal_nan=True), prec
+    # restored index stays mutable and ids keep advancing from the ckpt
+    nid = s2.insert(np.zeros(16, np.float32), 0.0)
+    assert nid == s._next_id
+    s2.delete(nid)
+
+
+def test_rnsg_load_rejects_streaming_dir(tmp_path):
+    v, a = _corpus(128)
+    s = StreamingRFANN(v, a, m=8, ef_spatial=8, ef_attribute=8)
+    p = str(tmp_path / "s")
+    io.save_index(s, p)
+    with pytest.raises(TypeError, match="StreamingRFANN"):
+        RNSGIndex.load(p)
