@@ -4,8 +4,8 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 .PHONY: test test-fast verify lint docs-check bench-quick bench-planner \
         bench-substrate bench-mesh bench-cache bench-beam bench-beam-smoke \
         bench-quant bench-quant-smoke bench-stream bench-stream-smoke \
-        bench-build bench-build-smoke bench-all bench-full quickstart \
-        obs-smoke profile
+        bench-build bench-build-smoke bench-wal bench-all bench-full \
+        quickstart obs-smoke wal-smoke profile
 
 # tier-1 verify (the command CI runs)
 test:
@@ -88,6 +88,12 @@ bench-build:
 bench-build-smoke:
 	$(PY) -m benchmarks.run --only build --n 1024
 
+# WAL durability cost: insert throughput per sync policy (nowal/none/
+# batch/always) + recovery replay wall (results/bench/wal.csv +
+# BENCH_wal.json)
+bench-wal:
+	$(PY) -m benchmarks.run --only wal
+
 # smoke-sized perf trajectory: writes BENCH_substrate.json, BENCH_beam.json
 # and BENCH_quant.json at the repo root so the numbers are tracked per PR
 bench-all:
@@ -104,6 +110,12 @@ quickstart:
 # carry the core metric families (CI runs this)
 obs-smoke:
 	$(PY) tools/obs_smoke.py
+
+# durability smoke: sampled crash-point sweep, checkpoint barrier + GC,
+# torn-tail truncation and read-only degradation, bit-compared against a
+# never-crashed oracle (CI runs this)
+wal-smoke:
+	$(PY) tools/wal_smoke.py
 
 # jax.profiler device trace around a small beam run -> results/profiles/
 profile:

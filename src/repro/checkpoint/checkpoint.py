@@ -23,6 +23,39 @@ import jax
 import numpy as np
 
 
+def _open_npz(path: Path, step: int):
+    """np.load with truncation/corruption rewritten into a clear error
+    naming the checkpoint file and step (raw zipfile/zlib errors say
+    nothing about *which* checkpoint died)."""
+    import zipfile
+    import zlib as _zlib
+    try:
+        return np.load(path)
+    except FileNotFoundError:
+        raise
+    except (zipfile.BadZipFile, _zlib.error, ValueError, OSError,
+            EOFError) as e:
+        from repro.index.io import IndexCorruptionError
+        raise IndexCorruptionError(
+            f"checkpoint step {step} ({path}) is truncated or corrupt: "
+            f"{e}") from e
+
+
+def _read_member(z, key: str, path: Path, step: int) -> np.ndarray:
+    """Read one npz member; a bad per-member CRC only surfaces at read
+    time, so wrap that too."""
+    import zipfile
+    import zlib as _zlib
+    try:
+        return z[key]
+    except (zipfile.BadZipFile, _zlib.error, ValueError, OSError,
+            EOFError) as e:
+        from repro.index.io import IndexCorruptionError
+        raise IndexCorruptionError(
+            f"checkpoint step {step} ({path}): member {key!r} is "
+            f"truncated or corrupt: {e}") from e
+
+
 def _flatten(tree) -> Dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
@@ -109,7 +142,7 @@ class CheckpointManager:
         arrays = []
         # context-manage the npz: np.load keeps the zip member file open
         # until closed, so a bare handle leaks one fd per restore
-        with np.load(self._path(step)) as z:
+        with _open_npz(self._path(step), step) as z:
             for key, (path, leaf) in zip(flat_keys, leaves_with_path):
                 if key not in z.files:
                     raise KeyError(
@@ -117,7 +150,7 @@ class CheckpointManager:
                         f"entry for tree path {key!r}; the restore template "
                         f"does not match the saved state (saved keys: "
                         f"{sorted(k for k in z.files if k != '__meta__')})")
-                a = z[key]
+                a = _read_member(z, key, self._path(step), step)
                 want = getattr(leaf, "dtype", None)
                 if want is not None and str(a.dtype) != str(want):
                     a = a.astype(want)
@@ -130,21 +163,24 @@ class CheckpointManager:
 
     def meta(self, step: Optional[int] = None) -> Dict:
         step = step if step is not None else self.latest_step()
-        with np.load(self._path(step)) as z:
+        with _open_npz(self._path(step), step) as z:
             if "__meta__" not in z.files:
                 raise KeyError(f"checkpoint step {step} ({self._path(step)}) "
                                f"has no __meta__ entry")
-            return json.loads(bytes(z["__meta__"]).decode())
+            return json.loads(bytes(
+                _read_member(z, "__meta__", self._path(step), step)).decode())
 
     def restore_flat(self, step: Optional[int] = None) -> Dict[str, np.ndarray]:
         """Every saved array keyed by tree path — the template-free restore
         used by :meth:`restore_index` (the saved manifest, not the caller,
-        knows the tree shape)."""
+        knows the tree shape).  A truncated or checksum-mangled member
+        raises ``IndexCorruptionError`` naming the file and step."""
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        with np.load(self._path(step)) as z:
-            return {k: z[k] for k in z.files if k != "__meta__"}
+        with _open_npz(self._path(step), step) as z:
+            return {k: _read_member(z, k, self._path(step), step)
+                    for k in z.files if k != "__meta__"}
 
     # ------------------------------------------------------------------
     # Index checkpointing: RNSGGraph / RNSGIndex (incl. installed quantized

@@ -55,8 +55,12 @@ class RNSGGraph:
         """Atomic single-file save: the npz is written to a sibling temp
         file, fsynced, and renamed over ``path`` — a crash mid-save never
         corrupts the only copy of the index (same idiom as
-        ``QueryPlanner.save_calibration``).  ``meta`` and ``build_seconds``
-        ride along as a JSON sidecar entry so ``load`` round-trips them."""
+        ``QueryPlanner.save_calibration``).  The parent directory is
+        fsynced after the rename (``repro.index.io.fsync_dir``) so the
+        rename itself survives power failure, not just the file bytes.
+        ``meta`` and ``build_seconds`` ride along as a JSON sidecar entry
+        so ``load`` round-trips them."""
+        from repro.index.io import fsync_dir
         if not path.endswith(".npz"):
             path += ".npz"          # match np.savez's implicit suffix
         arrays = {f.name: np.asarray(getattr(self, f.name))
@@ -73,6 +77,7 @@ class RNSGGraph:
                 f.flush()
                 os.fsync(f.fileno())
             os.replace(tmp, path)
+            fsync_dir(os.path.dirname(os.path.abspath(path)))
         finally:
             if os.path.exists(tmp):
                 os.remove(tmp)

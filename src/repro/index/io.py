@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import json
 import os
+import zlib
 from concurrent.futures import ThreadPoolExecutor
 from pathlib import Path
 from typing import Dict, Tuple
@@ -38,6 +39,36 @@ import numpy as np
 
 MANIFEST = "manifest.json"
 SCHEMA = 1
+
+
+class IndexCorruptionError(RuntimeError):
+    """A saved index file failed validation (truncated, checksum-mangled,
+    or shape-mismatched).  Raised with the offending file and the manifest
+    generation named, instead of propagating a raw numpy/mmap error."""
+
+
+def fsync_dir(path) -> None:
+    """fsync a *directory* so a rename/create just committed inside it
+    survives power failure.  ``tmp → fsync(file) → os.replace`` makes the
+    file contents durable, but the new *name* lives in the directory
+    inode — on most filesystems it is only guaranteed on disk after the
+    directory itself is fsynced.  Shared by every atomic-save site
+    (``RNSGGraph.save``, ``QueryPlanner.save_calibration``, the
+    ``save_index`` array/manifest commits, and the WAL's segment
+    create/rotate).  No-op on platforms that refuse O_DIRECTORY opens or
+    directory fsync (e.g. Windows) — there is no portable stronger
+    guarantee there."""
+    flags = os.O_RDONLY | getattr(os, "O_DIRECTORY", 0)
+    try:
+        fd = os.open(os.fspath(path), flags)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
 
 
 # ----------------------------------------------------------------- state
@@ -72,7 +103,12 @@ def index_state(index) -> Tuple[Dict[str, np.ndarray], dict]:
 
     if isinstance(index, StreamingRFANN):
         with index._lock:
+            # view and WAL watermark must come from the same locked
+            # instant: a mutation between the two reads would bump the
+            # watermark past records the snapshot does not contain, and
+            # recovery would then skip them (lost acknowledged writes)
             v = index._view
+            wal_lsn = int(getattr(index, "applied_lsn", 0))
         sub = v.sub
         flat = {"graph/vecs": np.asarray(v.base_vecs, np.float32),
                 "graph/attrs": np.asarray(v.base_attrs, np.float32),
@@ -95,7 +131,10 @@ def index_state(index) -> Tuple[Dict[str, np.ndarray], dict]:
                            n_delta=int(v.delta.count),
                            n_tombstones=int(v.n_tombstones),
                            precisions=sorted(index._precisions),
-                           build_kw=dict(index._build_kw)))
+                           build_kw=dict(index._build_kw),
+                           # WAL replay watermark: every mutation with
+                           # lsn <= wal_lsn is inside this snapshot
+                           wal_lsn=wal_lsn))
         return flat, manifest
 
     if isinstance(index, RNSGIndex):
@@ -158,7 +197,8 @@ def index_from_state(flat: Dict[str, np.ndarray], manifest: dict):
             next_id=s["next_id"], max_delta=s.get("max_delta", 1024),
             compact_every=s.get("compact_every", 0),
             precisions=s.get("precisions", ()),
-            build_kw=s.get("build_kw"))
+            build_kw=s.get("build_kw"),
+            wal_lsn=s.get("wal_lsn", 0))
         _preload_quant(stream._view.sub, flat, manifest)
         return stream
     raise ValueError(f"index_from_state: unknown index kind {kind!r}")
@@ -171,14 +211,37 @@ def _preload_quant(sub, flat, manifest) -> None:
 
 
 # --------------------------------------------------------------- on disk
-def _atomic_write(path: Path, write_fn) -> None:
+class _CrcWriter:
+    """File proxy that CRC32s everything written through it, so the
+    manifest can record a checksum without re-reading the file."""
+
+    def __init__(self, f):
+        self._f = f
+        self.crc = 0
+
+    def write(self, data):
+        self.crc = zlib.crc32(data, self.crc)
+        return self._f.write(data)
+
+    def __getattr__(self, name):
+        return getattr(self._f, name)
+
+
+def _atomic_write(path: Path, write_fn) -> int:
+    """tmp → fsync(file) → rename → fsync(dir); returns the CRC32 of the
+    written bytes.  The directory fsync is what makes the *rename* itself
+    durable — without it a power failure can roll the directory entry
+    back even though the file data reached disk."""
     tmp = path.with_name(f"{path.name}.tmp.{os.getpid()}")
     try:
         with open(tmp, "wb") as f:
-            write_fn(f)
+            w = _CrcWriter(f)
+            write_fn(w)
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, path)
+        fsync_dir(path.parent)
+        return w.crc
     finally:
         if tmp.exists():
             tmp.unlink()
@@ -215,14 +278,14 @@ def save_index(index, path, *, shards: int = 1) -> dict:
         row_sharded = (shards > 1 and a.ndim >= 1
                        and a.shape[0] == n_rows and n_rows >= shards)
         parts = np.array_split(a, shards) if row_sharded else [a]
-        files = []
+        files, crcs = [], []
         for i, part in enumerate(parts):
             fn = f"{base}.g{gen}.{i:02d}.npy"
-            _atomic_write(p / fn,
-                          lambda f, part=part: np.save(f, part))
+            crcs.append(_atomic_write(p / fn,
+                                      lambda f, part=part: np.save(f, part)))
             files.append(fn)
         arrays[key] = dict(files=files, shape=list(a.shape),
-                           dtype=str(a.dtype))
+                           dtype=str(a.dtype), crc32=crcs)
     manifest = dict(schema=SCHEMA, gen=gen, shards=shards,
                     index=man, arrays=arrays)
     blob = json.dumps(manifest, indent=1).encode()
@@ -241,25 +304,72 @@ def _gc_stale(p: Path, manifest: dict) -> None:
             f.unlink(missing_ok=True)
 
 
+def _corrupt(p: Path, fn: str, gen, why) -> IndexCorruptionError:
+    return IndexCorruptionError(
+        f"load_index: array file {fn} in {p} (manifest generation {gen}) "
+        f"is truncated or corrupt: {why}")
+
+
+def _load_checked(p: Path, fn: str, gen, *, mmap_mode=None,
+                  expect_crc=None, verify=False) -> np.ndarray:
+    """np.load with the raw mmap/parse errors rewritten into
+    :class:`IndexCorruptionError` naming the file and generation.  When
+    the manifest carries a CRC32 for the file it is verified on every
+    full read, and on mmap reads too iff ``verify=True`` (a CRC pass
+    forces reading all the bytes, which defeats lazy mmap)."""
+    path = p / fn
+    try:
+        if expect_crc is not None and (verify or mmap_mode is None):
+            crc = 0
+            with open(path, "rb") as f:
+                for chunk in iter(lambda: f.read(1 << 20), b""):
+                    crc = zlib.crc32(chunk, crc)
+            if crc != expect_crc:
+                raise _corrupt(p, fn, gen,
+                               f"CRC32 mismatch (manifest {expect_crc:#010x}"
+                               f", file {crc:#010x})")
+        return np.load(path, mmap_mode=mmap_mode)
+    except IndexCorruptionError:
+        raise
+    except FileNotFoundError as e:
+        raise _corrupt(p, fn, gen, f"missing: {e}") from e
+    except (ValueError, OSError, EOFError) as e:
+        raise _corrupt(p, fn, gen, e) from e
+
+
 def load_index(path, *, mmap: bool = True, parallel: bool = True,
-               workers: int = 8):
+               workers: int = 8, verify: bool = False):
     """Restore from the directory format.  Single-file arrays mmap (zero
     copy until first touch); row-sharded arrays are filled by a thread
     pool reading all slabs concurrently.  Returns whatever
-    :func:`index_from_state` builds for the saved kind."""
+    :func:`index_from_state` builds for the saved kind.
+
+    Robustness: a truncated or checksum-mangled array file raises
+    :class:`IndexCorruptionError` naming the file and the manifest
+    generation.  Sharded slabs (read in full anyway) are always CRC32-
+    verified against the manifest; mmapped single files are shape/parse
+    validated, and ``verify=True`` CRC-checks them too (full read)."""
     p = Path(path)
     manifest = json.loads((p / MANIFEST).read_text())
     if manifest.get("schema", 0) > SCHEMA:
         raise ValueError(f"index at {p} has schema "
                          f"{manifest['schema']} > supported {SCHEMA}")
+    gen = manifest.get("gen", 0)
     arrays = manifest["arrays"]
     flat: Dict[str, np.ndarray] = {}
     jobs = []
     for key, am in arrays.items():
         files = am["files"]
+        crcs = am.get("crc32") or [None] * len(files)
         if len(files) == 1:
-            flat[key] = np.load(p / files[0],
-                                mmap_mode="r" if mmap else None)
+            a = _load_checked(p, files[0], gen,
+                              mmap_mode="r" if mmap else None,
+                              expect_crc=crcs[0], verify=verify)
+            if list(a.shape) != list(am["shape"]):
+                raise _corrupt(p, files[0], gen,
+                               f"shape {list(a.shape)} != manifest "
+                               f"{am['shape']}")
+            flat[key] = a
             continue
         out = np.empty(tuple(am["shape"]), dtype=np.dtype(am["dtype"]))
         flat[key] = out
@@ -268,12 +378,15 @@ def load_index(path, *, mmap: bool = True, parallel: bool = True,
         n, k = am["shape"][0], len(files)
         sizes = [n // k + (1 if i < n % k else 0) for i in range(k)]
         row = 0
-        for fn, sz in zip(files, sizes):
-            jobs.append((out, row, p / fn))
+        for fn, sz, crc in zip(files, sizes, crcs):
+            jobs.append((out, row, sz, fn, crc))
             row += sz
     def fill(job):
-        out, row0, fn = job
-        part = np.load(fn)
+        out, row0, sz, fn, crc = job
+        part = _load_checked(p, fn, gen, expect_crc=crc, verify=verify)
+        if len(part) != sz:
+            raise _corrupt(p, fn, gen,
+                           f"slab has {len(part)} rows, manifest says {sz}")
         out[row0:row0 + len(part)] = part
     if jobs:
         if parallel and len(jobs) > 1:

@@ -18,6 +18,14 @@ and persists it (sharded directory format, ``repro.index.io``) on
 shutdown; later runs restore it in seconds instead of rebuilding.
 ``--build-shards S`` routes a fresh static build through the multi-device
 sharded constructor (bit-identical output).
+
+``--wal-dir DIR`` (streaming mode) adds crash durability on top: every
+mutation is appended to a checksummed write-ahead log before it is
+acknowledged, restart replays the uncompacted tail onto the
+``--index-path`` checkpoint, SIGTERM drains gracefully (seal WAL,
+checkpoint, persist calibration + metrics), and a WAL write failure
+degrades the server to read-only instead of crashing it.  See
+``docs/durability.md``.
 """
 from __future__ import annotations
 
@@ -36,7 +44,9 @@ from repro.data.ann import (ground_truth, make_attrs, make_vectors,
 from repro.launch.specs import concrete_batch
 from repro.models.lm import Model
 from repro.models.params import ShardPlan
+from repro.runtime.fault_tolerance import PreemptionHandler
 from repro.serving.engine import RFANNEngine
+from repro.streaming import ReadOnlyIndexError
 
 
 def _restore_index(args, streaming: bool):
@@ -61,6 +71,13 @@ def _restore_index(args, streaming: bool):
         return None
     print(f"[serve] restored index from {args.index_path} "
           f"in {time.perf_counter() - t0:.2f}s (no rebuild)")
+    if streaming and getattr(args, "wal_dir", ""):
+        # crash-consistent restart: the checkpoint is the floor, the WAL
+        # tail on top of it is every acknowledged mutation the previous
+        # process did not get to fold in (see docs/durability.md)
+        replayed = idx.replay_wal(args.wal_dir)
+        print(f"[serve] replayed {replayed} WAL records from "
+              f"{args.wal_dir} (lsn watermark {idx.applied_lsn})")
     return idx
 
 
@@ -122,26 +139,47 @@ def serve_rfann(args):
                          max_delta=args.max_delta or None,
                          compact_every=args.compact_every or None,
                          index_path=args.index_path or None,
-                         index_save_shards=args.index_shards)
+                         index_save_shards=args.index_shards,
+                         wal_dir=(args.wal_dir or None) if streaming else None,
+                         wal_sync=args.wal_sync)
+    if streaming and args.wal_dir and not args.index_path:
+        print("[serve] note: --wal-dir without --index-path logs mutations "
+              "but leaves no checkpoint to recover onto")
+    # graceful SIGTERM: stop accepting work, drain in-flight futures, then
+    # the normal shutdown path seals the WAL and persists index +
+    # calibration + metrics — zero acknowledged mutations lost
+    preempt = PreemptionHandler().install()
     futs = []
     churn_until = args.requests // 2
+    churn_on = streaming
     t0 = time.perf_counter()
     for i in range(args.requests):
+        if preempt.should_stop():
+            print(f"[serve] SIGTERM: draining after {len(futs)} submitted "
+                  f"requests, then checkpointing")
+            break
         futs.append(engine.submit(qv[i], ranges[i]))
-        if streaming and i < churn_until:
-            if pending_ins:
-                j = pending_ins.pop()
-                engine.insert(vecs[j], float(attrs[j]), ext_id=j)
-            if i % 4 == 3:          # one delete per four churn steps
-                live = list(engine.index._id_loc)
-                engine.delete(int(live[rng.integers(len(live))]))
+        if churn_on and i < churn_until:
+            try:
+                if pending_ins:
+                    j = pending_ins.pop()
+                    engine.insert(vecs[j], float(attrs[j]), ext_id=j)
+                if i % 4 == 3:      # one delete per four churn steps
+                    live = list(engine.index._id_loc)
+                    engine.delete(int(live[rng.integers(len(live))]))
+            except ReadOnlyIndexError as e:
+                # WAL append failed: the index degraded to read-only
+                # (stream_read_only gauge = 1).  Searches keep working —
+                # stop mutating, keep serving.
+                churn_on = False
+                print(f"[serve] churn stopped, serving continues: {e}")
         if args.rate > 0:
             time.sleep(rng.exponential(1.0 / args.rate))
     results = np.stack([f.result().ids for f in futs])      # per-request SearchResult
     dt = time.perf_counter() - t0
     engine.close()
     if streaming:
-        idx.close()                 # drain any in-flight compaction
+        idx.close()     # drain any in-flight compaction, seal the WAL
     if engine.cache is not None:
         print(f"[serve] result cache: {engine.cache.snapshot()}")
     if args.calibration:
@@ -159,23 +197,28 @@ def serve_rfann(args):
                       default=float)
         print(f"[serve] metrics written to {args.metrics_path} (+.json)")
 
-    if streaming:
+    served = len(futs)
+    if streaming and served > churn_until:
         # score only the post-churn half against the final live set (the
         # requests that raced mutations have no single ground truth)
         lv, la, li = idx.live_items()
         order = np.argsort(la, kind="stable")
-        gt_r, _ = ground_truth(lv[order], la[order], qv[churn_until:],
-                               ranges[churn_until:], args.k)
+        gt_r, _ = ground_truth(lv[order], la[order], qv[churn_until:served],
+                               ranges[churn_until:served], args.k)
         gt = np.where(gt_r >= 0, li[order][np.maximum(gt_r, 0)], -1)
         rec = recall_at_k(results[churn_until:], gt)
         print(f"[serve] streaming: {idx.stats()}")
+    elif streaming:
+        rec = float("nan")          # drained before the scored half began
+        print(f"[serve] streaming: {idx.stats()}")
     else:
         order = np.argsort(attrs, kind="stable")
-        gt_r, _ = ground_truth(vecs[order], attrs[order], qv, ranges, args.k)
+        gt_r, _ = ground_truth(vecs[order], attrs[order], qv[:served],
+                               ranges[:served], args.k)
         gt = np.where(gt_r >= 0, order[np.maximum(gt_r, 0)], -1)
         rec = recall_at_k(results, gt)
-    print(f"[serve] served {args.requests} reqs in {dt:.2f}s "
-          f"({args.requests/dt:.0f} QPS) recall@{args.k}={rec:.4f}")
+    print(f"[serve] served {served} reqs in {dt:.2f}s "
+          f"({served/dt:.0f} QPS) recall@{args.k}={rec:.4f}")
     print(f"[serve] {engine.stats.summary()}")
     return rec
 
@@ -256,6 +299,16 @@ def main(argv=None):
     ap.add_argument("--compact-every", type=int, default=0,
                     help="streaming mode: compact every N mutations "
                          "(0 = size-triggered only)")
+    ap.add_argument("--wal-dir", default="",
+                    help="streaming mode: write-ahead-log directory — every "
+                         "mutation is logged (checksummed) before it is "
+                         "applied, and a crashed server replays the tail "
+                         "onto the --index-path checkpoint at restart")
+    ap.add_argument("--wal-sync", choices=["always", "batch", "none"],
+                    default="batch",
+                    help="WAL durability: fsync per record / group commit "
+                         "(every N records or T seconds) / OS page cache "
+                         "only")
     ap.add_argument("--new-tokens", type=int, default=16)
     args = ap.parse_args(argv)
     if args.mode == "rfann":

@@ -180,7 +180,10 @@ class QueryPlanner:
 
         Atomic: the state is written to a sibling temp file, fsynced, and
         renamed over ``path`` — a crash mid-shutdown can never leave a
-        truncated file for the next startup's ``load_calibration``."""
+        truncated file for the next startup's ``load_calibration`` — and
+        the parent directory is fsynced after the rename so the rename
+        itself is durable (``repro.index.io.fsync_dir``)."""
+        from repro.index.io import fsync_dir
         state = dict(version=1, n=self.n, cost=self.cost.state_dict())
         tmp = f"{path}.tmp.{os.getpid()}"
         try:
@@ -189,6 +192,7 @@ class QueryPlanner:
                 f.flush()
                 os.fsync(f.fileno())
             os.replace(tmp, path)
+            fsync_dir(os.path.dirname(os.path.abspath(path)) or ".")
             # persisted calibration is the fence auto-routed cache rows were
             # stored under; bump so stale routing decisions expire on lookup
             self.calibration_epoch += 1

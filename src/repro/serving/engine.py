@@ -116,7 +116,9 @@ class RFANNEngine:
                  max_delta: Optional[int] = None,
                  compact_every: Optional[int] = None,
                  index_path: Optional[str] = None,
-                 index_save_shards: int = 1):
+                 index_save_shards: int = 1,
+                 wal_dir: Optional[str] = None,
+                 wal_sync: str = "batch"):
         self.index = index
         self.k, self.ef = k, ef
         self.plan = plan
@@ -130,6 +132,16 @@ class RFANNEngine:
                 and hasattr(index, "set_compaction_policy")):
             index.set_compaction_policy(max_delta=max_delta,
                                         compact_every=compact_every)
+        if wal_dir and hasattr(index, "attach_wal"):
+            # append-before-apply durability for every mutation delegated
+            # through insert()/delete(); a no-op when the caller already
+            # attached (e.g. StreamingRFANN.recover on the same directory)
+            index.attach_wal(wal_dir, sync=wal_sync)
+            if index_path and hasattr(index, "set_checkpoint_path"):
+                # register (and ensure) the checkpoint the WAL replays onto
+                # — compactions auto-checkpoint + GC the log behind it
+                index.set_checkpoint_path(index_path,
+                                          shards=self.index_save_shards)
         self.max_batch = max_batch
         self.max_wait = max_wait_ms / 1000.0
         self.calibration_path = calibration_path
@@ -404,7 +416,14 @@ class RFANNEngine:
             # persist the served index (sharded directory format) so the
             # next startup restores in seconds instead of rebuilding —
             # save_index snapshots under the index lock, so a streaming
-            # index racing mutations/compaction saves a consistent view
-            from repro.index import io
-            io.save_index(self.index, self.index_path,
-                          shards=self.index_save_shards)
+            # index racing mutations/compaction saves a consistent view.
+            # A WAL-attached streaming index goes through checkpoint()
+            # instead, which also writes the barrier record and GCs log
+            # segments the snapshot covers.
+            if hasattr(self.index, "checkpoint"):
+                self.index.checkpoint(self.index_path,
+                                      shards=self.index_save_shards)
+            else:
+                from repro.index import io
+                io.save_index(self.index, self.index_path,
+                              shards=self.index_save_shards)

@@ -1,6 +1,12 @@
 """Streaming ingest over the RNSG index: delta segment + tombstones +
-background compaction.  See docs/streaming.md."""
+background compaction, made durable by a checksummed write-ahead log.
+See docs/streaming.md and docs/durability.md."""
 from repro.streaming.delta import DeltaView
-from repro.streaming.streaming import BASE_NS, SegmentView, StreamingRFANN
+from repro.streaming.streaming import (BASE_NS, ReadOnlyIndexError,
+                                       SegmentView, StreamingRFANN)
+from repro.streaming.wal import (CrashOps, FileOps, InjectedCrash, WALError,
+                                 WalRecord, WriteAheadLog)
 
-__all__ = ["BASE_NS", "DeltaView", "SegmentView", "StreamingRFANN"]
+__all__ = ["BASE_NS", "CrashOps", "DeltaView", "FileOps", "InjectedCrash",
+           "ReadOnlyIndexError", "SegmentView", "StreamingRFANN",
+           "WALError", "WalRecord", "WriteAheadLog"]

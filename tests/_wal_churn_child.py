@@ -1,0 +1,82 @@
+"""Subprocess child for the WAL kill-durability tests.
+
+Runs a deterministic insert/delete churn through ``RFANNEngine`` with a
+WAL attached, appending one line to an ack file after each mutation
+returns (i.e. after the WAL acknowledged it).  The parent test SIGKILLs
+this process mid-churn, recovers from the checkpoint + WAL tail, and
+asserts the recovered live set equals ``live_after(m)`` for some prefix
+``m >= acked`` — every acknowledged mutation survived a hard process
+death.
+
+The script generator lives here (not in the test) so parent and child
+share one definition of the op sequence.
+"""
+import os
+import sys
+
+import numpy as np
+
+N0, D = 48, 8
+N_OPS = 600
+BUILD = dict(m=8, ef_spatial=8, ef_attribute=8)
+
+
+def corpus():
+    rng = np.random.default_rng(7)
+    return (rng.standard_normal((N0, D)).astype(np.float32),
+            rng.standard_normal(N0).astype(np.float32))
+
+
+def script():
+    """Deterministic mutation sequence; deletes always target a live id."""
+    rng = np.random.default_rng(11)
+    live = list(range(N0))
+    nxt = 1000
+    ops = []
+    for _ in range(N_OPS):
+        if rng.random() < 0.25 and len(live) > 16:
+            ops.append(("D", live.pop(int(rng.integers(len(live))))))
+        else:
+            ops.append(("I", nxt,
+                        rng.standard_normal(D).astype(np.float32),
+                        float(rng.standard_normal())))
+            live.append(nxt)
+            nxt += 1
+    return ops
+
+
+def live_after(m):
+    """External-id live set after the first ``m`` script ops."""
+    live = set(range(N0))
+    for op in script()[:m]:
+        if op[0] == "I":
+            live.add(op[1])
+        else:
+            live.discard(op[1])
+    return live
+
+
+def main(wal_dir: str, ckpt_dir: str, ack_path: str) -> None:
+    from repro.serving.engine import RFANNEngine
+    from repro.streaming import StreamingRFANN
+
+    vecs, attrs = corpus()
+    idx = StreamingRFANN(vecs, attrs, max_delta=64, **BUILD)
+    eng = RFANNEngine(idx, k=4, ef=16, wal_dir=wal_dir, index_path=ckpt_dir)
+    # O_APPEND + one write per line: each ack hits the file before the
+    # next mutation starts, so the parent's read is a true prefix count
+    fd = os.open(ack_path, os.O_CREAT | os.O_WRONLY | os.O_APPEND, 0o644)
+    os.write(fd, b"READY\n")
+    for i, op in enumerate(script()):
+        if op[0] == "I":
+            eng.insert(op[2], op[3], ext_id=op[1])
+        else:
+            eng.delete(op[1])
+        os.write(fd, f"{i + 1}\n".encode())
+    os.write(fd, b"DONE\n")
+    eng.close()
+    idx.close()
+
+
+if __name__ == "__main__":
+    main(sys.argv[1], sys.argv[2], sys.argv[3])

@@ -216,3 +216,76 @@ def test_rnsg_load_rejects_streaming_dir(tmp_path):
     io.save_index(s, p)
     with pytest.raises(TypeError, match="StreamingRFANN"):
         RNSGIndex.load(p)
+
+
+# ----------------------------------------------------- corruption errors
+def _saved_dir(tmp_path, shards=1):
+    v, a = _corpus(128)
+    idx = RNSGIndex.build(v, a, m=8, ef_spatial=8, ef_attribute=8)
+    p = tmp_path / "d"
+    io.save_index(idx, str(p), shards=shards)
+    return p
+
+
+def test_load_index_truncated_file_names_file_and_generation(tmp_path):
+    p = _saved_dir(tmp_path)
+    man = json.loads((p / "manifest.json").read_text())
+    fn = man["arrays"]["graph/nbrs"]["files"][0]
+    (p / fn).write_bytes((p / fn).read_bytes()[:16])    # truncate
+    with pytest.raises(io.IndexCorruptionError) as e:
+        io.load_index(str(p))
+    msg = str(e.value)
+    assert fn in msg and "manifest generation 0" in msg
+
+
+def test_load_index_missing_file_names_file(tmp_path):
+    p = _saved_dir(tmp_path)
+    man = json.loads((p / "manifest.json").read_text())
+    fn = man["arrays"]["graph/rmq"]["files"][0]
+    (p / fn).unlink()
+    with pytest.raises(io.IndexCorruptionError, match="missing"):
+        io.load_index(str(p))
+
+
+def test_load_index_sharded_crc_mismatch(tmp_path):
+    # sharded slabs are read in full, so their CRCs are always verified
+    p = _saved_dir(tmp_path, shards=2)
+    man = json.loads((p / "manifest.json").read_text())
+    fn = man["arrays"]["graph/vecs"]["files"][1]
+    blob = bytearray((p / fn).read_bytes())
+    blob[-1] ^= 0xFF                        # flip a data byte, length intact
+    (p / fn).write_bytes(bytes(blob))
+    with pytest.raises(io.IndexCorruptionError, match="CRC32 mismatch"):
+        io.load_index(str(p))
+
+
+def test_load_index_verify_checks_mmapped_files(tmp_path):
+    p = _saved_dir(tmp_path, shards=1)
+    man = json.loads((p / "manifest.json").read_text())
+    fn = man["arrays"]["graph/vecs"]["files"][0]
+    blob = bytearray((p / fn).read_bytes())
+    blob[-1] ^= 0xFF
+    (p / fn).write_bytes(bytes(blob))
+    io.load_index(str(p))                   # lazy mmap: not detected ...
+    with pytest.raises(io.IndexCorruptionError, match="CRC32 mismatch"):
+        io.load_index(str(p), verify=True)  # ... full verify: detected
+
+
+def test_checkpoint_manager_corrupt_npz_names_step(tmp_path):
+    v, a = _corpus(96)
+    idx = RNSGIndex.build(v, a, m=8, ef_spatial=8, ef_attribute=8)
+    cm = CheckpointManager(str(tmp_path), keep=2)
+    cm.save_index(7, idx, blocking=True)
+    path = tmp_path / "step_0000000007.npz"
+    path.write_bytes(path.read_bytes()[:100])           # truncate the zip
+    with pytest.raises(io.IndexCorruptionError) as e:
+        cm.restore_index(7)
+    assert "step 7" in str(e.value) and path.name in str(e.value)
+
+
+def test_fsync_dir_tolerates_missing_and_plain_paths(tmp_path):
+    io.fsync_dir(tmp_path)                  # a real directory: fsynced
+    io.fsync_dir(tmp_path / "nope")         # missing: silent no-op
+    f = tmp_path / "f.txt"
+    f.write_text("x")
+    io.fsync_dir(f)                         # not a dir: silent no-op

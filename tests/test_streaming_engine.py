@@ -1,5 +1,7 @@
 """Streaming index under the serving engine: per-segment cache epochs,
-queries racing compaction, and the install_quantized cache-epoch fix."""
+queries racing compaction, the install_quantized cache-epoch fix, and
+the WAL durability harness (SIGKILL mid-churn, SIGTERM graceful drain)."""
+import os
 import threading
 
 import numpy as np
@@ -217,6 +219,18 @@ def test_repeat_query_sees_delete_immediately():
         s.close()
 
 
+def test_engine_rejects_invalid_compaction_policy():
+    """Regression: a zero/negative policy used to be accepted silently and
+    wedge ``_maybe_compact`` into a compact-per-op loop."""
+    rng = np.random.default_rng(6)
+    s = StreamingRFANN(rng.standard_normal((32, 8)).astype(np.float32),
+                       rng.random(32).astype(np.float32), m=8)
+    with pytest.raises(ValueError, match=r"max_delta=0"):
+        RFANNEngine(s, max_delta=0)
+    with pytest.raises(ValueError, match=r"compact_every=-2"):
+        s.set_compaction_policy(compact_every=-2)
+
+
 def test_engine_forwards_compaction_policy():
     rng = np.random.default_rng(6)
     s = StreamingRFANN(rng.standard_normal((96, 8)).astype(np.float32),
@@ -234,3 +248,118 @@ def test_engine_forwards_compaction_policy():
     finally:
         eng.close()
         s.close()
+
+
+# ------------------------------------------------------------ durability
+def _child_env():
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+def test_engine_wal_churn_survives_sigkill(tmp_path):
+    """Hard process death mid-churn (SIGKILL — no atexit, no flush): the
+    restarted index must serve exactly the acknowledged live set.  The
+    child acks each mutation to a side file only *after* the engine call
+    returned, so every acked op was WAL-logged first; recovery must
+    reproduce ``live_after(m)`` for some prefix ``m >= acked``."""
+    import importlib.util
+    import subprocess
+    import sys
+    import time
+
+    child_py = os.path.join(os.path.dirname(__file__),
+                            "_wal_churn_child.py")
+    spec = importlib.util.spec_from_file_location("_wal_churn_child",
+                                                  child_py)
+    child = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(child)
+
+    wal, ckpt, ack = tmp_path / "wal", tmp_path / "ckpt", tmp_path / "ack"
+    proc = subprocess.Popen(
+        [sys.executable, child_py, str(wal), str(ckpt), str(ack)],
+        env=_child_env(), stdout=subprocess.PIPE, stderr=subprocess.STDOUT)
+    target, acked = 120, 0
+    deadline = time.time() + 240
+    try:
+        while time.time() < deadline:
+            if ack.exists():
+                ints = [int(x) for x in ack.read_text().split()
+                        if x.isdigit()]
+                acked = ints[-1] if ints else 0
+                if acked >= target:
+                    break
+            if proc.poll() is not None:
+                break
+            time.sleep(0.05)
+    finally:
+        proc.kill()                             # SIGKILL mid-churn
+        out = proc.communicate(timeout=60)[0]
+    assert acked >= target, (
+        f"child only acked {acked} ops before timeout/exit; output:\n"
+        f"{out.decode(errors='replace')[-2000:]}")
+
+    from repro.streaming import StreamingRFANN
+    rec = StreamingRFANN.recover(ckpt, wal, attach=False)
+    got = set(rec._id_loc)
+    n = len(child.script())
+    match = next((m for m in range(acked, n + 1)
+                  if got == child.live_after(m)), None)
+    assert match is not None, (
+        f"recovered live set ({len(got)} ids) matches no prefix >= "
+        f"acked={acked} — acknowledged mutations were lost")
+    # recovered index serves: search over the full attr range returns
+    # only live external ids
+    q = np.zeros((1, 8), np.float32)
+    res = rec.search(q, np.array([[-10.0, 10.0]], np.float32), k=5)
+    assert all(int(i) in got for i in res.ids[0] if i >= 0)
+
+
+def test_serve_sigterm_drains_and_restarts(tmp_path):
+    """SIGTERM on the serve launcher: graceful drain (PreemptionHandler),
+    WAL sealed, index + calibration checkpointed, exit 0 — then a restart
+    restores from the checkpoint and replays the WAL with zero
+    acknowledged mutations lost."""
+    import subprocess
+    import sys
+    import time
+
+    wal, ckpt = tmp_path / "wal", tmp_path / "ckpt"
+    argv = [sys.executable, "-m", "repro.launch.serve", "--mode", "rfann",
+            "--n", "400", "--dim", "8", "--m", "8", "--max-delta", "64",
+            "--requests", "100000", "--rate", "40",
+            "--wal-dir", str(wal), "--index-path", str(ckpt)]
+    proc = subprocess.Popen(argv, env=_child_env(), stdout=subprocess.PIPE,
+                            stderr=subprocess.STDOUT)
+    deadline = time.time() + 240
+    try:
+        # wait until the engine is up (baseline checkpoint committed and
+        # the WAL has started taking appends), then preempt it
+        while time.time() < deadline:
+            if (ckpt / "manifest.json").exists() and wal.is_dir() \
+                    and any(wal.iterdir()):
+                break
+            assert proc.poll() is None, "serve exited before starting"
+            time.sleep(0.2)
+        time.sleep(3.0)                         # let churn land in the WAL
+        proc.terminate()                        # SIGTERM
+        out = proc.communicate(timeout=180)[0].decode(errors="replace")
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.communicate()
+    assert proc.returncode == 0, f"serve did not exit cleanly:\n{out[-2000:]}"
+    assert "SIGTERM: draining" in out
+    assert "index persisted" in out
+
+    # restart: restores + replays, serves a short run to completion
+    argv2 = argv[:argv.index("--requests")] + [
+        "--requests", "16", "--wal-dir", str(wal),
+        "--index-path", str(ckpt)]
+    out2 = subprocess.run(argv2, env=_child_env(), stdout=subprocess.PIPE,
+                          stderr=subprocess.STDOUT, timeout=240,
+                          check=True).stdout.decode(errors="replace")
+    assert "restored index" in out2
+    assert "replayed" in out2

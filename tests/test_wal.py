@@ -1,0 +1,349 @@
+"""WAL durability: record format, torn tails, crash-point sweeps.
+
+The crash harness swaps the WAL's syscall layer for ``CrashOps`` (dies at
+the N-th durability-relevant operation) and sweeps N across the whole
+insert / delete / checkpoint / compaction lifecycle, asserting after each
+simulated crash that ``StreamingRFANN.recover`` reproduces a state
+bit-identical to a never-crashed oracle that applied some acknowledged
+prefix of the same mutation script.
+"""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.index import io
+from repro.streaming import (CrashOps, InjectedCrash, ReadOnlyIndexError,
+                             StreamingRFANN, WALError, WriteAheadLog)
+from repro.streaming import wal as walmod
+
+_BUILD = dict(m=8, ef_spatial=8, ef_attribute=8)
+_D = 4
+
+
+def _corpus(n=32, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal((n, _D)).astype(np.float32),
+            rng.standard_normal(n).astype(np.float32))
+
+
+@pytest.fixture(scope="module")
+def base_ckpt(tmp_path_factory):
+    """One pristine streaming index, checkpointed once; every crash run
+    and every oracle restores from here (no rebuild per crash point)."""
+    p = tmp_path_factory.mktemp("walbase") / "base"
+    vecs, attrs = _corpus()
+    idx = StreamingRFANN(vecs, attrs, max_delta=10_000, **_BUILD)
+    io.save_index(idx, p)
+    return p
+
+
+# ---------------------------------------------------------------- records
+def test_record_roundtrip_all_ops(tmp_path):
+    w = WriteAheadLog(tmp_path / "w", sync="always")
+    vec = np.arange(_D, dtype=np.float32)
+    w.append_insert(7, 0.5, vec)
+    w.append_delete(7)
+    w.append_barrier(3, 2)
+    w.seal()
+    w.close()
+    recs = list(walmod.replay(tmp_path / "w"))
+    assert [r.lsn for r in recs] == [1, 2, 3, 4]
+    assert [r.op_name for r in recs] == ["insert", "delete", "barrier",
+                                         "seal"]
+    assert recs[0].ext_id == 7 and recs[0].attr == pytest.approx(0.5)
+    np.testing.assert_array_equal(recs[0].vector, vec)
+    assert recs[2].generation == 3 and recs[2].watermark == 2
+
+
+def test_lsn_resumes_across_reopen(tmp_path):
+    w = WriteAheadLog(tmp_path / "w", sync="always")
+    w.append_insert(1, 0.0, np.zeros(_D, np.float32))
+    w.close()
+    w2 = WriteAheadLog(tmp_path / "w", sync="always")
+    assert w2.next_lsn == 2
+    assert w2.append_delete(1) == 2
+    w2.close()
+    assert walmod.last_lsn(tmp_path / "w") == 2
+
+
+def test_segment_rotation_and_gc(tmp_path):
+    w = WriteAheadLog(tmp_path / "w", sync="always", segment_bytes=64)
+    for i in range(12):
+        w.append_insert(i, 0.0, np.zeros(_D, np.float32))
+    assert w.segment_count > 1
+    # nothing covered: gc removes nothing
+    assert w.gc(0) == 0
+    # everything covered: every segment but the live tail goes
+    removed = w.gc(12)
+    assert removed == w._seq  # segments 0..seq-1
+    assert w.segment_count == 1
+    # the surviving tail still replays in order
+    w.append_delete(3)
+    w.close()
+    lsns = [r.lsn for r in walmod.replay(tmp_path / "w")]
+    assert lsns == sorted(lsns) and lsns[-1] == 13
+
+
+def test_invalid_sync_policy_rejected(tmp_path):
+    with pytest.raises(ValueError, match="sync="):
+        WriteAheadLog(tmp_path / "w", sync="sometimes")
+    with pytest.raises(ValueError, match="fsync_every_n"):
+        WriteAheadLog(tmp_path / "w", fsync_every_n=0)
+
+
+# ------------------------------------------------------------- torn tails
+def test_torn_tail_truncates_and_reopens(tmp_path):
+    w = WriteAheadLog(tmp_path / "w", sync="always")
+    for i in range(4):
+        w.append_insert(i, 0.0, np.zeros(_D, np.float32))
+    w.close()
+    seg = walmod.list_segments(tmp_path / "w")[-1]
+    good = seg.stat().st_size
+    with open(seg, "ab") as f:
+        f.write(b"\x40\x00\x00\x00\xde\xad")       # half a record
+    recs = list(walmod.replay(tmp_path / "w", truncate=True))
+    assert [r.lsn for r in recs] == [1, 2, 3, 4]
+    assert seg.stat().st_size == good              # physically truncated
+    # a reopened log appends cleanly after the torn point
+    w2 = WriteAheadLog(tmp_path / "w", sync="always")
+    assert w2.append_delete(0) == 5
+    w2.close()
+
+
+def test_corruption_mid_log_discards_later_segments(tmp_path):
+    w = WriteAheadLog(tmp_path / "w", sync="always", segment_bytes=64)
+    for i in range(10):
+        w.append_insert(i, 0.0, np.zeros(_D, np.float32))
+    w.close()
+    segs = walmod.list_segments(tmp_path / "w")
+    assert len(segs) >= 3
+    # flip one payload byte in the middle segment: records after the tear
+    # (including whole later segments) must not replay — LSN order only
+    blob = bytearray(segs[1].read_bytes())
+    blob[12] ^= 0xFF
+    segs[1].write_bytes(bytes(blob))
+    recs = list(walmod.replay(tmp_path / "w", truncate=True))
+    first_seg_recs, _, _ = walmod._scan_segment(segs[0])
+    assert [r.lsn for r in recs] == [r.lsn for r in first_seg_recs]
+    assert not segs[2].exists()                     # later segment removed
+
+
+# -------------------------------------------------- streaming integration
+def test_recover_replays_tail_idempotently(base_ckpt, tmp_path):
+    idx = io.load_index(base_ckpt)
+    idx.attach_wal(tmp_path / "wal", sync="always")
+    idx.set_checkpoint_path(str(tmp_path / "ckpt"))
+    added = [idx.insert(np.full(_D, i, np.float32), float(i))
+             for i in range(6)]
+    idx.delete(added[0])
+    idx.delete(3)                                   # base tombstone
+    want = dict(idx._id_loc)
+
+    rec = StreamingRFANN.recover(tmp_path / "ckpt", tmp_path / "wal",
+                                 attach=False)
+    assert sorted(rec._id_loc) == sorted(want)
+    assert rec._next_id == idx._next_id
+    # replaying again is a no-op (watermark + liveness idempotence)
+    assert rec.replay_wal(tmp_path / "wal") == 0
+    # recover twice -> bit-identical state
+    rec2 = StreamingRFANN.recover(tmp_path / "ckpt", tmp_path / "wal",
+                                  attach=False)
+    fa, ma = io.index_state(rec)
+    fb, mb = io.index_state(rec2)
+    assert _state_equal(fa, ma, fb, mb)
+
+
+def test_checkpoint_writes_barrier_and_gcs(base_ckpt, tmp_path):
+    idx = io.load_index(base_ckpt)
+    idx.attach_wal(tmp_path / "wal", sync="always", segment_bytes=128)
+    idx.set_checkpoint_path(str(tmp_path / "ckpt"))
+    for i in range(10):
+        idx.insert(np.full(_D, i, np.float32), float(i))
+    assert idx._wal.segment_count > 1
+    idx.checkpoint()
+    d = walmod.describe(tmp_path / "wal")
+    assert d["barrier_watermark"] == idx.applied_lsn
+    assert d["segments"] == 1                       # history GC'd
+    # the post-checkpoint log still recovers the full state
+    rec = StreamingRFANN.recover(tmp_path / "ckpt", tmp_path / "wal",
+                                 attach=False)
+    assert sorted(rec._id_loc) == sorted(idx._id_loc)
+
+
+def test_wal_failure_degrades_to_read_only(base_ckpt, tmp_path):
+    class _DeadDisk(walmod.FileOps):
+        def write(self, fd, data):
+            raise OSError(28, "No space left on device")
+
+    idx = io.load_index(base_ckpt)
+    idx.attach_wal(tmp_path / "wal", sync="always")
+    idx.insert(np.zeros(_D, np.float32), 0.0)
+    idx._wal.ops = _DeadDisk()
+    with pytest.warns(UserWarning, match="read-only"), \
+            pytest.raises(ReadOnlyIndexError):
+        idx.insert(np.ones(_D, np.float32), 1.0)
+    assert idx.read_only and idx.stats()["read_only"] == 1
+    with pytest.raises(ReadOnlyIndexError):        # stays rejected
+        idx.delete(0)
+    # searches keep serving on the degraded index
+    res = idx.search(np.zeros((1, _D), np.float32),
+                     np.array([[-10.0, 10.0]], np.float32), k=3)
+    assert res.ids.shape == (1, 3)
+
+
+def test_set_compaction_policy_validation(base_ckpt):
+    idx = io.load_index(base_ckpt)
+    with pytest.raises(ValueError, match=r"max_delta=0"):
+        idx.set_compaction_policy(max_delta=0)
+    with pytest.raises(ValueError, match=r"max_delta=-3"):
+        idx.set_compaction_policy(max_delta=-3)
+    with pytest.raises(ValueError, match=r"compact_every=-1"):
+        idx.set_compaction_policy(compact_every=-1)
+    before = (idx.max_delta, idx.compact_every)
+    with pytest.raises(ValueError):
+        idx.set_compaction_policy(max_delta=-1, compact_every=5)
+    assert (idx.max_delta, idx.compact_every) == before   # no partial apply
+    idx.set_compaction_policy(max_delta=7, compact_every=0)
+    assert (idx.max_delta, idx.compact_every) == (7, 0)
+
+
+# ---------------------------------------------------------- crash sweeps
+def _script():
+    """Deterministic mutation script: inserts, deletes of both delta and
+    base rows, and a mid-script checkpoint ("C" — not a mutation)."""
+    rng = np.random.default_rng(42)
+    ops = []
+    for i in range(8):
+        ops.append(("I", 1000 + i,
+                    rng.standard_normal(_D).astype(np.float32),
+                    float(rng.standard_normal())))
+    ops += [("D", 3), ("D", 1002), ("C",)]
+    for i in range(8, 12):
+        ops.append(("I", 1000 + i,
+                    rng.standard_normal(_D).astype(np.float32),
+                    float(rng.standard_normal())))
+    ops += [("D", 7), ("D", 1005)]
+    return ops
+
+
+_MUTS = [op for op in _script() if op[0] != "C"]
+
+
+def _apply(idx, op):
+    if op[0] == "I":
+        idx.insert(op[2], op[3], ext_id=op[1])
+    elif op[0] == "D":
+        idx.delete(op[1])
+
+
+def _state_equal(fa, ma, fb, mb) -> bool:
+    sa, sb = ma["streaming"], mb["streaming"]
+    if sa["next_id"] != sb["next_id"]:
+        return False
+    if set(fa) != set(fb):
+        return False
+    return all(np.array_equal(np.asarray(fa[k]), np.asarray(fb[k]))
+               for k in fa)
+
+
+def _oracle_state(base_ckpt, m, _cache={}):
+    """flat/manifest of a never-crashed index that applied _MUTS[:m]."""
+    key = (str(base_ckpt), m)
+    if key not in _cache:
+        ora = io.load_index(base_ckpt)
+        for op in _MUTS[:m]:
+            _apply(ora, op)
+        _cache[key] = io.index_state(ora)
+    return _cache[key]
+
+
+def _run_to_crash(base_ckpt, rundir, crash_at):
+    """One simulated process: restore base, attach a crashy WAL, run the
+    script.  Returns (acked mutation count, crashed?, total ops)."""
+    idx = io.load_index(base_ckpt)
+    co = CrashOps(crash_at)
+    acked = 0
+    crashed = False
+    try:
+        idx.attach_wal(rundir / "wal", sync="always", ops=co)
+        idx.set_checkpoint_path(str(rundir / "ckpt"))
+        for op in _script():
+            if op[0] == "C":
+                idx.checkpoint()
+            else:
+                _apply(idx, op)
+                acked += 1
+    except InjectedCrash:
+        crashed = True
+    return acked, crashed, co.ops
+
+
+def test_crash_sweep_mutations_and_checkpoint(base_ckpt, tmp_path):
+    """Kill the WAL at EVERY durability-relevant syscall across the whole
+    script; recovery must always equal the oracle at the acknowledged
+    prefix (or prefix+1: the in-flight record may have reached the disk
+    before the crash point)."""
+    acked, crashed, total = _run_to_crash(base_ckpt, tmp_path / "probe", -1)
+    assert not crashed and acked == len(_MUTS)
+    assert total > 0
+    for cat in range(total):
+        rundir = tmp_path / f"r{cat}"
+        acked, crashed, _ = _run_to_crash(base_ckpt, rundir, cat)
+        assert crashed, f"crash_at={cat} never fired"
+        if not io.is_index_dir(rundir / "ckpt"):
+            # died before the baseline checkpoint committed: nothing was
+            # acknowledged yet, so there is nothing to recover
+            assert acked == 0
+            continue
+        rec = StreamingRFANN.recover(rundir / "ckpt", rundir / "wal",
+                                     attach=False)
+        fr, mr = io.index_state(rec)
+        candidates = {acked, min(acked + 1, len(_MUTS))}
+        assert any(_state_equal(fr, mr, *_oracle_state(base_ckpt, m))
+                   for m in candidates), (
+            f"crash_at={cat}: recovered state (lsn={rec.applied_lsn}) "
+            f"matches no acknowledged prefix in {sorted(candidates)}")
+
+
+def test_crash_sweep_compaction_checkpoint(base_ckpt, tmp_path,
+                                           monkeypatch):
+    """Crash at every WAL syscall of the checkpoint that follows a
+    compaction (rotate / barrier / gc).  The compacted, fully-mutated
+    state must recover bit-identically — the manifest-last commit makes
+    the checkpoint atomic, and the WAL tail covers anything after it."""
+    monkeypatch.setattr(threading, "excepthook", lambda args: None)
+
+    def run(rundir, crash_at, do_compact):
+        idx = io.load_index(base_ckpt)
+        co = CrashOps(crash_at)
+        idx.attach_wal(rundir / "wal", sync="always", ops=co)
+        idx.set_checkpoint_path(str(rundir / "ckpt"))
+        for op in _MUTS:
+            _apply(idx, op)
+        if do_compact:
+            idx.compact(wait=True)  # InjectedCrash lands in the worker
+        return co
+
+    t0 = run(tmp_path / "p0", -1, False).ops     # ops before compaction
+    t1 = run(tmp_path / "p1", -1, True).ops      # ops incl. its checkpoint
+    assert t1 > t0
+
+    # oracle: same mutations + a clean compaction, never crashed
+    ora = io.load_index(base_ckpt)
+    for op in _MUTS:
+        _apply(ora, op)
+    ora.compact(wait=True)
+    fo, mo = io.index_state(ora)
+
+    for cat in range(t0, t1):
+        rundir = tmp_path / f"c{cat}"
+        run(rundir, cat, True)
+        rec = StreamingRFANN.recover(rundir / "ckpt", rundir / "wal",
+                                     attach=False)
+        fr, mr = io.index_state(rec)
+        assert _state_equal(fr, mr, fo, mo), (
+            f"crash_at={cat}: post-compaction recovery diverged")
+        # the full live set survived regardless of where the crash landed
+        assert sorted(rec._id_loc) == sorted(ora._id_loc)

@@ -1,0 +1,201 @@
+#!/usr/bin/env python
+"""CI smoke for the durability stack: WAL append/replay, the checkpoint
+barrier + segment GC lifecycle, a sampled crash-point sweep, torn-tail
+truncation, and read-only degradation on append failure.
+
+    PYTHONPATH=src python tools/wal_smoke.py
+
+Exit code 0 = every assertion held.  This drives the real streaming
+index + WAL (``repro.streaming``) end to end — mutate, crash, recover,
+compare bit-for-bit against a never-crashed oracle — so it catches
+wiring regressions anywhere on the append -> checkpoint -> replay path.
+The exhaustive every-op sweep lives in tests/test_wal.py; this smoke
+samples crash points to stay fast enough for CI.
+"""
+import os
+import sys
+import tempfile
+import warnings
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.index import io as iio                           # noqa: E402
+from repro.streaming import (CrashOps, InjectedCrash,       # noqa: E402
+                             ReadOnlyIndexError, StreamingRFANN, WALError)
+from repro.streaming import wal as walmod                   # noqa: E402
+
+BUILD = dict(m=8, ef_spatial=8, ef_attribute=8)
+N0, D = 32, 8
+
+
+def check(cond, msg):
+    if not cond:
+        print(f"[wal-smoke] FAIL: {msg}")
+        sys.exit(1)
+    print(f"[wal-smoke] ok: {msg}")
+
+
+def corpus():
+    rng = np.random.default_rng(3)
+    return (rng.standard_normal((N0, D)).astype(np.float32),
+            rng.standard_normal(N0).astype(np.float32))
+
+
+def muts():
+    """Deterministic mutation script: inserts from ext_id 1000, a couple
+    of deletes, and one explicit checkpoint ("C")."""
+    rng = np.random.default_rng(9)
+    ops = []
+    for i in range(6):
+        ops.append(("I", 1000 + i,
+                    rng.standard_normal(D).astype(np.float32),
+                    float(rng.standard_normal())))
+    ops.append(("D", 2))
+    ops.append(("C",))
+    for i in range(6, 10):
+        ops.append(("I", 1000 + i,
+                    rng.standard_normal(D).astype(np.float32),
+                    float(rng.standard_normal())))
+    ops.append(("D", 1003))
+    return ops
+
+
+def apply_muts(idx, script):
+    for op in script:
+        if op[0] == "I":
+            idx.insert(op[2], op[3], ext_id=op[1])
+        elif op[0] == "D":
+            idx.delete(op[1])
+        else:
+            idx.checkpoint()
+
+
+def state_of(idx):
+    flat, meta = iio.index_state(idx)
+    return flat, meta["streaming"]["next_id"]
+
+
+def states_equal(a, b):
+    fa, na = a
+    fb, nb = b
+    if na != nb or set(fa) != set(fb):
+        return False
+    return all(np.array_equal(fa[k], fb[k]) for k in fa)
+
+
+def oracle_state(base_ckpt, m, _cache={}):
+    """State of a never-crashed index after the first ``m`` *mutations*
+    (checkpoints change durability artifacts, not index state)."""
+    if m not in _cache:
+        ora = iio.load_index(base_ckpt)
+        apply_muts(ora, [op for op in muts() if op[0] != "C"][:m])
+        _cache[m] = state_of(ora)
+    return _cache[m]
+
+
+def main():
+    vecs, attrs = corpus()
+    with tempfile.TemporaryDirectory() as td:
+        base_ckpt = os.path.join(td, "base")
+        iio.save_index(
+            StreamingRFANN(vecs, attrs, max_delta=10**9, **BUILD), base_ckpt)
+
+        # --- happy path: churn, checkpoint barrier + GC, clean recover ---
+        wd = os.path.join(td, "wal_clean")
+        ck = os.path.join(td, "ckpt_clean")
+        idx = iio.load_index(base_ckpt)
+        idx.attach_wal(wd, sync="batch", segment_bytes=256)
+        idx.set_checkpoint_path(ck, ensure=True)
+        apply_muts(idx, muts())
+        d = walmod.describe(wd)
+        check(d["counts"]["barrier"] >= 1, "checkpoint wrote a barrier record")
+        check(d["barrier_watermark"] > 0, "barrier carries an LSN watermark")
+        n_segs_live = d["segments"]
+        idx.checkpoint()
+        check(walmod.describe(wd)["segments"] <= n_segs_live,
+              "checkpoint GC'd sealed segments behind the watermark")
+        want = state_of(idx)
+        rec = StreamingRFANN.recover(ck, wd, attach=False)
+        check(states_equal(state_of(rec), want),
+              "clean recover is bit-identical to the live index")
+
+        # --- sampled crash sweep: every recovered state must equal an
+        # acked-prefix oracle (acked or acked+1: the in-flight record may
+        # have reached the disk before the crash) ---
+        script = muts()
+        n_muts = len([op for op in script if op[0] != "C"])
+        probe = CrashOps(crash_at=-1)
+        wd0 = os.path.join(td, "wal_probe")
+        idx = iio.load_index(base_ckpt)
+        idx.attach_wal(wd0, sync="always", ops=probe)
+        idx.set_checkpoint_path(os.path.join(td, "ckpt_probe"), ensure=True)
+        apply_muts(idx, script)
+        total = probe.ops
+        points = sorted(set(range(1, total, max(1, total // 12))) | {total - 1})
+        for t in points:
+            wdt = os.path.join(td, f"wal_{t}")
+            ckt = os.path.join(td, f"ckpt_{t}")
+            idx = iio.load_index(base_ckpt)
+            acked = 0
+            try:
+                idx.attach_wal(wdt, sync="always", ops=CrashOps(crash_at=t))
+                idx.set_checkpoint_path(ckt, ensure=True)
+                for op in script:
+                    apply_muts(idx, [op])
+                    acked += op[0] != "C"
+            except (InjectedCrash, WALError, ReadOnlyIndexError):
+                pass
+            if not os.path.isdir(ckt) or not iio.is_index_dir(ckt):
+                check(acked == 0, f"crash@{t}: no checkpoint => nothing acked")
+                continue
+            rec = StreamingRFANN.recover(ckt, wdt, attach=False)
+            got = state_of(rec)
+            ok = any(states_equal(got, oracle_state(base_ckpt, m))
+                     for m in (acked, min(acked + 1, n_muts)))
+            check(ok, f"crash@{t}/{total}: recovered == oracle prefix "
+                      f"(acked={acked})")
+
+        # --- torn tail: truncate mid-record, replay repairs and resumes ---
+        wd = os.path.join(td, "wal_torn")
+        ck = os.path.join(td, "ckpt_torn")
+        idx = iio.load_index(base_ckpt)
+        idx.attach_wal(wd, sync="always")
+        idx.set_checkpoint_path(ck, ensure=True)
+        apply_muts(idx, [op for op in script if op[0] != "C"])
+        seg = walmod.list_segments(wd)[-1]
+        with open(seg, "r+b") as f:
+            f.truncate(os.path.getsize(seg) - 3)
+        rec = StreamingRFANN.recover(ck, wd, attach=False)
+        check(states_equal(state_of(rec), oracle_state(base_ckpt, n_muts - 1))
+              or states_equal(state_of(rec), oracle_state(base_ckpt, n_muts)),
+              "torn tail truncated to last whole record; prefix preserved")
+
+        # --- read-only degradation: append failure must not crash serving ---
+        class DeadDisk(walmod.FileOps):
+            def write(self, fd, data):
+                raise OSError(28, "No space left on device")
+
+        idx = iio.load_index(base_ckpt)
+        idx.attach_wal(os.path.join(td, "wal_ro"), sync="always")
+        idx._wal.ops = DeadDisk()
+        got_ro = False
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            try:
+                idx.insert(np.zeros(D, np.float32), 0.0, ext_id=5000)
+            except ReadOnlyIndexError:
+                got_ro = True
+        check(got_ro, "WAL append failure raises ReadOnlyIndexError")
+        check(idx.read_only, "index flipped to read-only, not crashed")
+        res = idx.search(vecs[:1], np.array([[-10.0, 10.0]], np.float32),
+                         k=4, ef=16)
+        check(np.asarray(res.ids).shape == (1, 4),
+              "read-only index still serves searches")
+
+    print("[wal-smoke] PASS")
+
+
+if __name__ == "__main__":
+    main()
