@@ -175,7 +175,10 @@ def serve_rfann(args):
                 print(f"[serve] churn stopped, serving continues: {e}")
         if args.rate > 0:
             time.sleep(rng.exponential(1.0 / args.rate))
-    results = np.stack([f.result().ids for f in futs])      # per-request SearchResult
+    # SIGTERM can land before the first submit — drain an empty futs list
+    # without tripping np.stack, so shutdown still seals the WAL below
+    results = (np.stack([f.result().ids for f in futs]) if futs
+               else np.zeros((0, args.k), np.int64))
     dt = time.perf_counter() - t0
     engine.close()
     if streaming:
@@ -198,7 +201,11 @@ def serve_rfann(args):
         print(f"[serve] metrics written to {args.metrics_path} (+.json)")
 
     served = len(futs)
-    if streaming and served > churn_until:
+    if served == 0:
+        rec = float("nan")          # drained before any request was served
+        if streaming:
+            print(f"[serve] streaming: {idx.stats()}")
+    elif streaming and served > churn_until:
         # score only the post-churn half against the final live set (the
         # requests that raced mutations have no single ground truth)
         lv, la, li = idx.live_items()

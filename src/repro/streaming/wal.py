@@ -28,10 +28,16 @@ uncompacted tail instead of silently dropping it.  Design points:
 
 * **Sync policy** — ``sync="always"`` fsyncs every append (an
   acknowledged mutation is durable, full stop); ``sync="batch"`` group
-  commits: fsync once per ``fsync_every_n`` appends or ``fsync_interval_s``
-  seconds, whichever comes first (crash window = the unsynced tail of
-  acknowledged mutations); ``sync="none"`` never fsyncs on the hot path
-  (OS page cache only — crash window unbounded, for benchmarking).
+  commits: an append fsyncs when ``fsync_every_n`` appends have
+  accumulated or ``fsync_interval_s`` seconds have passed since the last
+  fsync.  The interval is evaluated lazily, on the *next* append — there
+  is no background timer — so when traffic pauses, up to
+  ``fsync_every_n - 1`` acknowledged mutations can sit unsynced until
+  traffic resumes; callers that pause (or shut down) should call
+  :meth:`WriteAheadLog.flush` to close the window.  Crash window = the
+  unsynced tail of acknowledged mutations.  ``sync="none"`` never fsyncs
+  on the hot path (OS page cache only — crash window unbounded, for
+  benchmarking).
 
 * **Torn tails** — :func:`replay` verifies every record's length prefix
   and CRC.  A short read or checksum mismatch marks the *torn point*:
@@ -365,14 +371,28 @@ class WriteAheadLog:
         self.ops.fsync_dir(str(self.dir))
 
     def _append(self, rec: WalRecord, *, force_sync: bool = False) -> int:
-        blob = _encode(rec)
         with self._lock:
             if self._fd is None:
                 raise WALError("WriteAheadLog is closed")
+            # LSN assignment must share the lock with the write: mutation
+            # appends and compaction-thread barriers would otherwise race,
+            # producing duplicate LSNs or LSNs out of file order — and
+            # replay (file order, skip lsn <= watermark) silently drops a
+            # record written after a higher LSN.
+            rec.lsn = self.next_lsn
+            self.next_lsn += 1
+            blob = _encode(rec)
             if self._seg_len and self._seg_len + len(blob) > self.segment_bytes:
                 self._open_segment(self._seq + 1)
             try:
-                self.ops.write(self._fd, blob)
+                off = 0
+                while off < len(blob):
+                    n = self.ops.write(self._fd, blob[off:])
+                    if n is None or n <= 0:
+                        raise WALError(
+                            f"WAL short write on segment {self._seq}: "
+                            f"{off}/{len(blob)} bytes written")
+                    off += n
             except OSError as e:
                 raise WALError(f"WAL append failed on segment "
                                f"{self._seq}: {e}") from e
@@ -400,21 +420,18 @@ class WriteAheadLog:
     # -------------------------------------------------------------- appends
     def append_insert(self, ext_id: int, attr: float,
                       vector: np.ndarray) -> int:
-        lsn, self.next_lsn = self.next_lsn, self.next_lsn + 1
-        return self._append(WalRecord(lsn=lsn, op=OP_INSERT, ext_id=ext_id,
+        return self._append(WalRecord(lsn=0, op=OP_INSERT, ext_id=ext_id,
                                       attr=attr, vector=vector))
 
     def append_delete(self, ext_id: int) -> int:
-        lsn, self.next_lsn = self.next_lsn, self.next_lsn + 1
-        return self._append(WalRecord(lsn=lsn, op=OP_DELETE, ext_id=ext_id))
+        return self._append(WalRecord(lsn=0, op=OP_DELETE, ext_id=ext_id))
 
     def append_barrier(self, generation: int, watermark: int) -> int:
         """A checkpoint at ``generation`` covers every record with
         ``lsn <= watermark`` — appended *after* the checkpoint's
         manifest-last commit, always fsynced (a barrier that is not
         durable must not authorize garbage collection)."""
-        lsn, self.next_lsn = self.next_lsn, self.next_lsn + 1
-        return self._append(WalRecord(lsn=lsn, op=OP_BARRIER,
+        return self._append(WalRecord(lsn=0, op=OP_BARRIER,
                                       generation=generation,
                                       watermark=watermark),
                             force_sync=True)
@@ -434,8 +451,7 @@ class WriteAheadLog:
         marker only tells recovery the previous run exited cleanly)."""
         if self._fd is None:
             return
-        lsn, self.next_lsn = self.next_lsn, self.next_lsn + 1
-        self._append(WalRecord(lsn=lsn, op=OP_SEAL), force_sync=True)
+        self._append(WalRecord(lsn=0, op=OP_SEAL), force_sync=True)
 
     def rotate(self) -> None:
         """Start a new segment (used by gc tests and the compaction path

@@ -93,6 +93,39 @@ def test_invalid_sync_policy_rejected(tmp_path):
         WriteAheadLog(tmp_path / "w", fsync_every_n=0)
 
 
+def test_concurrent_appends_keep_lsn_in_file_order(tmp_path):
+    """Mutation-path appends race the compaction thread's barriers; LSNs
+    must come out unique and strictly increasing *in file order* — replay
+    applies records in file order and skips ``lsn <= watermark``, so an
+    out-of-order LSN would silently drop an acknowledged write on
+    recovery."""
+    w = WriteAheadLog(tmp_path / "w", sync="none", segment_bytes=1 << 20)
+    vec = np.zeros(_D, np.float32)
+    n_per = 200
+    start = threading.Barrier(3)
+
+    def mutate(tid):
+        start.wait()
+        for i in range(n_per):
+            w.append_insert(tid * n_per + i, 0.0, vec)
+
+    def barriers():
+        start.wait()
+        for g in range(n_per):
+            w.append_barrier(g, 0)
+
+    threads = [threading.Thread(target=mutate, args=(t,)) for t in (0, 1)]
+    threads.append(threading.Thread(target=barriers))
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    w.close()
+    lsns = [r.lsn for r in walmod.replay(tmp_path / "w")]
+    assert len(lsns) == 3 * n_per
+    assert lsns == list(range(1, 3 * n_per + 1))    # unique, in file order
+
+
 # ------------------------------------------------------------- torn tails
 def test_torn_tail_truncates_and_reopens(tmp_path):
     w = WriteAheadLog(tmp_path / "w", sync="always")
